@@ -1,0 +1,36 @@
+//! Bandwidth resilience (Fig. 13): Synera under links from 0.1 to
+//! 100 Mbps, with and without top-k distribution compression.
+
+use synera::config::Scenario;
+use synera::coordinator::eval::{eval_with_profile, EvalOptions};
+use synera::coordinator::pipeline::Method;
+use synera::profiling::load_or_profile;
+use synera::runtime::Runtime;
+use synera::workload::synthlang::Task;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let profile = load_or_profile(&rt, "s1b", None, "l13b")?;
+    let opts = EvalOptions { n_samples: 8, task: Task::Xsum };
+    println!("pair s1b&l13b, task xsum-sim\n");
+    println!(
+        "{:>10} {:>14} {:>18} {:>12}",
+        "bandwidth", "synera tbt", "w/o compression", "bytes saved"
+    );
+    for mbps in [0.1, 0.5, 1.0, 5.0, 10.0, 100.0] {
+        let mut scen = Scenario::default_pair("s1b", "l13b");
+        scen.link.bandwidth_mbps = mbps;
+        let with = eval_with_profile(&rt, &scen, Method::Synera, &opts, &profile)?;
+        let mut s2 = scen.clone();
+        s2.params.compression = false;
+        let without = eval_with_profile(&rt, &s2, Method::Synera, &opts, &profile)?;
+        println!(
+            "{:>8.1}Mb {:>11.1}ms {:>15.1}ms {:>11.1}%",
+            mbps,
+            with.tbt_s * 1e3,
+            without.tbt_s * 1e3,
+            100.0 * (1.0 - with.bytes_up as f64 / without.bytes_up.max(1) as f64),
+        );
+    }
+    Ok(())
+}

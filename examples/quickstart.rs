@@ -1,0 +1,71 @@
+//! Quickstart: serve one request with Synera and inspect what happened.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use synera::config::Scenario;
+use synera::coordinator::pipeline::{run_request, CloudClock, Method, PipelineCtx};
+use synera::metrics::quality::score_sample;
+use synera::model::{CloudEngine, DeviceEngine};
+use synera::net::SimLink;
+use synera::profiling::load_or_profile;
+use synera::runtime::Runtime;
+use synera::util::rng::Rng;
+use synera::workload::synthlang::{generate, Task};
+
+fn main() -> anyhow::Result<()> {
+    // 1. load the AOT artifacts (built once by `make artifacts`)
+    let rt = Runtime::load_default()?;
+    let scen = Scenario::default_pair("s1b", "l13b");
+
+    // 2. offline profile (paper §5) — cached in artifacts/
+    let profile = load_or_profile(&rt, "s1b", None, "l13b")?;
+    println!(
+        "profile: c_th={:.3} α={:.3} i_th(budget 0.2)={:.3}",
+        profile.c_th,
+        profile.alpha,
+        profile.i_th_for_budget(0.2)
+    );
+
+    // 3. engines: device SLM (split for early exit) + cloud LLM batch engine
+    let dev = DeviceEngine::new(rt.model("s1b")?, true)?;
+    let mut sched =
+        synera::cloud::Scheduler::new(CloudEngine::new(rt.model("l13b")?)?, 42);
+    let mut link = SimLink::new(scen.link, 42);
+    let mut clock = CloudClock::default();
+    let mut rng = Rng::new(42);
+
+    // 4. one summarisation request, end to end
+    let sample = generate(Task::Cnndm, 1, 3);
+    let mut ctx = PipelineCtx {
+        dev: &dev,
+        sched: &mut sched,
+        scen: &scen,
+        profile: &profile,
+        link: &mut link,
+        cloud_clock: &mut clock,
+        rng: &mut rng,
+    };
+    let rep = run_request(&mut ctx, Method::Synera, &sample.prompt)?;
+
+    println!("\nprompt    ({} tokens): {:?}", sample.prompt.len(), sample.prompt);
+    println!("reference : {:?}", sample.answer);
+    println!("generated : {:?}", rep.generated);
+    println!("\nRouge-1   : {:.3}", score_sample(&sample, &rep.generated));
+    println!("latency   : {:.1} ms  (TBT {:.1} ms)", rep.total_s * 1e3, rep.tbt() * 1e3);
+    println!(
+        "offloaded : {}/{} chunks  | early exits: {}/{} steps | PI: {} hits / {} rounds",
+        rep.offload_chunks,
+        rep.offload_chunks + rep.local_chunks,
+        rep.exits,
+        rep.steps,
+        rep.pi_hits,
+        rep.pi_hits + rep.pi_misses,
+    );
+    println!(
+        "network   : {} B up, {} B down | stall {:.1} ms | energy {:.2} J",
+        rep.bytes_up, rep.bytes_down, rep.stall_s * 1e3, rep.energy_j
+    );
+    Ok(())
+}

@@ -1,0 +1,232 @@
+"""AOT pipeline: train the model zoo → lower every runtime executable to
+HLO **text** → write weight binaries + meta.json.
+
+Python runs exactly once (``make artifacts``); the Rust coordinator is
+self-contained afterwards.  Interchange is HLO text, NOT
+``lowered.compiler_ir("hlo")``/``.serialize()``: the image's
+xla_extension 0.5.1 rejects jax≥0.5 protos (64-bit instruction ids); the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Executable ABI (argument order — rust/src/runtime must match):
+
+  *_chunk_* / *_step_full / *_step_p1 :
+      tokens i32[B,C], pos_base i32[B], n_valid i32[B],
+      kv_k f32[Lp,B,M,H,Dh], kv_v f32[Lp,B,M,H,Dh], <weights WEIGHT_ORDER>
+  *_step_p2 / *_p2_c4 :
+      hidden f32[B,C,D] instead of tokens, rest identical (kv = part-2 layers)
+
+Outputs (always a tuple):
+  full depth : (logits f32[B,C,V], kv_k', kv_v', importance f32[B,M])
+  part 1     : (hidden f32[B,C,D], exit_logits f32[B,C,V], kv_k', kv_v', imp)
+  part 2     : (logits, kv_k', kv_v', imp)
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import struct
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import synthlang
+from .model import MODEL_ZOO, ModelConfig, WEIGHT_ORDER, chunk_forward
+from .quantize import VARIANTS
+from .train import eval_model, train_model
+
+DEVICE_MODELS = ["s160m", "s1b", "s7b"]
+CLOUD_MODELS = ["l13b", "l70b"]
+CLOUD_SLOTS = 4  # B for cloud executables
+CHUNK = 32  # prefill / partial-prefill chunk length (paper §4.5)
+GAMMA = 4  # draft chunk length (paper §5)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ----------------------------- weights format ------------------------------
+MAGIC = b"SYNW1\n"
+
+
+def write_weights(path: Path, params: dict) -> None:
+    """MAGIC, u32 header_len, JSON header, raw little-endian f32 payload."""
+    tensors, payload, off = [], [], 0
+    for name in WEIGHT_ORDER:
+        arr = np.ascontiguousarray(np.asarray(params[name], dtype=np.float32))
+        tensors.append({"name": name, "shape": list(arr.shape), "offset": off})
+        payload.append(arr.tobytes())
+        off += arr.nbytes
+    header = json.dumps({"tensors": tensors, "total_bytes": off}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for p in payload:
+            f.write(p)
+
+
+# ----------------------------- lowering ------------------------------------
+def lower_exec(cfg: ModelConfig, *, b: int, c: int, lo: int, hi: int,
+               part2: bool, exit_logits: bool) -> str:
+    m, h, dh, d = cfg.max_len, cfg.n_heads, cfg.d_head, cfg.d_model
+    lp = hi - lo
+
+    def fn(tokens_or_hidden, pos_base, n_valid, kv_k, kv_v, *weights):
+        params = dict(zip(WEIGHT_ORDER, weights))
+        out = chunk_forward(
+            params, cfg, tokens_or_hidden, pos_base, n_valid, kv_k, kv_v,
+            layer_lo=lo, layer_hi=hi, emit_exit_logits=exit_logits,
+        )
+        res, kk, vv, imp = out
+        if exit_logits:
+            hidden, xl = res
+            return hidden, xl, kk, vv, imp
+        return res, kk, vv, imp
+
+    tok_spec = (
+        jax.ShapeDtypeStruct((b, c, d), jnp.float32)
+        if part2
+        else jax.ShapeDtypeStruct((b, c), jnp.int32)
+    )
+    ivec = jax.ShapeDtypeStruct((b,), jnp.int32)
+    kv = jax.ShapeDtypeStruct((lp, b, m, h, dh), jnp.float32)
+    wspecs = []
+    shapes = weight_shapes(cfg)
+    for name in WEIGHT_ORDER:
+        wspecs.append(jax.ShapeDtypeStruct(shapes[name], jnp.float32))
+    lowered = jax.jit(fn).lower(tok_spec, ivec, ivec, kv, kv, *wspecs)
+    return to_hlo_text(lowered)
+
+
+def weight_shapes(cfg: ModelConfig) -> dict:
+    d, l, f, v = cfg.d_model, cfg.n_layers, cfg.d_ff, cfg.vocab
+    return {
+        "emb": (v, d), "ln1": (l, d), "wq": (l, d, d), "wk": (l, d, d),
+        "wv": (l, d, d), "wo": (l, d, d), "ln2": (l, d),
+        "w_gate": (l, d, f), "w_up": (l, d, f), "w_down": (l, f, d),
+        "ln_f": (d,),
+    }
+
+
+def exec_plan(name: str) -> list[dict]:
+    """Which executables to export for a model (see DESIGN.md §2)."""
+    cfg = MODEL_ZOO[name]
+    k, L = cfg.split_layer, cfg.n_layers
+    if name in DEVICE_MODELS:
+        return [
+            dict(tag="chunk_b1_c32", b=1, c=CHUNK, lo=0, hi=L, part2=False, exit_logits=False),
+            dict(tag="step_full", b=1, c=1, lo=0, hi=L, part2=False, exit_logits=False),
+            dict(tag="step_p1", b=1, c=1, lo=0, hi=k, part2=False, exit_logits=True),
+            dict(tag="step_p2", b=1, c=1, lo=k, hi=L, part2=True, exit_logits=False),
+            dict(tag="p2_c4", b=1, c=GAMMA, lo=k, hi=L, part2=True, exit_logits=False),
+        ]
+    return [
+        dict(tag="chunk_b4_c32", b=CLOUD_SLOTS, c=CHUNK, lo=0, hi=L, part2=False, exit_logits=False),
+        dict(tag="step_b4", b=CLOUD_SLOTS, c=1, lo=0, hi=L, part2=False, exit_logits=False),
+    ]
+
+
+def config_fingerprint() -> str:
+    blob = json.dumps(
+        {
+            "zoo": {k: v.to_json() for k, v in MODEL_ZOO.items()},
+            "chunk": CHUNK, "slots": CLOUD_SLOTS, "gamma": GAMMA,
+            "world": synthlang.WORLD_SEED,
+            "version": 3,
+        },
+        sort_keys=True,
+    ).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def build(out_dir: Path, fast: bool = False) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fp = config_fingerprint() + ("-fast" if fast else "")
+    stamp = out_dir / "meta.json"
+    if stamp.exists():
+        try:
+            if json.loads(stamp.read_text()).get("fingerprint") == fp:
+                print(f"artifacts up-to-date (fingerprint {fp}); nothing to do")
+                return
+        except (json.JSONDecodeError, KeyError):
+            pass
+
+    train_logs, model_meta = {}, {}
+    for name, cfg in MODEL_ZOO.items():
+        if fast:
+            import dataclasses
+            cfg = dataclasses.replace(cfg, train_steps=30)
+        print(f"=== training {name} ({cfg.train_steps} steps) ===")
+        params, log = train_model(cfg)
+        scores = eval_model(params, cfg, n_per_task=8 if fast else 16)
+        log["eval"] = scores
+        train_logs[name] = log
+        print(f"[{name}] eval: {scores}")
+        write_weights(out_dir / f"{name}.weights.bin", params)
+        if name == "s7b":  # Table-6 quantized variants
+            for vname, qfn in VARIANTS.items():
+                qp = qfn({k: np.asarray(v) for k, v in params.items()})
+                write_weights(out_dir / f"{name}_{vname}.weights.bin", qp)
+
+        execs = []
+        for spec in exec_plan(name):
+            tag = spec.pop("tag")
+            print(f"  lowering {name}_{tag} ...")
+            text = lower_exec(cfg, **spec)
+            (out_dir / f"{name}_{tag}.hlo.txt").write_text(text)
+            execs.append({"tag": tag, **spec})
+        model_meta[name] = {
+            "config": cfg.to_json(),
+            "weights": f"{name}.weights.bin",
+            "execs": execs,
+            "role": "device" if name in DEVICE_MODELS else "cloud",
+        }
+
+    (out_dir / "train_log.json").write_text(json.dumps(train_logs, indent=1))
+    write_golden(out_dir)
+    meta = {
+        "fingerprint": fp,
+        "chunk": CHUNK, "cloud_slots": CLOUD_SLOTS, "gamma": GAMMA,
+        "vocab": synthlang.VOCAB,
+        "models": model_meta,
+        "weight_order": WEIGHT_ORDER,
+    }
+    stamp.write_text(json.dumps(meta, indent=1))
+    print(f"artifacts written to {out_dir} (fingerprint {fp})")
+
+
+def write_golden(out_dir: Path, n: int = 8) -> None:
+    """Golden workload samples replayed by a Rust test (generator parity)."""
+    golden = []
+    for task in synthlang.TASKS:
+        for i in range(n):
+            s = synthlang.generate(task, 1, i)
+            golden.append(
+                {"task": task, "index": i, "prompt": s.prompt, "answer": s.answer,
+                 "classification": s.is_classification}
+            )
+    (out_dir / "golden_workload.json").write_text(json.dumps(golden))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="30-step training for CI smoke builds")
+    args = ap.parse_args()
+    build(Path(args.out).resolve(), fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Pure-jnp correctness oracle for the fused attention+importance kernel.
+
+Dense (no tiling, no online softmax) implementation of exactly the same
+contract as :func:`attention.chunk_attention_importance`.  Every pytest
+and hypothesis sweep asserts the Pallas kernel against this.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunk_attention_importance_ref(
+    q: jax.Array,  # [C, H, Dh]
+    k_cache: jax.Array,  # [M, H, Dh]
+    v_cache: jax.Array,  # [M, H, Dh]
+    pos_base: jax.Array,  # [] int32
+    n_valid: jax.Array | None = None,  # [] int32, defaults to C
+):
+    """Returns ``(out [C,H,Dh], importance [M] f32)``; see kernel docstring."""
+    c, h, dh = q.shape
+    m_total = k_cache.shape[0]
+    if n_valid is None:
+        n_valid = jnp.array(c, dtype=jnp.int32)
+    pos_base = jnp.asarray(pos_base, dtype=jnp.int32).reshape(())
+    n_valid = jnp.asarray(n_valid, dtype=jnp.int32).reshape(())
+
+    qf = q.astype(jnp.float32) / (dh**0.5)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+
+    # scores [H, C, M]
+    s = jnp.einsum("chd,mhd->hcm", qf, kf)
+    row_pos = pos_base + jnp.arange(c, dtype=jnp.int32)  # [C]
+    col = jnp.arange(m_total, dtype=jnp.int32)  # [M]
+    row_live = jnp.arange(c, dtype=jnp.int32) < n_valid
+    mask = (col[None, :] <= row_pos[:, None]) & row_live[:, None]  # [C, M]
+    s = jnp.where(mask[None, :, :], s, NEG_INF)
+
+    m_max = jnp.max(s, axis=-1, keepdims=True)
+    p_un = jnp.exp(s - m_max)
+    denom = jnp.sum(p_un, axis=-1, keepdims=True)
+    p = jnp.where(denom > 0.0, p_un / denom, 0.0)  # [H, C, M]
+
+    out = jnp.einsum("hcm,mhd->chd", p, vf).astype(q.dtype)
+    p_live = jnp.where(row_live[None, :, None], p, 0.0)
+    importance = jnp.sum(p_live, axis=(0, 1)).astype(jnp.float32)  # [M]
+    return out, importance

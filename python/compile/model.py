@@ -1,0 +1,245 @@
+"""L2: the Synera transformer in JAX.
+
+One compute graph — ``chunk_forward`` — serves every runtime call site
+(paper Takeaway-3): device prefill chunks, device decode steps, and the
+cloud's partial-prefill verification batches are all "C query tokens over
+a padded per-slot KV cache", differing only in (B, C) and the layer range
+(split layer ranges implement the device's layer-wise early exit).
+Attention + importance go through the L1 Pallas kernel.
+
+``train_forward`` is the dense training-time graph (no KV cache, no
+Pallas): it shares every parameter with ``chunk_forward`` and exists only
+in the build path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import chunk_attention_importance
+from . import synthlang
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = synthlang.VOCAB
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    d_ff: int = 256
+    max_len: int = 64  # KV cache slots per sequence (prompts ≤32, gen ≤16)
+    # early-exit split point: part1 = layers [0, split), part2 = [split, L)
+    split_layer: int = 1
+    train_steps: int = 200
+    batch_size: int = 12
+    lr: float = 3e-3
+    seq_len: int = 48
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def to_json(self) -> dict:
+        d = asdict(self)
+        d["d_head"] = self.d_head
+        return d
+
+
+# The capability ladder standing in for the paper's Table-3 model zoo.
+# Names echo the paper's roles; sizes are scaled to this CPU testbed and
+# train_steps grows with size so quality gaps are real, not cosmetic.
+MODEL_ZOO = {
+    "s160m": ModelConfig("s160m", d_model=48, n_layers=2, n_heads=2, d_ff=192,
+                         split_layer=1, train_steps=250, lr=4e-3),
+    "s1b": ModelConfig("s1b", d_model=80, n_layers=3, n_heads=4, d_ff=320,
+                       split_layer=2, train_steps=400, lr=3.5e-3),
+    "s7b": ModelConfig("s7b", d_model=112, n_layers=4, n_heads=4, d_ff=448,
+                       split_layer=3, train_steps=500, lr=3e-3),
+    "l13b": ModelConfig("l13b", d_model=144, n_layers=4, n_heads=8, d_ff=576,
+                        split_layer=3, train_steps=550, lr=3e-3),
+    "l70b": ModelConfig("l70b", d_model=176, n_layers=5, n_heads=8, d_ff=704,
+                        split_layer=4, train_steps=650, lr=2.5e-3),
+}
+
+# weight tensor order — the runtime ABI; rust/src/runtime/weights.rs must match
+WEIGHT_ORDER = [
+    "emb", "ln1", "wq", "wk", "wv", "wo", "ln2", "w_gate", "w_up", "w_down", "ln_f",
+]
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    d, l, f, v = cfg.d_model, cfg.n_layers, cfg.d_ff, cfg.vocab
+    ks = jax.random.split(key, 8)
+
+    def nrm(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(jnp.float32)
+
+    s_attn = d ** -0.5
+    s_ff = d ** -0.5
+    s_out = (2 * l) ** -0.5
+    return {
+        "emb": nrm(ks[0], (v, d), 0.02 * d ** 0.5),
+        "ln1": jnp.ones((l, d), jnp.float32),
+        "wq": nrm(ks[1], (l, d, d), s_attn),
+        "wk": nrm(ks[2], (l, d, d), s_attn),
+        "wv": nrm(ks[3], (l, d, d), s_attn),
+        "wo": nrm(ks[4], (l, d, d), s_attn * s_out),
+        "ln2": jnp.ones((l, d), jnp.float32),
+        "w_gate": nrm(ks[5], (l, d, f), s_ff),
+        "w_up": nrm(ks[6], (l, d, f), s_ff),
+        "w_down": nrm(ks[7], (l, f, d), (f ** -0.5) * s_out),
+        "ln_f": jnp.ones((d,), jnp.float32),
+    }
+
+
+def rmsnorm(x, scale):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def rope(x, positions):
+    """x: [..., T, H, Dh]; positions: [..., T] int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def logits_head(params, x):
+    return rmsnorm(x, params["ln_f"]) @ params["emb"].T
+
+
+def _layer_slice(params, lo, hi):
+    return {
+        k: (v if k in ("emb", "ln_f") else jax.lax.slice_in_dim(v, lo, hi, axis=0))
+        for k, v in params.items()
+    }
+
+
+def chunk_forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens_or_hidden: jax.Array,  # [B, C] i32 | [B, C, D] f32 (part2)
+    pos_base: jax.Array,  # [B] i32, cached tokens per slot
+    n_valid: jax.Array,  # [B] i32, live query rows per slot (0 = idle slot)
+    kv_k: jax.Array,  # [Lpart, B, M, H, Dh] f32
+    kv_v: jax.Array,
+    *,
+    layer_lo: int = 0,
+    layer_hi: int | None = None,
+    emit_exit_logits: bool = False,
+    interpret: bool = True,
+):
+    """Run layers [layer_lo, layer_hi) over a chunk.
+
+    Returns ``(out, kv_k', kv_v', importance[B, M])`` where ``out`` is
+    ``logits [B,C,V]`` when layer_hi == n_layers, else
+    ``(hidden [B,C,D], exit_logits)`` for the early-exit part-1 split.
+    Importance is the per-layer-mean fused column-sum from the L1 kernel.
+    """
+    layer_hi = cfg.n_layers if layer_hi is None else layer_hi
+    n_part = layer_hi - layer_lo
+    h, dh, m = cfg.n_heads, cfg.d_head, cfg.max_len
+
+    if tokens_or_hidden.dtype in (jnp.int32, jnp.int64):
+        x = params["emb"][tokens_or_hidden]  # [B, C, D]
+    else:
+        x = tokens_or_hidden
+    b, c, d = x.shape
+
+    positions = pos_base[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    p = _layer_slice(params, layer_lo, layer_hi)
+    layer_ws = {k: p[k] for k in ("ln1", "wq", "wk", "wv", "wo", "ln2",
+                                  "w_gate", "w_up", "w_down")}
+
+    def one_layer(carry, lw):
+        x, = carry
+        ln1 = rmsnorm(x, lw["ln1"])
+        q = (ln1 @ lw["wq"]).reshape(b, c, h, dh)
+        k = (ln1 @ lw["wk"]).reshape(b, c, h, dh)
+        v = (ln1 @ lw["wv"]).reshape(b, c, h, dh)
+        q = rope(q, positions)
+        k = rope(k, positions)
+
+        # scatter this chunk's K/V into the per-slot cache at pos_base
+        def upd(cache, new):
+            def per_seq(cache_s, new_s, p0):
+                return jax.lax.dynamic_update_slice(
+                    cache_s, new_s, (p0, jnp.int32(0), jnp.int32(0))
+                )
+            return jax.vmap(per_seq)(cache, new, pos_base)
+
+        kk = upd(lw["kv_k"], k)
+        vv = upd(lw["kv_v"], v)
+
+        attn = jax.vmap(
+            lambda qq, kc, vc, pb, nv: chunk_attention_importance(
+                qq, kc, vc, pb, nv, block_k=64, interpret=interpret
+            )
+        )
+        out, imp = attn(q, kk, vv, pos_base, n_valid)  # [B,C,H,Dh], [B,M]
+        x = x + out.reshape(b, c, d) @ lw["wo"]
+        ln2 = rmsnorm(x, lw["ln2"])
+        ff = (jax.nn.silu(ln2 @ lw["w_gate"]) * (ln2 @ lw["w_up"])) @ lw["w_down"]
+        x = x + ff
+        return (x,), (kk, vv, imp)
+
+    scan_ws = dict(layer_ws)
+    scan_ws["kv_k"] = kv_k
+    scan_ws["kv_v"] = kv_v
+    (x,), (kv_k_new, kv_v_new, imps) = jax.lax.scan(one_layer, (x,), scan_ws)
+
+    importance = jnp.mean(imps, axis=0)  # [B, M] mean over executed layers
+    if layer_hi == cfg.n_layers:
+        return logits_head(params, x), kv_k_new, kv_v_new, importance
+    if emit_exit_logits:
+        return (x, logits_head(params, x)), kv_k_new, kv_v_new, importance
+    return x, kv_k_new, kv_v_new, importance
+
+
+# --------------------------- training graph --------------------------------
+def train_forward(params: dict, cfg: ModelConfig, tokens: jax.Array):
+    """Dense causal LM forward for training. tokens: [B, S] i32 → logits."""
+    b, s = tokens.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x = params["emb"][tokens]
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, axis=0)
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+
+    def one_layer(x, lw):
+        ln1 = rmsnorm(x, lw["ln1"])
+        q = rope((ln1 @ lw["wq"]).reshape(b, s, h, dh), positions)
+        k = rope((ln1 @ lw["wk"]).reshape(b, s, h, dh), positions)
+        v = (ln1 @ lw["wv"]).reshape(b, s, h, dh)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (dh ** 0.5)
+        scores = jnp.where(causal[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, -1)
+        x = x + out @ lw["wo"]
+        ln2 = rmsnorm(x, lw["ln2"])
+        x = x + (jax.nn.silu(ln2 @ lw["w_gate"]) * (ln2 @ lw["w_up"])) @ lw["w_down"]
+        return x, None
+
+    layer_ws = {k: params[k] for k in ("ln1", "wq", "wk", "wv", "wo", "ln2",
+                                       "w_gate", "w_up", "w_down")}
+    x, _ = jax.lax.scan(one_layer, x, layer_ws)
+    return logits_head(params, x)
+
+
+def lm_loss(params, cfg, tokens, weights):
+    """Weighted next-token cross-entropy; weights==0 masks (padding)."""
+    logits = train_forward(params, cfg, tokens)  # [B, S, V]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    w = weights[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)

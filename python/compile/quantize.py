@@ -1,0 +1,76 @@
+"""Build-time weight quantization variants for Table 6.
+
+Two quantize→dequantize schemes standing in for the paper's on-device
+accelerators (DESIGN.md §1):
+
+* ``bnb4`` — per-output-channel int4 round-to-nearest, the shape of
+  bitsandbytes 4-bit: cheap, noticeable quality hit.
+* ``awq``  — per-group (g=32) int4 with a scale search that protects
+  salient channels (activation-aware in spirit): slightly better quality
+  at the same bit width.
+
+Both return f32 weights (dequantized) so the same HLO executables serve
+all variants; the *speedup* of quantized execution is modelled in the
+Rust device profile (4-bit ⇒ memory-bound decode runs faster), which is
+exactly the axis Table 6 reports.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+QUANT_KEYS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "emb")
+
+
+def _rtn_int4(w: np.ndarray, axis: int) -> np.ndarray:
+    """Symmetric round-to-nearest int4 along ``axis`` (per-channel scales)."""
+    amax = np.max(np.abs(w), axis=axis, keepdims=True)
+    scale = np.where(amax > 0, amax / 7.0, 1.0)
+    q = np.clip(np.round(w / scale), -8, 7)
+    return (q * scale).astype(np.float32)
+
+
+def quantize_bnb4(params: dict) -> dict:
+    out = {}
+    for k, v in params.items():
+        v = np.asarray(v)
+        out[k] = _rtn_int4(v, axis=-1) if k in QUANT_KEYS else v.copy()
+    return out
+
+
+def _awq_group(w: np.ndarray, group: int = 32) -> np.ndarray:
+    """Group-wise int4 with a per-group scale search over a small grid."""
+    orig_shape = w.shape
+    flat = w.reshape(-1, orig_shape[-1])
+    d = flat.shape[-1]
+    pad = (-d) % group
+    if pad:
+        flat = np.pad(flat, ((0, 0), (0, pad)))
+    g = flat.reshape(flat.shape[0], -1, group)
+    amax = np.maximum(np.max(np.abs(g), axis=-1, keepdims=True), 1e-12)
+    best = None
+    best_err = None
+    # scale-search: try shrinking the clip range; keeps salient weights exact
+    for ratio in (1.0, 0.9, 0.8, 0.7):
+        scale = amax * ratio / 7.0
+        q = np.clip(np.round(g / scale), -8, 7) * scale
+        err = np.sum((q - g) ** 2, axis=-1, keepdims=True)
+        if best is None:
+            best, best_err = q, err
+        else:
+            take = err < best_err
+            best = np.where(take, q, best)
+            best_err = np.where(take, err, best_err)
+    deq = best.reshape(flat.shape[0], -1)[:, :d]
+    return deq.reshape(orig_shape).astype(np.float32)
+
+
+def quantize_awq(params: dict) -> dict:
+    out = {}
+    for k, v in params.items():
+        v = np.asarray(v)
+        out[k] = _awq_group(v) if k in QUANT_KEYS else v.copy()
+    return out
+
+
+VARIANTS = {"bnb4": quantize_bnb4, "awq": quantize_awq}

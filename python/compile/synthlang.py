@@ -1,0 +1,276 @@
+"""SynthLang: the synthetic language + task suite standing in for the paper's
+seven datasets (CNNDM, XSum, CSQA, SST2, LLQA, HeySQuAD, SensorQA).
+
+Everything is a pure function of (world_seed, sample_index) via splitmix64,
+and the exact same generator is re-implemented in ``rust/src/workload/`` —
+``tests/test_synthlang.py`` writes a golden file that a Rust integration
+test replays byte-for-byte, so the Python-trained models and the Rust
+serving stack always agree on the data distribution.
+
+Why this reproduces the paper's evaluation *shape* (DESIGN.md §1): each
+task isolates one capability axis —
+  * kgqa / summarisation: parametric memory (a 1024-fact knowledge graph
+    and a 32×8 topic-keyword table that models must memorise during
+    training) — bigger models recall more, giving the Table-4 quality gap;
+  * sentiment / llqa: easy in-context tasks — small models are decent,
+    matching the paper's SST2 rows;
+  * sensorqa: aggregation (mode over readings) — mid-hard;
+  * heysquad: retrieval under 10% token noise — robustness axis.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+MASK64 = (1 << 64) - 1
+
+# ---- vocabulary layout (mirrored in rust/src/workload/vocab.rs) ----------
+VOCAB = 512
+PAD, BOS, EOS, SEP, QUERY = 0, 1, 2, 3, 4
+TM_KGQA, TM_SENT, TM_SUM, TM_XSUM, TM_LLQA, TM_HEY, TM_SENSOR = range(10, 17)
+POS_TOK, NEG_TOK = 20, 21
+AGG_MODE = 24
+UNIT = 25
+SLOT0, N_SLOTS = 30, 16
+ACT0, N_ACTS = 50, 32
+ENT0, N_ENTS = 100, 48
+REL0, N_RELS = 170, 8
+VAL0, N_VALS = 200, 128
+TOPIC0, N_TOPICS = 350, 24
+FILL0, N_FILLS = 400, 112
+
+N_KEYWORDS = 8  # keywords per topic
+WORLD_SEED = 0x53594E45524121  # "SYNERA!" — fixed world identity
+
+TASKS = ["kgqa", "sst2", "cnndm", "xsum", "llqa", "heysquad", "sensorqa"]
+
+
+def splitmix64(state: int):
+    """One splitmix64 step. Returns (new_state, output). Mirrored in Rust."""
+    state = (state + 0x9E3779B97F4A7C15) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    z = z ^ (z >> 31)
+    return state, z
+
+
+class Rng:
+    """Deterministic stream RNG over splitmix64 (identical in Rust)."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state, z = splitmix64(self.state)
+        return z
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+    def chance(self, num: int, den: int) -> bool:
+        return self.below(den) < num
+
+
+def hash2(a: int, b: int) -> int:
+    """Order-sensitive 2-arg hash used for the static world tables."""
+    _, z = splitmix64((WORLD_SEED ^ (a * 0x9E3779B97F4A7C15) ^ b) & MASK64)
+    return z
+
+
+# ---- static world ---------------------------------------------------------
+def kg_value(ent: int, rel: int) -> int:
+    """The knowledge-graph fact table: value token for (entity, relation)."""
+    return VAL0 + hash2(ent * N_RELS + rel, 0x4B47) % N_VALS
+
+
+def topic_keyword(topic: int, i: int) -> int:
+    return VAL0 + hash2(topic * N_KEYWORDS + i, 0x544F) % N_VALS
+
+
+def value_polarity(val_tok: int) -> int:
+    """0 = negative-leaning, 1 = positive-leaning."""
+    return hash2(val_tok, 0x504F) % 2
+
+
+@dataclass
+class Sample:
+    task: str
+    prompt: list[int] = field(default_factory=list)
+    answer: list[int] = field(default_factory=list)  # excludes EOS
+    # classification tasks report exact-match accuracy; others Rouge-1
+    is_classification: bool = False
+
+
+def sample_seed(task_idx: int, split: int, index: int) -> int:
+    """split: 0 = train, 1 = eval."""
+    return (WORLD_SEED ^ (task_idx * 0x1000003) ^ (split << 40) ^ index) & MASK64
+
+
+def gen_kgqa(rng: Rng) -> Sample:
+    ent = ENT0 + rng.below(N_ENTS)
+    rel = REL0 + rng.below(N_RELS)
+    prompt = [TM_KGQA, QUERY, ent, rel, SEP]
+    return Sample("kgqa", prompt, [kg_value(ent - ENT0, rel - REL0)], True)
+
+
+def gen_sst2(rng: Rng) -> Sample:
+    n = 8 + rng.below(5)
+    label = rng.below(2)
+    words = []
+    for _ in range(n):
+        if rng.chance(7, 10):
+            # draw a word of the label's polarity
+            while True:
+                w = VAL0 + rng.below(N_VALS)
+                if value_polarity(w) == label:
+                    break
+        else:
+            w = VAL0 + rng.below(N_VALS)
+        words.append(w)
+    # exact label = majority polarity of what was actually sampled
+    pos = sum(value_polarity(w) for w in words)
+    lab_tok = POS_TOK if 2 * pos > len(words) else NEG_TOK
+    return Sample("sst2", [TM_SENT] + words + [SEP], [lab_tok], True)
+
+
+def _doc_sentences(rng: Rng, n_sents: int):
+    sents, ents = [], []
+    for _ in range(n_sents):
+        e = rng.below(N_ENTS)
+        r = rng.below(N_RELS)
+        ents.append(e)
+        sents.append(
+            [ENT0 + e, REL0 + r, kg_value(e, r), FILL0 + rng.below(N_FILLS)]
+        )
+    return sents, ents
+
+
+def gen_cnndm(rng: Rng) -> Sample:
+    topic = rng.below(N_TOPICS)
+    sents, _ = _doc_sentences(rng, 4 + rng.below(3))
+    prompt = [TM_SUM, TOPIC0 + topic]
+    for s in sents:
+        prompt += s
+    prompt.append(SEP)
+    answer = [topic_keyword(topic, i) for i in range(N_KEYWORDS)]
+    return Sample("cnndm", prompt, answer)
+
+
+def gen_xsum(rng: Rng) -> Sample:
+    topic = rng.below(N_TOPICS)
+    sents, ents = _doc_sentences(rng, 4 + rng.below(3))
+    prompt = [TM_XSUM, TOPIC0 + topic]
+    for s in sents:
+        prompt += s
+    prompt.append(SEP)
+    # harder/abstractive: 4 keywords, rotation keyed on the majority entity
+    e_major = max(set(ents), key=lambda e: (ents.count(e), -e))
+    rot = e_major % 4
+    answer = [topic_keyword(topic, (rot + i) % N_KEYWORDS) for i in range(4)]
+    return Sample("xsum", prompt, answer)
+
+
+def gen_llqa(rng: Rng) -> Sample:
+    n = 6 + rng.below(5)
+    slots = list(range(N_SLOTS))
+    # fisher-yates with our rng for a deterministic shuffle
+    for i in range(N_SLOTS - 1, 0, -1):
+        j = rng.below(i + 1)
+        slots[i], slots[j] = slots[j], slots[i]
+    chosen = sorted(slots[:n])
+    log, acts = [], {}
+    for s in chosen:
+        a = rng.below(N_ACTS)
+        acts[s] = a
+        log += [SLOT0 + s, ACT0 + a]
+    q = chosen[rng.below(n)]
+    prompt = [TM_LLQA] + log + [QUERY, SLOT0 + q, SEP]
+    return Sample("llqa", prompt, [ACT0 + acts[q]], True)
+
+
+def gen_heysquad(rng: Rng) -> Sample:
+    # context states 3 facts; one is queried; 10% of context tokens noised
+    facts = []
+    for _ in range(3):
+        e, r = rng.below(N_ENTS), rng.below(N_RELS)
+        facts.append((e, r))
+    ctx = []
+    for e, r in facts:
+        ctx += [ENT0 + e, REL0 + r, kg_value(e, r), FILL0 + rng.below(N_FILLS)]
+    qe, qr = facts[rng.below(3)]
+    answer = [kg_value(qe, qr)]
+    noisy = [
+        (VAL0 + rng.below(N_VALS)) if rng.chance(1, 10) else t for t in ctx
+    ]
+    prompt = [TM_HEY] + noisy + [QUERY, ENT0 + qe, REL0 + qr, SEP]
+    return Sample("heysquad", prompt, answer)
+
+
+def gen_sensorqa(rng: Rng) -> Sample:
+    n_kinds = 3 + rng.below(3)
+    kinds = [VAL0 + rng.below(N_VALS) for _ in range(n_kinds)]
+    n = 10 + rng.below(6)
+    readings = [kinds[rng.below(n_kinds)] for _ in range(n)]
+    counts = {}
+    for r in readings:
+        counts[r] = counts.get(r, 0) + 1
+    # mode; ties broken toward the smaller token id (same rule in rust)
+    mode = min(counts, key=lambda k: (-counts[k], k))
+    prompt = [TM_SENSOR] + readings + [QUERY, AGG_MODE, SEP]
+    return Sample("sensorqa", prompt, [mode, UNIT])
+
+
+GENERATORS = {
+    "kgqa": gen_kgqa,
+    "sst2": gen_sst2,
+    "cnndm": gen_cnndm,
+    "xsum": gen_xsum,
+    "llqa": gen_llqa,
+    "heysquad": gen_heysquad,
+    "sensorqa": gen_sensorqa,
+}
+
+
+def generate(task: str, split: int, index: int) -> Sample:
+    """The cross-language entry point: same (task, split, index) → same sample."""
+    rng = Rng(sample_seed(TASKS.index(task), split, index))
+    return GENERATORS[task](rng)
+
+
+# training mixture weights (kgqa and summarisation heavier: parametric memory)
+MIXTURE = [
+    ("kgqa", 3),
+    ("sst2", 2),
+    ("cnndm", 3),
+    ("xsum", 2),
+    ("llqa", 2),
+    ("heysquad", 2),
+    ("sensorqa", 2),
+]
+
+
+CORPUS_SIZE = 4096  # fixed training corpus; steps cycle through it (epochs)
+
+
+def training_sequence(index: int, seq_len: int) -> tuple[list[int], list[int]]:
+    """Padded LM training sequence + per-token loss weights (answer ×4)."""
+    index = index % CORPUS_SIZE
+    total = sum(w for _, w in MIXTURE)
+    rng = Rng(sample_seed(31, 0, index))
+    pick = rng.below(total)
+    acc = 0
+    task = MIXTURE[-1][0]
+    for t, w in MIXTURE:
+        acc += w
+        if pick < acc:
+            task = t
+            break
+    s = generate(task, 0, index)
+    toks = [BOS] + s.prompt + s.answer + [EOS]
+    n_ans = len(s.answer) + 1  # answer + EOS
+    if len(toks) > seq_len:  # truncate prompt head, keep answer
+        toks = toks[len(toks) - seq_len :]
+    weights = [1.0] * (len(toks) - n_ans) + [4.0] * n_ans
+    pad = seq_len - len(toks)
+    return toks + [PAD] * pad, weights + [0.0] * pad

@@ -1,0 +1,142 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Deterministic cases cover the contract's edges (decode step, prefill
+chunk, partial tail chunk, empty cache prefix); the hypothesis sweep
+walks shapes/dtypes/positions and asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import chunk_attention_importance
+from compile.kernels.ref import chunk_attention_importance_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk(c, m, h, dh, dtype, seed=0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    q = jax.random.normal(k1, (c, h, dh), dtype=jnp.float32).astype(dtype)
+    kc = jax.random.normal(k2, (m, h, dh), dtype=jnp.float32).astype(dtype)
+    vc = jax.random.normal(k3, (m, h, dh), dtype=jnp.float32).astype(dtype)
+    return q, kc, vc
+
+
+def _check(c, m, h, dh, pos_base, n_valid, dtype=jnp.float32, block_k=32, seed=0):
+    q, kc, vc = _mk(c, m, h, dh, dtype, seed)
+    pos = jnp.array(pos_base, dtype=jnp.int32)
+    nv = jnp.array(n_valid, dtype=jnp.int32)
+    out, imp = chunk_attention_importance(q, kc, vc, pos, nv, block_k=block_k)
+    out_r, imp_r = chunk_attention_importance_ref(q, kc, vc, pos, nv)
+    live = np.arange(c) < n_valid
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32)[live],
+        np.asarray(out_r, dtype=np.float32)[live],
+        atol=atol,
+        rtol=1e-3 if dtype == jnp.float32 else 3e-2,
+    )
+    np.testing.assert_allclose(np.asarray(imp), np.asarray(imp_r), atol=atol, rtol=1e-3)
+    return out, imp
+
+
+class TestDeterministic:
+    def test_decode_step(self):
+        # C=1 decode over a half-full cache: the common device hot path.
+        _check(c=1, m=64, h=2, dh=16, pos_base=31, n_valid=1)
+
+    def test_prefill_chunk(self):
+        _check(c=32, m=128, h=4, dh=16, pos_base=0, n_valid=32)
+
+    def test_partial_tail_chunk(self):
+        # last prefill chunk only partially filled
+        _check(c=32, m=128, h=2, dh=16, pos_base=40, n_valid=7)
+
+    def test_partial_prefill_verify(self):
+        # cloud verification: gamma+uncached tokens appended to a cached prefix
+        _check(c=8, m=256, h=4, dh=32, pos_base=100, n_valid=8, block_k=64)
+
+    def test_empty_prefix(self):
+        _check(c=4, m=32, h=1, dh=8, pos_base=0, n_valid=4, block_k=16)
+
+    def test_full_cache(self):
+        _check(c=1, m=64, h=2, dh=16, pos_base=63, n_valid=1)
+
+    def test_bf16(self):
+        _check(c=16, m=64, h=2, dh=16, pos_base=10, n_valid=16, dtype=jnp.bfloat16)
+
+    def test_importance_mass_conservation(self):
+        # each live query row distributes exactly H units of prob mass
+        c, m, h, dh = 8, 64, 4, 16
+        _, imp = _check(c=c, m=m, h=h, dh=dh, pos_base=20, n_valid=8)
+        np.testing.assert_allclose(float(jnp.sum(imp)), c * h, rtol=1e-4)
+
+    def test_causality(self):
+        # perturbing K/V beyond the visible prefix must not change outputs
+        c, m, h, dh = 4, 64, 2, 16
+        q, kc, vc = _mk(c, m, h, dh, jnp.float32)
+        pos = jnp.array(12, dtype=jnp.int32)
+        out1, _ = chunk_attention_importance(q, kc, vc, pos, block_k=16)
+        kc2 = kc.at[16 + c :].set(99.0)
+        vc2 = vc.at[16 + c :].set(-99.0)
+        out2, _ = chunk_attention_importance(q, kc2, vc2, pos, block_k=16)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+
+    def test_block_k_invariance(self):
+        q, kc, vc = _mk(8, 128, 2, 16, jnp.float32)
+        pos = jnp.array(50, dtype=jnp.int32)
+        o1, i1 = chunk_attention_importance(q, kc, vc, pos, block_k=16)
+        o2, i2 = chunk_attention_importance(q, kc, vc, pos, block_k=128)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(i1), np.asarray(i2), atol=1e-5)
+
+    def test_vmap_batch(self):
+        # L2 vmaps the kernel over the batch dimension
+        b, c, m, h, dh = 3, 4, 32, 2, 8
+        key = jax.random.PRNGKey(7)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, c, h, dh))
+        kc = jax.random.normal(ks[1], (b, m, h, dh))
+        vc = jax.random.normal(ks[2], (b, m, h, dh))
+        pos = jnp.array([0, 5, 11], dtype=jnp.int32)
+        nv = jnp.array([4, 4, 2], dtype=jnp.int32)
+        f = jax.vmap(
+            lambda qq, kk, vv, pp, nn: chunk_attention_importance(
+                qq, kk, vv, pp, nn, block_k=16
+            )
+        )
+        out, imp = f(q, kc, vc, pos, nv)
+        for i in range(b):
+            out_r, imp_r = chunk_attention_importance_ref(
+                q[i], kc[i], vc[i], pos[i], nv[i]
+            )
+            live = np.arange(c) < int(nv[i])
+            np.testing.assert_allclose(
+                np.asarray(out[i])[live], np.asarray(out_r)[live], atol=2e-5, rtol=1e-3
+            )
+            np.testing.assert_allclose(
+                np.asarray(imp[i]), np.asarray(imp_r), atol=2e-5, rtol=1e-3
+            )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    c=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    mblocks=st.integers(1, 4),
+    h=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 16, 32]),
+    block_k=st.sampled_from([16, 32, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    data=st.data(),
+)
+def test_hypothesis_sweep(c, mblocks, h, dh, block_k, dtype, data):
+    m = mblocks * block_k
+    if m < c:
+        m = ((c + block_k - 1) // block_k) * block_k
+    pos_base = data.draw(st.integers(0, max(0, m - c)))
+    n_valid = data.draw(st.integers(1, c))
+    seed = data.draw(st.integers(0, 2**16))
+    _check(c, m, h, dh, pos_base, n_valid, dtype=dtype, block_k=block_k, seed=seed)

@@ -1,0 +1,83 @@
+//! Fig. 4 — SLM→LLM alignment vs confidence: top-1/top-5 hit rate per
+//! confidence bucket (left) and the confidence CDF (right).
+
+use synera::bench::{pct, Table};
+use synera::model::logits::{argmax, top_k};
+use synera::model::{CloudEngine, DeviceEngine, SlotChunk};
+use synera::runtime::Runtime;
+use synera::workload::trace::mixed_eval_set;
+use synera::workload::vocab::EOS;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let dev = DeviceEngine::new(rt.model("s160m")?, false)?;
+    let mut cloud = CloudEngine::new(rt.model("l13b")?)?;
+    let v = cloud.model.meta.vocab;
+
+    // (confidence, top1_hit, top5_hit) per drafted token
+    let mut obs: Vec<(f32, bool, bool)> = Vec::new();
+    for (i, s) in mixed_eval_set(6).iter().enumerate() {
+        let slot = cloud.alloc_slot(i as u64).unwrap();
+        let (mut sess, mut cur) = dev.prefill(&s.prompt)?;
+        // device drafts 12 tokens; the cloud scores the same stream
+        let mut drafted = Vec::new();
+        let mut confs = Vec::new();
+        for _ in 0..12 {
+            let tok = argmax(&cur.probs) as u32;
+            if tok == EOS {
+                break;
+            }
+            drafted.push(tok);
+            confs.push(cur.probs[tok as usize]);
+            cur = dev.step(&mut sess, tok, false, 1.0)?;
+        }
+        if drafted.is_empty() {
+            cloud.free_slot(slot);
+            continue;
+        }
+        let mut seq = s.prompt.clone();
+        seq.extend(&drafted[..drafted.len() - 1]);
+        let mut rows_all: Vec<Vec<f32>> = Vec::new();
+        for chunk in seq.chunks(cloud.chunk) {
+            let (res, _) = cloud.run_batch(&[SlotChunk { slot, tokens: chunk.to_vec() }])?;
+            for r in 0..res[0].n_rows {
+                rows_all.push(res[0].rows[r * v..(r + 1) * v].to_vec());
+            }
+        }
+        // row (prompt.len()-1+j) predicts drafted[j]
+        for (j, (&tok, &conf)) in drafted.iter().zip(&confs).enumerate() {
+            let q = &rows_all[s.prompt.len() - 1 + j];
+            let t1 = argmax(q) as u32 == tok;
+            let t5 = top_k(q, 5).iter().any(|&i| i as u32 == tok);
+            obs.push((conf, t1, t5));
+        }
+        cloud.free_slot(slot);
+    }
+
+    let mut t = Table::new(
+        "Fig 4(a): SLM hit rate vs confidence (pair s160m&l13b)",
+        &["conf bucket", "n", "top-1 hit", "top-5 hit"],
+    );
+    for b in 0..5 {
+        let lo = b as f32 * 0.2;
+        let hi = lo + 0.2;
+        let sel: Vec<_> = obs.iter().filter(|(c, _, _)| *c >= lo && *c < hi + 1e-6).collect();
+        let n = sel.len();
+        let h1 = sel.iter().filter(|(_, t1, _)| *t1).count() as f64 / n.max(1) as f64;
+        let h5 = sel.iter().filter(|(_, _, t5)| *t5).count() as f64 / n.max(1) as f64;
+        t.row(&[format!("{lo:.1}-{hi:.1}"), n.to_string(), pct(h1), pct(h5)]);
+    }
+    t.print();
+
+    let mut t2 = Table::new("Fig 4(b): confidence CDF", &["conf ≤", "fraction"]);
+    let mut confs: Vec<f32> = obs.iter().map(|(c, _, _)| *c).collect();
+    confs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for q in [0.2, 0.4, 0.6, 0.8, 0.9] {
+        let frac = confs.iter().filter(|&&c| c <= q).count() as f64 / confs.len().max(1) as f64;
+        t2.row(&[format!("{q:.1}"), pct(frac)]);
+    }
+    let high = confs.iter().filter(|&&c| c > 0.8).count() as f64 / confs.len().max(1) as f64;
+    t2.row(&["(>0.8)".into(), pct(high)]);
+    t2.print();
+    Ok(())
+}

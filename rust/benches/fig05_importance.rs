@@ -1,0 +1,45 @@
+//! Fig. 5 — importance-guided offloading: quality vs budget for
+//! importance-ranked selection vs random selection (left), and the
+//! importance-score CDF showing its long tail (right).
+
+use synera::bench::{f3, Table};
+use synera::config::Scenario;
+use synera::coordinator::eval::{eval_with_profile, EvalOptions};
+use synera::coordinator::pipeline::Method;
+use synera::profiling::load_or_profile;
+use synera::runtime::Runtime;
+use synera::workload::synthlang::Task;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let base = Scenario::default_pair("s160m", "l13b");
+    let profile = load_or_profile(&rt, "s160m", None, "l13b")?;
+    let opts = EvalOptions { n_samples: 10, task: Task::Cnndm };
+
+    let mut t = Table::new(
+        "Fig 5(a): quality vs offloading budget (cnndm-sim, s160m&l13b)",
+        &["budget", "importance-ranked", "random"],
+    );
+    for b in [0.0, 0.1, 0.2, 0.3, 0.5, 0.8, 1.0] {
+        let mut s = base.clone();
+        s.params.budget = b;
+        s.params.use_conf = false; // isolate the importance signal
+        s.params.parallel_inference = false;
+        s.params.early_exit = false;
+        let imp = eval_with_profile(&rt, &s, Method::Synera, &opts, &profile)?;
+        s.params.random_offload = true;
+        let rnd = eval_with_profile(&rt, &s, Method::Synera, &opts, &profile)?;
+        t.row(&[format!("{b:.1}"), f3(imp.quality), f3(rnd.quality)]);
+    }
+    t.print();
+
+    let mut t2 = Table::new(
+        "Fig 5(b): chunk importance CDF (profiled)",
+        &["percentile", "importance"],
+    );
+    for p in [10usize, 25, 50, 75, 90, 95, 99, 100] {
+        t2.row(&[format!("p{p}"), f3(profile.imp_percentiles[p])]);
+    }
+    t2.print();
+    Ok(())
+}

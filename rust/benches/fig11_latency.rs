@@ -1,0 +1,54 @@
+//! Fig. 11 — end-to-end latency (TBT) + generation quality on XSum for
+//! the five deployment configurations, including the Synera ablation
+//! variants (Conf-only, Imp-only, w/o PI).
+
+use synera::bench::{f3, Table};
+use synera::config::Scenario;
+use synera::coordinator::eval::{eval_method, eval_with_profile, EvalOptions};
+use synera::coordinator::pipeline::Method;
+use synera::profiling::load_or_profile;
+use synera::runtime::Runtime;
+use synera::workload::synthlang::Task;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let opts = EvalOptions { n_samples: 8, task: Task::Xsum };
+    let mut t = Table::new(
+        "Fig 11: TBT (ms) and quality on XSum",
+        &["config", "method", "tbt_ms", "quality", "pi_pos_hit"],
+    );
+    for (label, scen) in Scenario::fig11_configs() {
+        let profile =
+            load_or_profile(&rt, &scen.pair.slm, scen.pair.slm_weights.as_deref(), &scen.pair.llm)?;
+        for m in [Method::EdgeCentric, Method::EdgeFmLlm, Method::Hybrid, Method::Synera] {
+            let rep = eval_method(&rt, &scen, m, &opts)?;
+            t.row(&[
+                label.clone(),
+                m.name().into(),
+                format!("{:.1}", rep.tbt_s * 1e3),
+                f3(rep.quality),
+                f3(rep.pi_pos_hit_rate),
+            ]);
+        }
+        // ablation variants of Synera
+        for (name, f) in [
+            ("Synera (Conf.)", Box::new(|s: &mut Scenario| s.params.use_imp = false)
+                as Box<dyn Fn(&mut Scenario)>),
+            ("Synera (Imp.)", Box::new(|s: &mut Scenario| s.params.use_conf = false)),
+            ("Synera (w/o PI)", Box::new(|s: &mut Scenario| s.params.parallel_inference = false)),
+        ] {
+            let mut s = scen.clone();
+            f(&mut s);
+            let rep = eval_with_profile(&rt, &s, Method::Synera, &opts, &profile)?;
+            t.row(&[
+                label.clone(),
+                name.into(),
+                format!("{:.1}", rep.tbt_s * 1e3),
+                f3(rep.quality),
+                f3(rep.pi_pos_hit_rate),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

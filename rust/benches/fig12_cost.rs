@@ -1,0 +1,32 @@
+//! Fig. 12 — estimated cloud serving cost (c = 1/Pf × T × W) on XSum
+//! across the five deployment configurations.
+
+use synera::bench::Table;
+use synera::config::Scenario;
+use synera::coordinator::eval::{eval_method, EvalOptions};
+use synera::coordinator::pipeline::Method;
+use synera::runtime::Runtime;
+use synera::workload::synthlang::Task;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let opts = EvalOptions { n_samples: 8, task: Task::Xsum };
+    let mut t = Table::new(
+        "Fig 12: estimated cloud serving cost on XSum (milli-units)",
+        &["config", "Cloud-centric", "EdgeFM-LLM", "Hybrid", "Synera", "synera vs cloud"],
+    );
+    for (label, scen) in Scenario::fig11_configs() {
+        let mut cells = vec![label];
+        let mut costs = Vec::new();
+        for m in [Method::CloudCentric, Method::EdgeFmLlm, Method::Hybrid, Method::Synera] {
+            let rep = eval_method(&rt, &scen, m, &opts)?;
+            costs.push(rep.cost);
+            cells.push(format!("{:.3}", rep.cost * 1e3));
+        }
+        let rel = if costs[0] > 0.0 { costs[3] / costs[0] } else { 0.0 };
+        cells.push(format!("{:.1}%", rel * 100.0));
+        t.row(&cells);
+    }
+    t.print();
+    Ok(())
+}

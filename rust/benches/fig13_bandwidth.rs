@@ -1,0 +1,39 @@
+//! Fig. 13 — impact of bandwidth: TBT under 0.1–100 Mbps for Synera,
+//! Synera w/o compression, Hybrid and EdgeFM-LLM.
+
+use synera::bench::Table;
+use synera::config::Scenario;
+use synera::coordinator::eval::{eval_method, eval_with_profile, EvalOptions};
+use synera::coordinator::pipeline::Method;
+use synera::profiling::load_or_profile;
+use synera::runtime::Runtime;
+use synera::workload::synthlang::Task;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let opts = EvalOptions { n_samples: 8, task: Task::Xsum };
+    let profile = load_or_profile(&rt, "s1b", None, "l13b")?;
+    let mut t = Table::new(
+        "Fig 13: TBT (ms) vs bandwidth (s1b&l13b, XSum)",
+        &["bandwidth", "Synera", "Synera w/o compr.", "Hybrid", "EdgeFM-LLM"],
+    );
+    for mbps in [0.1, 1.0, 10.0, 100.0] {
+        let mut scen = Scenario::default_pair("s1b", "l13b");
+        scen.link.bandwidth_mbps = mbps;
+        let syn = eval_with_profile(&rt, &scen, Method::Synera, &opts, &profile)?;
+        let mut s2 = scen.clone();
+        s2.params.compression = false;
+        let noc = eval_with_profile(&rt, &s2, Method::Synera, &opts, &profile)?;
+        let hy = eval_method(&rt, &scen, Method::Hybrid, &opts)?;
+        let ef = eval_method(&rt, &scen, Method::EdgeFmLlm, &opts)?;
+        t.row(&[
+            format!("{mbps} Mbps"),
+            format!("{:.1}", syn.tbt_s * 1e3),
+            format!("{:.1}", noc.tbt_s * 1e3),
+            format!("{:.1}", hy.tbt_s * 1e3),
+            format!("{:.1}", ef.tbt_s * 1e3),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

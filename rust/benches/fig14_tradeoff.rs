@@ -1,0 +1,35 @@
+//! Fig. 14 — quality–latency and quality–cost trade-offs as the
+//! offloading budget sweeps 0 → 0.8 (plus 1.0 for the ceiling).
+
+use synera::bench::{f3, Table};
+use synera::config::Scenario;
+use synera::coordinator::eval::{eval_with_profile, EvalOptions};
+use synera::coordinator::pipeline::Method;
+use synera::profiling::load_or_profile;
+use synera::runtime::Runtime;
+use synera::workload::synthlang::Task;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let profile = load_or_profile(&rt, "s160m", None, "l13b")?;
+    let opts = EvalOptions { n_samples: 10, task: Task::Xsum };
+    let mut t = Table::new(
+        "Fig 14: budget trade-offs (s160m&l13b, XSum)",
+        &["budget", "quality", "tbt_ms", "cost(m)", "offload rate", "W"],
+    );
+    for b in [0.0, 0.05, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0] {
+        let mut scen = Scenario::default_pair("s160m", "l13b");
+        scen.params.budget = b;
+        let rep = eval_with_profile(&rt, &scen, Method::Synera, &opts, &profile)?;
+        t.row(&[
+            format!("{b:.2}"),
+            f3(rep.quality),
+            format!("{:.1}", rep.tbt_s * 1e3),
+            format!("{:.3}", rep.cost * 1e3),
+            f3(rep.offload_rate),
+            f3(rep.w),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

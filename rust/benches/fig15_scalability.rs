@@ -1,0 +1,115 @@
+//! Fig. 15 — cloud scalability: verification latency vs offered request
+//! rate for offloading budgets 0.3 / 0.6 / 0.9 (discrete-event sim over
+//! the real scheduler+engine; virtual time advances by measured tick
+//! compute, arrivals are Poisson).
+
+use synera::bench::Table;
+use synera::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
+use synera::model::CloudEngine;
+use synera::net::wire::Dist;
+use synera::runtime::Runtime;
+use synera::util::rng::Rng;
+
+struct Arrival {
+    at: f64,
+    id: u64,
+    uncached: Vec<u32>,
+    draft: Vec<u32>,
+}
+
+fn simulate(rt: &std::rc::Rc<Runtime>, budget: f64, user_rps: f64) -> anyhow::Result<(f64, f64)> {
+    let gamma = rt.meta.gamma;
+    // effective offload fraction under the importance filter (budget +
+    // sigmoid smear), verifies per user request, uncached gap per verify
+    let offl = (budget + 0.15).min(1.0);
+    let verifies_per_req = ((16.0 * offl / gamma as f64).ceil()) as usize;
+    let verify_rps = user_rps * verifies_per_req as f64;
+    let uncached_len = ((gamma as f64 * (1.0 - offl) / offl).round() as usize).max(1);
+
+    let mut rng = Rng::new(0xF15 ^ (budget * 100.0) as u64 ^ user_rps as u64);
+    let horizon = 1.2; // virtual seconds
+    let mut arrivals = Vec::new();
+    let mut t = 0.0;
+    let mut id = 1u64;
+    while t < horizon {
+        t += rng.exp(verify_rps);
+        if t >= horizon {
+            break;
+        }
+        arrivals.push(Arrival {
+            at: t,
+            id,
+            uncached: (0..uncached_len).map(|_| 200 + rng.below(128) as u32).collect(),
+            draft: (0..gamma).map(|_| 200 + rng.below(128) as u32).collect(),
+        });
+        id += 1;
+    }
+
+    let mut sched = Scheduler::new(CloudEngine::new(rt.model("l13b")?)?, 0x5CA1E);
+    let mut now = 0.0f64;
+    let mut next = 0usize;
+    let mut start_at = std::collections::HashMap::new();
+    let mut lats = Vec::new();
+    // cap simulated work so overload points terminate
+    let max_ticks = 2_500;
+    for _ in 0..max_ticks {
+        while next < arrivals.len() && arrivals[next].at <= now {
+            let a = &arrivals[next];
+            start_at.insert(a.id, a.at);
+            sched.submit(CloudRequest::Verify {
+                request_id: a.id,
+                device_id: a.id as u32,
+                uncached: a.uncached.clone(),
+                draft: a.draft.clone(),
+                dists: vec![Dist::Dense(vec![1.0 / 512.0; 512]); a.draft.len()],
+                greedy: true,
+            })?;
+            next += 1;
+        }
+        if sched.is_idle() {
+            match arrivals.get(next) {
+                Some(a) => {
+                    now = a.at;
+                    continue;
+                }
+                None => break,
+            }
+        }
+        let (events, dt) = sched.tick()?;
+        now += dt.max(1e-6);
+        for e in events {
+            if let CloudEvent::VerifyDone { request_id, .. } = e {
+                lats.push(now - start_at[&request_id]);
+                sched.submit(CloudRequest::Release { request_id })?;
+            }
+        }
+    }
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = lats.get(lats.len() / 2).copied().unwrap_or(f64::NAN);
+    let done_frac = lats.len() as f64 / arrivals.len().max(1) as f64;
+    Ok((p50, done_frac))
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    // warm the engine (compile) before timing-sensitive simulation
+    let _ = simulate(&rt, 0.3, 5.0)?;
+    let mut t = Table::new(
+        "Fig 15: verification latency (p50, ms) vs offered user request rate",
+        &["user req/s", "budget 0.3", "budget 0.6", "budget 0.9"],
+    );
+    for rps in [5.0, 15.0, 40.0, 90.0, 180.0] {
+        let mut cells = vec![format!("{rps}")];
+        for b in [0.3, 0.6, 0.9] {
+            let (p50, done) = simulate(&rt, b, rps)?;
+            if done < 0.9 {
+                cells.push(format!("{:.1} (overload)", p50 * 1e3));
+            } else {
+                cells.push(format!("{:.1}", p50 * 1e3));
+            }
+        }
+        t.row(&cells);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Fig. 16 — dual-metric ablation: P_conf-only vs P_imp-only vs both,
+//! quality and offload volume at the same budget.
+
+use synera::bench::{f3, Table};
+use synera::config::Scenario;
+use synera::coordinator::eval::{eval_with_profile, EvalOptions};
+use synera::coordinator::pipeline::Method;
+use synera::profiling::load_or_profile;
+use synera::runtime::Runtime;
+use synera::workload::synthlang::Task;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let mut t = Table::new(
+        "Fig 16: P_conf / P_imp ablation (XSum)",
+        &["pair", "variant", "quality", "tbt_ms", "offload rate", "W"],
+    );
+    for (slm, llm) in [("s160m", "l13b"), ("s1b", "l13b")] {
+        let profile = load_or_profile(&rt, slm, None, llm)?;
+        let opts = EvalOptions { n_samples: 8, task: Task::Xsum };
+        for (name, conf, imp) in [
+            ("Synera (Conf.)", true, false),
+            ("Synera (Imp.)", false, true),
+            ("Synera (both)", true, true),
+        ] {
+            let mut scen = Scenario::default_pair(slm, llm);
+            scen.params.use_conf = conf;
+            scen.params.use_imp = imp;
+            let rep = eval_with_profile(&rt, &scen, Method::Synera, &opts, &profile)?;
+            t.row(&[
+                format!("{slm}&{llm}"),
+                name.into(),
+                f3(rep.quality),
+                format!("{:.1}", rep.tbt_s * 1e3),
+                f3(rep.offload_rate),
+                f3(rep.w),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

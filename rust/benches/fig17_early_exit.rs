@@ -1,0 +1,34 @@
+//! Fig. 17 — layer-wise early-exit threshold sweep 0.0 → 1.0 on CNNDM:
+//! quality, device latency and exit rate.
+
+use synera::bench::{f3, pct, Table};
+use synera::config::Scenario;
+use synera::coordinator::eval::{eval_with_profile, EvalOptions};
+use synera::coordinator::pipeline::Method;
+use synera::profiling::load_or_profile;
+use synera::runtime::Runtime;
+use synera::workload::synthlang::Task;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let profile = load_or_profile(&rt, "s1b", None, "l13b")?;
+    let opts = EvalOptions { n_samples: 10, task: Task::Cnndm };
+    let mut t = Table::new(
+        "Fig 17: early-exit threshold sweep (s1b&l13b, CNNDM)",
+        &["threshold", "quality", "tbt_ms", "exit rate", "energy/token (J)"],
+    );
+    for th in [0.0, 0.2, 0.4, 0.6, 0.8, 1.0] {
+        let mut scen = Scenario::default_pair("s1b", "l13b");
+        scen.params.exit_threshold = th;
+        let rep = eval_with_profile(&rt, &scen, Method::Synera, &opts, &profile)?;
+        t.row(&[
+            format!("{th:.1}"),
+            f3(rep.quality),
+            format!("{:.1}", rep.tbt_s * 1e3),
+            pct(rep.exit_rate),
+            f3(rep.energy_per_token_j),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

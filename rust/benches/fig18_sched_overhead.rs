@@ -1,0 +1,57 @@
+//! Fig. 18 — cloud-runtime scheduling overhead vs offloading budget:
+//! scheduler bookkeeping time as a fraction of engine compute (higher
+//! budgets → shorter verification chunks → relatively more scheduling).
+
+use synera::bench::{pct, Table};
+use synera::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
+use synera::model::CloudEngine;
+use synera::net::wire::Dist;
+use synera::runtime::Runtime;
+use synera::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let gamma = rt.meta.gamma;
+    let mut t = Table::new(
+        "Fig 18: scheduler overhead vs budget (verify stream, l13b)",
+        &["budget", "uncached/verify", "engine ms/verify", "sched µs/verify", "overhead"],
+    );
+    for b in [0.1, 0.2, 0.4, 0.6, 0.8, 1.0] {
+        let offl = (b as f64 + 0.15).min(1.0);
+        let uncached_len = ((gamma as f64 * (1.0 - offl) / offl).round() as usize).max(1);
+        let mut sched = Scheduler::new(CloudEngine::new(rt.model("l13b")?)?, 0xF18);
+        let mut rng = Rng::new(0xF18);
+        let n = 40;
+        for i in 0..n {
+            sched.submit(CloudRequest::Verify {
+                request_id: i,
+                device_id: 0,
+                uncached: (0..uncached_len).map(|_| 200 + rng.below(128) as u32).collect(),
+                draft: (0..gamma).map(|_| 200 + rng.below(128) as u32).collect(),
+                dists: vec![Dist::Dense(vec![1.0 / 512.0; 512]); gamma],
+                greedy: true,
+            })?;
+        }
+        let mut done = 0;
+        while done < n {
+            let (events, _) = sched.tick()?;
+            for e in events {
+                if let CloudEvent::VerifyDone { request_id, .. } = e {
+                    sched.submit(CloudRequest::Release { request_id })?;
+                    done += 1;
+                }
+            }
+        }
+        let s = &sched.stats;
+        let overhead = s.sched_overhead_s / (s.sched_overhead_s + s.busy_s);
+        t.row(&[
+            format!("{b:.1}"),
+            uncached_len.to_string(),
+            format!("{:.2}", s.busy_s / n as f64 * 1e3),
+            format!("{:.1}", s.sched_overhead_s / n as f64 * 1e6),
+            pct(overhead),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

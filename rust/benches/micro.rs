@@ -1,0 +1,112 @@
+//! Micro-benchmarks of the hot-path components (criterion-style timing
+//! via the in-repo harness): selector, codec, wire, verifier, rouge,
+//! engine step, cloud batch, scheduler bookkeeping, JSON.
+
+use synera::bench::{fmt_s, time_it, Table};
+use synera::config::SyneraParams;
+use synera::device::codec::compress_dist;
+use synera::device::offload::Selector;
+use synera::metrics::quality::rouge1;
+use synera::model::{CloudEngine, DeviceEngine, SlotChunk};
+use synera::net::wire::{Dist, UplinkMsg};
+use synera::runtime::Runtime;
+use synera::util::json::Json;
+use synera::workload::synthlang::{generate, Task};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let mut t = Table::new("micro: hot-path components", &["component", "mean", "p95"]);
+
+    let mut sel = Selector::new(0.7, 1.0, SyneraParams::default());
+    let s = time_it(100, 2000, || {
+        std::hint::black_box(sel.decide(&[0.4; 4], &[0.8; 4]));
+    });
+    t.row(&["selector.decide (per chunk)".into(), fmt_s(s.mean), fmt_s(s.p95)]);
+
+    let probs: Vec<f32> = (0..512).map(|i| 1.0 / (i + 1) as f32).collect();
+    let s = time_it(100, 2000, || {
+        std::hint::black_box(compress_dist(&probs, 8));
+    });
+    t.row(&["codec top-8 compress (512 vocab)".into(), fmt_s(s.mean), fmt_s(s.p95)]);
+
+    let msg = UplinkMsg {
+        request_id: 1,
+        device_id: 0,
+        uncached: vec![200; 12],
+        draft: vec![300; 4],
+        dists: vec![compress_dist(&probs, 8); 4],
+        is_first: false,
+    };
+    let s = time_it(100, 2000, || {
+        std::hint::black_box(msg.encode());
+    });
+    t.row(&["uplink encode".into(), fmt_s(s.mean), fmt_s(s.p95)]);
+
+    let q_rows: Vec<Vec<f32>> = (0..5).map(|_| probs.clone()).collect();
+    let dists = vec![Dist::Dense(probs.clone()); 4];
+    let mut rng = synera::util::rng::Rng::new(7);
+    let s = time_it(100, 2000, || {
+        std::hint::black_box(synera::cloud::verifier::verify_chunk(
+            &[0, 1, 2, 3],
+            &dists,
+            &q_rows,
+            true,
+            &mut rng,
+        ));
+    });
+    t.row(&["verify_chunk (γ=4, greedy)".into(), fmt_s(s.mean), fmt_s(s.p95)]);
+
+    let a: Vec<u32> = (0..16).collect();
+    let b: Vec<u32> = (8..24).collect();
+    let s = time_it(100, 5000, || {
+        std::hint::black_box(rouge1(&a, &b));
+    });
+    t.row(&["rouge1 (16 vs 16 tokens)".into(), fmt_s(s.mean), fmt_s(s.p95)]);
+
+    // engine steps (the PJRT hot path)
+    for slm in ["s160m", "s1b", "s7b"] {
+        let dev = DeviceEngine::new(rt.model(slm)?, false)?;
+        let p = generate(Task::Xsum, 1, 0).prompt;
+        let (sess0, out0) = dev.prefill(&p)?;
+        let mut sess = sess0.clone();
+        let mut tok = out0.token;
+        let s = time_it(3, 60, || {
+            let o = dev.step(&mut sess, tok, false, 1.0).unwrap();
+            tok = o.token;
+            if sess.len + 2 >= dev.model.meta.max_len {
+                sess = sess0.clone();
+                tok = out0.token;
+            }
+        });
+        t.row(&[format!("{slm} decode step (full)"), fmt_s(s.mean), fmt_s(s.p95)]);
+    }
+    for llm in ["l13b", "l70b"] {
+        let mut cloud = CloudEngine::new(rt.model(llm)?)?;
+        let p = generate(Task::Xsum, 1, 1).prompt;
+        let slots: Vec<usize> = (0..cloud.slots).map(|i| cloud.alloc_slot(i as u64).unwrap()).collect();
+        let s = time_it(2, 40, || {
+            let items: Vec<SlotChunk> = slots
+                .iter()
+                .map(|&sl| SlotChunk { slot: sl, tokens: p.clone() })
+                .collect();
+            cloud.run_batch(&items).unwrap();
+            for &sl in &slots {
+                cloud.rollback(sl, 0);
+            }
+        });
+        t.row(&[
+            format!("{llm} batch chunk ({}×{} tokens)", cloud.slots, p.len()),
+            fmt_s(s.mean),
+            fmt_s(s.p95),
+        ]);
+    }
+
+    let meta_text = std::fs::read_to_string(rt.dir.join("meta.json"))?;
+    let s = time_it(10, 500, || {
+        std::hint::black_box(Json::parse(&meta_text).unwrap());
+    });
+    t.row(&["meta.json parse".into(), fmt_s(s.mean), fmt_s(s.p95)]);
+
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,34 @@
+//! Table 4 — end-to-end generation quality: 3 model pairs × 7 datasets ×
+//! 4 methods (Edge-centric, EdgeFM-LLM, Hybrid, Synera).
+//!
+//! `SYNERA_T4_N` overrides samples/dataset (default 10).
+
+use synera::baselines::TABLE4_METHODS;
+use synera::bench::Table;
+use synera::config::{PairConfig, Scenario};
+use synera::coordinator::eval::{eval_method, EvalOptions};
+use synera::runtime::Runtime;
+use synera::workload::synthlang::TASKS;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::var("SYNERA_T4_N").ok().and_then(|s| s.parse().ok()).unwrap_or(10);
+    let rt = Runtime::load_default()?;
+    for pair in PairConfig::table4_pairs() {
+        let mut t = Table::new(
+            &format!("Table 4: generation quality — pair {}", pair.label()),
+            &["method", "CNNDM", "XSum", "SensorQA", "HeySQuAD", "CSQA", "SST2", "LLQA"],
+        );
+        for m in TABLE4_METHODS {
+            let mut cells = vec![m.name().to_string()];
+            for task in [TASKS[2], TASKS[3], TASKS[6], TASKS[5], TASKS[0], TASKS[1], TASKS[4]] {
+                let mut scen = Scenario::default_pair(&pair.slm, &pair.llm);
+                scen.params.budget = 0.5; // working point (see EXPERIMENTS.md §Table 4)
+                let rep = eval_method(&rt, &scen, m, &EvalOptions { n_samples: n, task })?;
+                cells.push(format!("{:.1}", rep.quality * 100.0));
+            }
+            t.row(&cells);
+        }
+        t.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Table 5 — device runtime overheads: offloading-decision latency per
+//! token and energy per token across module ablations.
+
+use std::time::Instant;
+
+use synera::bench::{f3, Table};
+use synera::config::{Scenario, SyneraParams};
+use synera::coordinator::eval::{eval_with_profile, EvalOptions};
+use synera::coordinator::pipeline::Method;
+use synera::device::offload::Selector;
+use synera::profiling::load_or_profile;
+use synera::runtime::Runtime;
+use synera::workload::synthlang::Task;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let profile = load_or_profile(&rt, "s1b", None, "l13b")?;
+    let opts = EvalOptions { n_samples: 8, task: Task::Xsum };
+
+    // (1) scheduling (P_conf + P_imp) latency per token — measured directly
+    let mut sel = Selector::new(profile.c_th, profile.i_th_for_budget(0.2), SyneraParams::default());
+    let iters = 100_000;
+    let t0 = Instant::now();
+    let mut acc = 0usize;
+    for i in 0..iters {
+        let c = 0.2 + (i % 7) as f32 * 0.1;
+        let d = sel.decide(&[c; 4], &[0.5; 4]);
+        acc += d.offload as usize;
+    }
+    let per_chunk_us = t0.elapsed().as_secs_f64() / iters as f64 * 1e6;
+    std::hint::black_box(acc);
+
+    let mut t = Table::new(
+        "Table 5: device runtime overheads (s1b&l13b, XSum)",
+        &["method", "sched latency/token", "energy/token (J)", "vs Edge-centric (J)"],
+    );
+    let mk = |f: &dyn Fn(&mut Scenario)| {
+        let mut s = Scenario::default_pair("s1b", "l13b");
+        f(&mut s);
+        s
+    };
+    let variants: Vec<(&str, Method, Scenario)> = vec![
+        ("Edge-centric", Method::EdgeCentric, mk(&|_| {})),
+        ("Edge-centric (w/ EE)", Method::EdgeCentric, mk(&|s| {
+            s.params.early_exit = true;
+        })),
+        ("Synera (w/o EE)", Method::Synera, mk(&|s| s.params.early_exit = false)),
+        ("Synera (w/o PI)", Method::Synera, mk(&|s| s.params.parallel_inference = false)),
+        ("Synera", Method::Synera, mk(&|_| {})),
+    ];
+    let mut base_energy = None;
+    for (name, m, mut scen) in variants {
+        if name == "Edge-centric (w/ EE)" {
+            // eval_method would re-disable EE for the baseline; force it
+            scen.params.early_exit = true;
+            let rep = eval_with_profile(&rt, &scen, m, &opts, &profile)?;
+            let d = rep.energy_per_token_j - base_energy.unwrap_or(rep.energy_per_token_j);
+            t.row(&["Edge-centric (w/ EE)".into(), "N/A".into(), f3(rep.energy_per_token_j), format!("{d:+.3}")]);
+            continue;
+        }
+        let scen2 = scen.clone();
+        let rep = if m == Method::EdgeCentric {
+            let mut s = scen2;
+            s.params.early_exit = false;
+            eval_with_profile(&rt, &s, m, &opts, &profile)?
+        } else {
+            let mut s = scen2;
+            s.params = synera::coordinator::eval::method_params(m, &s.params);
+            // re-apply the ablation on top of the method defaults
+            if name == "Synera (w/o EE)" {
+                s.params.early_exit = false;
+            }
+            if name == "Synera (w/o PI)" {
+                s.params.parallel_inference = false;
+            }
+            eval_with_profile(&rt, &s, m, &opts, &profile)?
+        };
+        if name == "Edge-centric" {
+            base_energy = Some(rep.energy_per_token_j);
+        }
+        let sched_cell = if m == Method::EdgeCentric {
+            "N/A".to_string()
+        } else {
+            format!("{:.2} µs (<0.5 ms)", per_chunk_us)
+        };
+        let d = rep.energy_per_token_j - base_energy.unwrap_or(rep.energy_per_token_j);
+        t.row(&[name.into(), sched_cell, f3(rep.energy_per_token_j), format!("{d:+.3}")]);
+    }
+    t.print();
+    Ok(())
+}

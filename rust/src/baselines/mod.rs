@@ -1,0 +1,54 @@
+//! Baseline systems (paper §6.1).
+//!
+//! All four baselines share substrates with Synera so comparisons are
+//! apples-to-apples:
+//!
+//! * **Edge-centric** — pure on-device SLM decoding
+//!   ([`pipeline::run_edge_centric`]).
+//! * **Cloud-centric** — the whole request served by the LLM through the
+//!   continuous-batching engine ([`pipeline::run_cloud_centric`]).
+//! * **Hybrid** (Hao et al. [9]) — token-level offloading gated by the
+//!   confidence threshold only, with the vanilla (stalling) pipeline:
+//!   expressed as a Synera parameterisation in
+//!   [`eval::method_params`] (`use_imp=false`, no PI/EE/compression).
+//! * **EdgeFM-LLM** (EdgeFM [38] adapted to generation) — input-level
+//!   offloading on prompt perplexity ([`pipeline::run_edgefm`]); the PPL
+//!   threshold comes from the offline profile.
+//!
+//! This module re-exports the method enum for discoverability.
+
+pub use crate::coordinator::eval::method_params;
+pub use crate::coordinator::pipeline::Method;
+
+/// All methods in the paper's comparison order.
+pub const ALL_METHODS: [Method; 5] = [
+    Method::EdgeCentric,
+    Method::CloudCentric,
+    Method::EdgeFmLlm,
+    Method::Hybrid,
+    Method::Synera,
+];
+
+/// The quality-table subset (Table 4 omits cloud-centric — it is the
+/// quality ceiling by construction).
+pub const TABLE4_METHODS: [Method; 4] =
+    [Method::EdgeCentric, Method::EdgeFmLlm, Method::Hybrid, Method::Synera];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SyneraParams;
+
+    #[test]
+    fn hybrid_is_conf_only_vanilla() {
+        let p = method_params(Method::Hybrid, &SyneraParams::default());
+        assert!(p.use_conf && !p.use_imp);
+        assert!(!p.parallel_inference && !p.early_exit && !p.compression);
+    }
+
+    #[test]
+    fn synera_keeps_all_modules() {
+        let p = method_params(Method::Synera, &SyneraParams::default());
+        assert!(p.use_conf && p.use_imp && p.parallel_inference && p.early_exit && p.compression);
+    }
+}

@@ -1,0 +1,139 @@
+//! Bench harness (the offline mirror carries no criterion): a small
+//! timing/reporting toolkit used by every `cargo bench` target
+//! (`harness = false`). Provides warmup + repeated measurement with
+//! mean/p50/p95, and paper-style table printing.
+
+use std::time::Instant;
+
+use crate::metrics::stats::Summary;
+
+/// Time `f` over `iters` iterations after `warmup` runs; returns
+/// per-iteration seconds.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// Human units for seconds.
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.1} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Fixed-width paper-style table writer (also mirrors rows to a
+/// results file under `target/bench-results/`).
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            widths: header.iter().map(|s| s.len()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count");
+        for (i, c) in cells.iter().enumerate() {
+            self.widths[i] = self.widths[i].max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{c:<w$} | ", w = w));
+            }
+            s
+        };
+        println!("{}", line(&self.header, &self.widths));
+        let sep: usize = self.widths.iter().sum::<usize>() + 3 * self.widths.len() + 1;
+        println!("{}", "-".repeat(sep));
+        for r in &self.rows {
+            println!("{}", line(r, &self.widths));
+        }
+        self.save();
+    }
+
+    fn save(&self) {
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let mut out = String::new();
+        out.push_str(&self.header.join("\t"));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join("\t"));
+            out.push('\n');
+        }
+        let _ = std::fs::write(dir.join(format!("{slug}.tsv")), out);
+    }
+}
+
+/// `fN` formatting helpers for table cells.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_measures() {
+        let s = time_it(1, 5, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(s.mean >= 0.002 && s.mean < 0.05, "{}", s.mean);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_s(2.0).ends_with(" s"));
+        assert!(fmt_s(2e-3).ends_with(" ms"));
+        assert!(fmt_s(2e-6).ends_with(" µs"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

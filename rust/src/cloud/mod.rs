@@ -1,0 +1,9 @@
+//! Cloud runtime (paper §3.4, §4.5): speculative verification and the
+//! verification-aware continuous-batching scheduler over the slot-based
+//! [`crate::model::CloudEngine`].
+
+pub mod scheduler;
+pub mod verifier;
+
+pub use scheduler::{CloudEvent, CloudRequest, Scheduler, SchedulerStats};
+pub use verifier::{verify_chunk, VerifyOutcome};

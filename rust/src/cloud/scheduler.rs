@@ -1,0 +1,397 @@
+//! Verification-aware scheduler — paper Algorithm 1.
+//!
+//! Each `tick()` is one scheduling iteration over the slot-based engine:
+//! prefill requests are admitted and batched first (lines 5–11); when no
+//! prefill work exists, pending verification requests run as **chunked
+//! partial prefill** (lines 12–21, chunk = 32 after Sarathi-Serve) and
+//! are verified when their last chunk lands; cloud-centric decode
+//! batches run when nothing else is waiting. Completed requests leave
+//! the batch (line 22).
+//!
+//! Verification requests keep their slot across rounds (the KV prefix
+//! persists; rejected draft tails are rolled back by position masking).
+//! When all slots are busy, arrivals queue — that queueing is exactly
+//! the latency knee the Fig. 15 scalability experiment measures.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::cloud::verifier::{verify_chunk, VerifyOutcome};
+use crate::model::cloud_engine::{CloudEngine, SlotChunk};
+use crate::model::logits::argmax;
+use crate::net::wire::Dist;
+use crate::util::rng::Rng;
+use crate::workload::vocab::EOS;
+
+/// Work submitted to the cloud.
+#[derive(Debug, Clone)]
+pub enum CloudRequest {
+    /// Cloud-centric baseline: full generation on the LLM.
+    Generate { request_id: u64, prompt: Vec<u32>, max_new: usize },
+    /// Synera verification round (decoded `UplinkMsg`).
+    Verify {
+        request_id: u64,
+        device_id: u32,
+        /// Device-accepted tokens not yet in the cloud KV (first round:
+        /// the whole prompt). Must be non-empty.
+        uncached: Vec<u32>,
+        draft: Vec<u32>,
+        dists: Vec<Dist>,
+        greedy: bool,
+    },
+    /// A device session finished; free its slot.
+    Release { request_id: u64 },
+}
+
+/// Completions surfaced by `tick()`.
+#[derive(Debug, Clone)]
+pub enum CloudEvent {
+    VerifyDone { request_id: u64, device_id: u32, outcome: VerifyOutcome },
+    /// Cloud-centric generation finished (tokens exclude the prompt).
+    Generated { request_id: u64, tokens: Vec<u32> },
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerStats {
+    pub iterations: u64,
+    pub prefill_iters: u64,
+    pub verify_iters: u64,
+    pub decode_iters: u64,
+    pub rows_executed: u64,
+    /// Engine compute inside ticks.
+    pub busy_s: f64,
+    /// Scheduling bookkeeping outside engine calls (Fig. 18 overhead).
+    pub sched_overhead_s: f64,
+    pub verifies_done: u64,
+    pub draft_tokens_seen: u64,
+    pub draft_tokens_accepted: u64,
+}
+
+struct GenJob {
+    request_id: u64,
+    prompt: Vec<u32>,
+    consumed: usize,
+    slot: usize,
+    max_new: usize,
+    generated: Vec<u32>,
+    next_token: Option<u32>,
+}
+
+struct VerifyJob {
+    request_id: u64,
+    device_id: u32,
+    slot: usize,
+    base_len: usize,
+    tokens: Vec<u32>,
+    u: usize,
+    draft: Vec<u32>,
+    dists: Vec<Dist>,
+    greedy: bool,
+    consumed: usize,
+    rows: Vec<Vec<f32>>,
+}
+
+/// The verification-aware scheduler bound to one [`CloudEngine`].
+pub struct Scheduler {
+    pub engine: CloudEngine,
+    waiting_gen: VecDeque<CloudRequest>,
+    waiting_verify: VecDeque<CloudRequest>,
+    prefilling: Vec<GenJob>,
+    decoding: Vec<GenJob>,
+    verifying: Vec<VerifyJob>,
+    /// Persistent slot per Synera session.
+    session_slot: HashMap<u64, usize>,
+    rng: Rng,
+    pub stats: SchedulerStats,
+}
+
+impl Scheduler {
+    pub fn new(engine: CloudEngine, seed: u64) -> Scheduler {
+        Scheduler {
+            engine,
+            waiting_gen: VecDeque::new(),
+            waiting_verify: VecDeque::new(),
+            prefilling: Vec::new(),
+            decoding: Vec::new(),
+            verifying: Vec::new(),
+            session_slot: HashMap::new(),
+            rng: Rng::new(seed ^ 0xC10D),
+            stats: SchedulerStats::default(),
+        }
+    }
+
+    pub fn submit(&mut self, req: CloudRequest) -> Result<()> {
+        match &req {
+            CloudRequest::Generate { .. } => self.waiting_gen.push_back(req),
+            CloudRequest::Verify { uncached, .. } => {
+                if uncached.is_empty() {
+                    bail!("verify round must carry ≥1 uncached token");
+                }
+                self.waiting_verify.push_back(req);
+            }
+            CloudRequest::Release { request_id } => {
+                if let Some(slot) = self.session_slot.remove(request_id) {
+                    self.engine.free_slot(slot);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Anything in flight or queued?
+    pub fn is_idle(&self) -> bool {
+        self.waiting_gen.is_empty()
+            && self.waiting_verify.is_empty()
+            && self.prefilling.is_empty()
+            && self.decoding.is_empty()
+            && self.verifying.is_empty()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.waiting_gen.len() + self.waiting_verify.len()
+    }
+
+    /// One Algorithm-1 iteration. Returns surfaced events plus the
+    /// engine compute seconds consumed by this tick (the caller's clock).
+    pub fn tick(&mut self) -> Result<(Vec<CloudEvent>, f64)> {
+        let t_tick = Instant::now();
+        self.stats.iterations += 1;
+        let mut events = Vec::new();
+        let mut compute_s = 0.0;
+
+        self.admit();
+
+        // ---- lines 5–11: prefill-priority iteration -----------------------
+        if !self.prefilling.is_empty() {
+            self.stats.prefill_iters += 1;
+            let chunk = self.engine.chunk;
+            let mut items = Vec::new();
+            for job in self.prefilling.iter_mut().take(self.engine.slots) {
+                let n = (job.prompt.len() - job.consumed).min(chunk);
+                items.push(SlotChunk {
+                    slot: job.slot,
+                    tokens: job.prompt[job.consumed..job.consumed + n].to_vec(),
+                });
+            }
+            let sched_before = t_tick.elapsed().as_secs_f64();
+            let (res, dt) = self.engine.run_batch(&items)?;
+            compute_s += dt;
+            self.stats.busy_s += dt;
+            let v = self.engine.model.meta.vocab;
+            for r in &res {
+                let job = self
+                    .prefilling
+                    .iter_mut()
+                    .find(|j| j.slot == r.slot)
+                    .expect("job for slot");
+                job.consumed += r.n_rows;
+                if job.consumed == job.prompt.len() {
+                    job.next_token =
+                        Some(argmax(&r.rows[(r.n_rows - 1) * v..r.n_rows * v]) as u32);
+                }
+            }
+            self.stats.rows_executed = self.engine.rows_executed;
+            // move finished prefills to the decode pool
+            let mut i = 0;
+            while i < self.prefilling.len() {
+                if self.prefilling[i].consumed == self.prefilling[i].prompt.len() {
+                    let job = self.prefilling.remove(i);
+                    self.decoding.push(job);
+                } else {
+                    i += 1;
+                }
+            }
+            self.stats.sched_overhead_s += t_tick.elapsed().as_secs_f64() - sched_before - dt;
+            return Ok((events, compute_s));
+        }
+
+        // ---- lines 12–21: verification iteration --------------------------
+        if !self.verifying.is_empty() {
+            self.stats.verify_iters += 1;
+            let chunk = self.engine.chunk;
+            let mut items = Vec::new();
+            for job in self.verifying.iter_mut().take(self.engine.slots) {
+                let n = (job.tokens.len() - job.consumed).min(chunk);
+                items.push(SlotChunk {
+                    slot: job.slot,
+                    tokens: job.tokens[job.consumed..job.consumed + n].to_vec(),
+                });
+            }
+            let sched_mark = t_tick.elapsed().as_secs_f64();
+            let (res, dt) = self.engine.run_batch(&items)?;
+            compute_s += dt;
+            self.stats.busy_s += dt;
+            let v = self.engine.model.meta.vocab;
+            for r in &res {
+                let job = self
+                    .verifying
+                    .iter_mut()
+                    .find(|j| j.slot == r.slot)
+                    .expect("job for slot");
+                for i in 0..r.n_rows {
+                    let gi = job.consumed + i; // global row in the verify seq
+                    if gi + 1 >= job.u {
+                        job.rows.push(r.rows[i * v..(i + 1) * v].to_vec());
+                    }
+                }
+                job.consumed += r.n_rows;
+            }
+            self.stats.rows_executed = self.engine.rows_executed;
+
+            let mut i = 0;
+            while i < self.verifying.len() {
+                if self.verifying[i].consumed == self.verifying[i].tokens.len() {
+                    let job = self.verifying.remove(i);
+                    let outcome = verify_chunk(
+                        &job.draft,
+                        &job.dists,
+                        &job.rows,
+                        job.greedy,
+                        &mut self.rng,
+                    );
+                    self.stats.verifies_done += 1;
+                    self.stats.draft_tokens_seen += job.draft.len() as u64;
+                    self.stats.draft_tokens_accepted += outcome.accepted as u64;
+                    // commit prefix + uncached + accepted; mask the rest
+                    self.engine
+                        .rollback(job.slot, job.base_len + job.u + outcome.accepted);
+                    events.push(CloudEvent::VerifyDone {
+                        request_id: job.request_id,
+                        device_id: job.device_id,
+                        outcome,
+                    });
+                } else {
+                    i += 1;
+                }
+            }
+            self.stats.sched_overhead_s += t_tick.elapsed().as_secs_f64() - sched_mark - dt;
+            return Ok((events, compute_s));
+        }
+
+        // ---- cloud-centric decode batch ------------------------------------
+        if !self.decoding.is_empty() {
+            self.stats.decode_iters += 1;
+            let toks: Vec<(usize, u32)> = self
+                .decoding
+                .iter()
+                .take(self.engine.slots)
+                .map(|j| (j.slot, j.next_token.expect("decode has next")))
+                .collect();
+            let sched_mark = t_tick.elapsed().as_secs_f64();
+            let (res, dt) = self.engine.run_decode(&toks)?;
+            compute_s += dt;
+            self.stats.busy_s += dt;
+            for r in &res {
+                let job = self
+                    .decoding
+                    .iter_mut()
+                    .find(|j| j.slot == r.slot)
+                    .expect("job for slot");
+                let committed = job.next_token.take().expect("token");
+                job.generated.push(committed);
+                let next = argmax(&r.rows) as u32;
+                if committed == EOS || job.generated.len() >= job.max_new {
+                    // done (committed EOS or budget reached)
+                } else {
+                    job.next_token = Some(next);
+                }
+            }
+            self.stats.rows_executed = self.engine.rows_executed;
+            let mut i = 0;
+            while i < self.decoding.len() {
+                if self.decoding[i].next_token.is_none() {
+                    let job = self.decoding.remove(i);
+                    self.engine.free_slot(job.slot);
+                    events.push(CloudEvent::Generated {
+                        request_id: job.request_id,
+                        tokens: job.generated,
+                    });
+                } else {
+                    i += 1;
+                }
+            }
+            self.stats.sched_overhead_s += t_tick.elapsed().as_secs_f64() - sched_mark - dt;
+            return Ok((events, compute_s));
+        }
+
+        self.stats.sched_overhead_s += t_tick.elapsed().as_secs_f64();
+        Ok((events, compute_s))
+    }
+
+    /// Admit waiting requests into free slots.
+    fn admit(&mut self) {
+        while !self.waiting_gen.is_empty() && self.engine.free_slots() > 0 {
+            if let Some(CloudRequest::Generate { request_id, prompt, max_new }) =
+                self.waiting_gen.pop_front()
+            {
+                let slot = self.engine.alloc_slot(request_id).expect("free slot");
+                self.prefilling.push(GenJob {
+                    request_id,
+                    prompt,
+                    consumed: 0,
+                    slot,
+                    max_new,
+                    generated: Vec::new(),
+                    next_token: None,
+                });
+            }
+        }
+        let mut requeue = VecDeque::new();
+        while let Some(req) = self.waiting_verify.pop_front() {
+            let CloudRequest::Verify { request_id, device_id, uncached, draft, dists, greedy } =
+                req
+            else {
+                continue;
+            };
+            let slot = match self.session_slot.get(&request_id) {
+                Some(&s) => Some(s),
+                None => {
+                    let s = self.engine.alloc_slot(request_id);
+                    if let Some(s) = s {
+                        self.session_slot.insert(request_id, s);
+                    }
+                    s
+                }
+            };
+            match slot {
+                Some(slot) => {
+                    let base_len = self.engine.slot_len[slot];
+                    let mut tokens = uncached.clone();
+                    tokens.extend_from_slice(&draft);
+                    self.verifying.push(VerifyJob {
+                        request_id,
+                        device_id,
+                        slot,
+                        base_len,
+                        u: uncached.len(),
+                        tokens,
+                        draft,
+                        dists,
+                        greedy,
+                        consumed: 0,
+                        rows: Vec::new(),
+                    });
+                }
+                None => requeue.push_back(CloudRequest::Verify {
+                    request_id,
+                    device_id,
+                    uncached,
+                    draft,
+                    dists,
+                    greedy,
+                }),
+            }
+        }
+        self.waiting_verify = requeue;
+    }
+
+    /// Empirical acceptance rate α (profiling support, paper §5).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.stats.draft_tokens_seen == 0 {
+            return 0.0;
+        }
+        self.stats.draft_tokens_accepted as f64 / self.stats.draft_tokens_seen as f64
+    }
+}

@@ -1,0 +1,203 @@
+//! System configuration: model pairs, device/link profiles and the
+//! Synera runtime parameters (paper §4/§5 hyper-parameters).
+
+use crate::net::LinkProfile;
+
+/// An SLM–LLM pairing (paper Table 4 rows). `slm_weights` selects a
+/// quantized variant ("s7b_bnb4" / "s7b_awq") for the Table 6 runs.
+#[derive(Debug, Clone)]
+pub struct PairConfig {
+    pub slm: String,
+    pub llm: String,
+    pub slm_weights: Option<String>,
+}
+
+impl PairConfig {
+    pub fn new(slm: &str, llm: &str) -> Self {
+        PairConfig { slm: slm.into(), llm: llm.into(), slm_weights: None }
+    }
+
+    /// The paper's three Table-4 pairs, mapped onto our zoo
+    /// (160M&13B, 1.1B&13B, 7B&70B).
+    pub fn table4_pairs() -> Vec<PairConfig> {
+        vec![
+            PairConfig::new("s160m", "l13b"),
+            PairConfig::new("s1b", "l13b"),
+            PairConfig::new("s7b", "l70b"),
+        ]
+    }
+
+    pub fn label(&self) -> String {
+        match &self.slm_weights {
+            Some(w) => format!("{}({w})&{}", self.slm, self.llm),
+            None => format!("{}&{}", self.slm, self.llm),
+        }
+    }
+}
+
+/// Device compute/energy profile (stands in for Jetson Orin power modes
+/// and the Pixel 7 — DESIGN.md §1). `compute_scale` multiplies measured
+/// PJRT step time when accounting device-side latency, so one CPU testbed
+/// can represent devices of different speeds.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: String,
+    pub compute_scale: f64,
+    pub joules_per_token: f64,
+    pub joules_per_byte: f64,
+}
+
+impl DeviceProfile {
+    pub fn jetson_orin_50w() -> Self {
+        DeviceProfile {
+            name: "orin-50w".into(),
+            compute_scale: 1.0,
+            joules_per_token: 1.86, // Table 5 edge-centric J/token
+            joules_per_byte: 2e-7,
+        }
+    }
+
+    pub fn jetson_orin_30w() -> Self {
+        DeviceProfile {
+            name: "orin-30w".into(),
+            compute_scale: 1.6,
+            joules_per_token: 1.30,
+            joules_per_byte: 2e-7,
+        }
+    }
+
+    pub fn pixel7() -> Self {
+        DeviceProfile {
+            name: "pixel7".into(),
+            compute_scale: 3.5,
+            joules_per_token: 0.55,
+            joules_per_byte: 4e-7,
+        }
+    }
+
+    /// 4-bit weight variants run memory-bound decode faster (Table 6).
+    pub fn with_quant_speedup(mut self, factor: f64) -> Self {
+        self.compute_scale /= factor;
+        self
+    }
+}
+
+/// Synera runtime parameters (paper defaults annotated).
+#[derive(Debug, Clone)]
+pub struct SyneraParams {
+    /// Draft chunk length γ (paper §5: 4).
+    pub gamma: usize,
+    /// Parallel-inference speculative continuation length δ.
+    pub delta: usize,
+    /// Offloading budget knob ∈ [0,1] → i_th percentile (paper §4.2).
+    pub budget: f64,
+    /// Sigmoid steepness k for P_conf (paper: 10).
+    pub k_conf: f64,
+    /// Sigmoid slope θ for P_imp (paper: −10).
+    pub theta_imp: f64,
+    /// Layer-wise early-exit margin threshold (paper §4.3: 0.7).
+    pub exit_threshold: f64,
+    /// Sequence-wise early-exit fraction γ_seq (paper §4.3: 0.8).
+    pub seq_exit_frac: f64,
+    pub max_new_tokens: usize,
+    /// Module toggles (ablations).
+    pub early_exit: bool,
+    pub parallel_inference: bool,
+    pub compression: bool,
+    pub use_conf: bool,
+    pub use_imp: bool,
+    /// Fig. 5 ablation: ignore scores, offload each chunk w.p. `budget`.
+    pub random_offload: bool,
+    /// Greedy decoding (vs stochastic speculative sampling).
+    pub greedy: bool,
+    /// Dispatch-sampling seed (P_conf/P_imp draws).
+    pub seed: u64,
+}
+
+impl Default for SyneraParams {
+    fn default() -> Self {
+        SyneraParams {
+            gamma: 4,
+            delta: 2,
+            budget: 0.2, // the paper's typical working point (§6.3)
+            k_conf: 10.0,
+            theta_imp: -10.0,
+            exit_threshold: 0.7,
+            seq_exit_frac: 0.8,
+            max_new_tokens: 16,
+            early_exit: true,
+            parallel_inference: true,
+            compression: true,
+            use_conf: true,
+            use_imp: true,
+            random_offload: false,
+            greedy: true,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// A full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub pair: PairConfig,
+    pub device: DeviceProfile,
+    pub link: LinkProfile,
+    pub params: SyneraParams,
+}
+
+impl Scenario {
+    pub fn default_pair(slm: &str, llm: &str) -> Scenario {
+        Scenario {
+            pair: PairConfig::new(slm, llm),
+            device: DeviceProfile::jetson_orin_50w(),
+            link: LinkProfile::wifi(),
+            params: SyneraParams::default(),
+        }
+    }
+
+    /// The five deployment configurations of Fig. 11/12 (SLM × device ×
+    /// energy mode × LLM).
+    pub fn fig11_configs() -> Vec<(String, Scenario)> {
+        let mk = |slm: &str, llm: &str, dev: DeviceProfile| Scenario {
+            pair: PairConfig::new(slm, llm),
+            device: dev,
+            link: LinkProfile::wifi(),
+            params: SyneraParams::default(),
+        };
+        vec![
+            ("s160m&13B/orin50".into(), mk("s160m", "l13b", DeviceProfile::jetson_orin_50w())),
+            ("s160m&13B/orin30".into(), mk("s160m", "l13b", DeviceProfile::jetson_orin_30w())),
+            ("s1b&13B/orin50".into(), mk("s1b", "l13b", DeviceProfile::jetson_orin_50w())),
+            ("s1b&13B/pixel7".into(), mk("s1b", "l13b", DeviceProfile::pixel7())),
+            ("s7b&70B/orin50".into(), mk("s7b", "l70b", DeviceProfile::jetson_orin_50w())),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let p = SyneraParams::default();
+        assert_eq!(p.gamma, 4);
+        assert_eq!(p.k_conf, 10.0);
+        assert_eq!(p.theta_imp, -10.0);
+        assert_eq!(p.exit_threshold, 0.7);
+        assert_eq!(p.seq_exit_frac, 0.8);
+        assert!((p.budget - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn five_fig11_configs() {
+        assert_eq!(Scenario::fig11_configs().len(), 5);
+    }
+
+    #[test]
+    fn quant_speedup_reduces_scale() {
+        let d = DeviceProfile::jetson_orin_50w().with_quant_speedup(1.3);
+        assert!(d.compute_scale < 1.0);
+    }
+}

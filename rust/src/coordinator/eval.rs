@@ -1,0 +1,215 @@
+//! Dataset-level evaluation driver: runs a (method, pair, dataset)
+//! combination over the held-out split and aggregates the paper's
+//! metrics. Every table/figure bench builds on this.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::cloud::scheduler::Scheduler;
+use crate::config::{Scenario, SyneraParams};
+use crate::coordinator::pipeline::{
+    run_request, CloudClock, Method, PipelineCtx, RequestReport,
+};
+use crate::metrics::cost::{CostModel, PackingFactors};
+use crate::metrics::quality::score_sample;
+use crate::metrics::stats::Summary;
+use crate::model::cloud_engine::CloudEngine;
+use crate::model::device_engine::DeviceEngine;
+use crate::net::link::SimLink;
+use crate::profiling::{load_or_profile, OffloadProfile};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+use crate::workload::synthlang::Task;
+use crate::workload::trace::eval_set;
+
+/// Evaluation options.
+#[derive(Debug, Clone)]
+pub struct EvalOptions {
+    pub n_samples: usize,
+    pub task: Task,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        EvalOptions { n_samples: 16, task: Task::Xsum }
+    }
+}
+
+/// Aggregated result of one (method, pair, dataset) evaluation.
+#[derive(Debug, Clone)]
+pub struct MethodReport {
+    pub method: Method,
+    pub pair_label: String,
+    pub task: Task,
+    pub quality: f64,
+    pub tbt_s: f64,
+    pub latency: Summary,
+    /// Paper cost `c = (1/Pf) × T × W`.
+    pub cost: f64,
+    pub w: f64,
+    pub energy_per_token_j: f64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub stall_frac: f64,
+    pub pi_hit_rate: f64,
+    /// Paper §6.5's metric: rejection-*position* prediction hit rate.
+    pub pi_pos_hit_rate: f64,
+    pub exit_rate: f64,
+    pub offload_rate: f64,
+    pub mean_verify_rtt_s: f64,
+    pub n: usize,
+}
+
+/// Restrict the parameterisation per method (baseline definitions, §6.1).
+pub fn method_params(method: Method, base: &SyneraParams) -> SyneraParams {
+    let mut p = base.clone();
+    match method {
+        Method::Synera => {}
+        Method::Hybrid => {
+            // token-level offloading by confidence threshold only,
+            // vanilla pipeline
+            p.use_imp = false;
+            p.parallel_inference = false;
+            p.early_exit = false;
+            p.compression = false;
+        }
+        Method::EdgeFmLlm => {
+            p.parallel_inference = false;
+            p.early_exit = false;
+        }
+        Method::EdgeCentric => {
+            p.early_exit = false; // plain local decoding (Table 5 baseline)
+        }
+        Method::CloudCentric => {}
+    }
+    p
+}
+
+/// Evaluate one method on one dataset under one scenario.
+pub fn eval_method(
+    rt: &Rc<Runtime>,
+    scen: &Scenario,
+    method: Method,
+    opts: &EvalOptions,
+) -> Result<MethodReport> {
+    let mut scen = scen.clone();
+    scen.params = method_params(method, &scen.params);
+
+    let profile = if matches!(method, Method::CloudCentric) {
+        OffloadProfile::synthetic() // unused on the pure-cloud path
+    } else {
+        load_or_profile(rt, &scen.pair.slm, scen.pair.slm_weights.as_deref(), &scen.pair.llm)?
+    };
+    eval_with_profile(rt, &scen, method, opts, &profile)
+}
+
+/// Same, with an externally supplied profile (sweeps reuse one profile).
+pub fn eval_with_profile(
+    rt: &Rc<Runtime>,
+    scen: &Scenario,
+    method: Method,
+    opts: &EvalOptions,
+    profile: &OffloadProfile,
+) -> Result<MethodReport> {
+    let split = scen.params.early_exit && !matches!(method, Method::CloudCentric);
+    let dev = DeviceEngine::new(
+        rt.model_variant(&scen.pair.slm, scen.pair.slm_weights.as_deref())?,
+        split,
+    )?;
+    let mut sched = Scheduler::new(CloudEngine::new(rt.model(&scen.pair.llm)?)?, scen.params.seed);
+    let mut link = SimLink::new(scen.link, scen.params.seed ^ 0x11);
+    let mut clock = CloudClock::default();
+    let mut rng = Rng::new(scen.params.seed ^ 0x77);
+
+    let samples = eval_set(opts.task, opts.n_samples);
+
+    // warmup: compile every executable + fill caches before measurement
+    sched.engine.warmup()?;
+    {
+        let mut ctx = PipelineCtx {
+            dev: &dev,
+            sched: &mut sched,
+            scen: &scen,
+            profile,
+            link: &mut link,
+            cloud_clock: &mut clock,
+            rng: &mut rng,
+        };
+        let _ = run_request(&mut ctx, method, &samples[0].prompt)?;
+        clock.free_at = 0.0;
+    }
+
+    let mut reports: Vec<RequestReport> = Vec::with_capacity(samples.len());
+    let mut quality_sum = 0.0;
+    for s in &samples {
+        let mut ctx = PipelineCtx {
+            dev: &dev,
+            sched: &mut sched,
+            scen: &scen,
+            profile,
+            link: &mut link,
+            cloud_clock: &mut clock,
+            rng: &mut rng,
+        };
+        let rep = run_request(&mut ctx, method, &s.prompt)?;
+        quality_sum += score_sample(s, &rep.generated);
+        reports.push(rep);
+        // requests are independent in these experiments: reset the queue
+        clock.free_at = 0.0;
+    }
+
+    let n = reports.len();
+    let gen_tokens: u64 = reports.iter().map(|r| r.generated.len() as u64).sum();
+    let cloud_rows: u64 = reports.iter().map(|r| r.cloud_rows).sum();
+    let total_s: f64 = reports.iter().map(|r| r.total_s).sum();
+    let tbt = if gen_tokens > 0 { total_s / gen_tokens as f64 } else { 0.0 };
+    let mut cost = CostModel::new(&scen.pair.llm);
+    cost.cloud_tokens = cloud_rows;
+    cost.generated_tokens = gen_tokens.max(1);
+    cost.mean_tbt_s = tbt;
+
+    let offloads: u32 = reports.iter().map(|r| r.offload_chunks).sum();
+    let locals: u32 = reports.iter().map(|r| r.local_chunks).sum();
+    let pi_h: u32 = reports.iter().map(|r| r.pi_hits).sum();
+    let pi_p: u32 = reports.iter().map(|r| r.pi_pos_hits).sum();
+    let pi_m: u32 = reports.iter().map(|r| r.pi_misses).sum();
+    let exits: u32 = reports.iter().map(|r| r.exits).sum();
+    let steps: u32 = reports.iter().map(|r| r.steps).sum();
+    let stall: f64 = reports.iter().map(|r| r.stall_s).sum();
+    let energy: f64 = reports.iter().map(|r| r.energy_j).sum();
+    let rtts: Vec<f64> = reports.iter().flat_map(|r| r.verify_rtts.clone()).collect();
+
+    Ok(MethodReport {
+        method,
+        pair_label: scen.pair.label(),
+        task: opts.task,
+        quality: quality_sum / n.max(1) as f64,
+        tbt_s: tbt,
+        latency: Summary::of(&reports.iter().map(|r| r.total_s).collect::<Vec<_>>()),
+        cost: cost.cost(&PackingFactors::default()),
+        w: cost.w(),
+        energy_per_token_j: if gen_tokens > 0 { energy / gen_tokens as f64 } else { 0.0 },
+        bytes_up: reports.iter().map(|r| r.bytes_up).sum(),
+        bytes_down: reports.iter().map(|r| r.bytes_down).sum(),
+        stall_frac: if total_s > 0.0 { stall / total_s } else { 0.0 },
+        pi_hit_rate: if pi_h + pi_m > 0 { pi_h as f64 / (pi_h + pi_m) as f64 } else { 0.0 },
+        pi_pos_hit_rate: if pi_h + pi_m > 0 {
+            pi_p as f64 / (pi_h + pi_m) as f64
+        } else {
+            0.0
+        },
+        exit_rate: if steps > 0 { exits as f64 / steps as f64 } else { 0.0 },
+        offload_rate: if offloads + locals > 0 {
+            offloads as f64 / (offloads + locals) as f64
+        } else {
+            0.0
+        },
+        mean_verify_rtt_s: if rtts.is_empty() {
+            0.0
+        } else {
+            rtts.iter().sum::<f64>() / rtts.len() as f64
+        },
+        n,
+    })
+}

@@ -1,0 +1,18 @@
+//! The coordinator: end-to-end serving pipelines (Synera + baselines),
+//! dataset evaluation drivers and the threaded real-time server.
+//!
+//! Experiments run the pipelines in **timeline mode**: engine calls
+//! execute for real on the PJRT client and their *measured* compute
+//! times — scaled by the device profile — advance per-actor clocks,
+//! while network and queueing delays come from the simulated link and
+//! the shared cloud clock. This yields deterministic, reproducible
+//! latency/cost numbers on one CPU testbed (DESIGN.md §1). The
+//! `examples/multi_device_serving.rs` driver instead runs the real
+//! threaded server ([`serve`]) with actual queues and wall-clock time.
+
+pub mod eval;
+pub mod pipeline;
+pub mod serve;
+
+pub use eval::{eval_method, EvalOptions, MethodReport};
+pub use pipeline::{CloudClock, Method, PipelineCtx, RequestReport};

@@ -1,0 +1,534 @@
+//! Per-request serving pipelines: Synera (paper §4) and the four
+//! baselines (§6.1), in discrete-event timeline mode.
+
+use anyhow::{bail, Result};
+
+use crate::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
+use crate::cloud::verifier::VerifyOutcome;
+use crate::config::Scenario;
+use crate::device::codec::{compress_dist, dense_dist};
+use crate::device::early_exit::SeqExitPolicy;
+use crate::device::offload::Selector;
+use crate::device::parallel::{alternative_token, predict_rejection};
+use crate::metrics::energy::EnergyModel;
+use crate::model::device_engine::{DeviceEngine, DeviceSession, StepOut};
+use crate::model::logits::argmax;
+use crate::net::link::SimLink;
+use crate::net::wire::{DownlinkMsg, UplinkMsg};
+use crate::profiling::OffloadProfile;
+use crate::util::rng::Rng;
+use crate::workload::vocab::EOS;
+
+/// Serving method under evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// All inference on the device SLM.
+    EdgeCentric,
+    /// All inference on the cloud LLM (Sarathi-style engine).
+    CloudCentric,
+    /// Hybrid [9]: confidence-threshold token offloading, vanilla
+    /// pipeline (no PI/EE/importance/compression).
+    Hybrid,
+    /// EdgeFM [38] adapted to LLMs: perplexity-based *input-level*
+    /// offloading (whole request to the cloud when prompt PPL is high).
+    EdgeFmLlm,
+    /// The full system.
+    Synera,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::EdgeCentric => "Edge-centric",
+            Method::CloudCentric => "Cloud-centric",
+            Method::Hybrid => "Hybrid",
+            Method::EdgeFmLlm => "EdgeFM-LLM",
+            Method::Synera => "Synera",
+        }
+    }
+}
+
+/// Shared cloud busy-clock: orders verification service across requests
+/// in timeline mode (a single-server queue over measured service times).
+#[derive(Debug, Clone, Default)]
+pub struct CloudClock {
+    pub free_at: f64,
+}
+
+impl CloudClock {
+    /// Serve a job arriving at `arrive` taking `service_s`; returns the
+    /// completion time.
+    pub fn serve(&mut self, arrive: f64, service_s: f64) -> f64 {
+        let start = self.free_at.max(arrive);
+        self.free_at = start + service_s;
+        self.free_at
+    }
+}
+
+/// Everything a pipeline run needs. The scheduler (and its engine) is
+/// shared across requests of an experiment; sessions are per-request.
+pub struct PipelineCtx<'a> {
+    pub dev: &'a DeviceEngine,
+    pub sched: &'a mut Scheduler,
+    pub scen: &'a Scenario,
+    pub profile: &'a OffloadProfile,
+    pub link: &'a mut SimLink,
+    pub cloud_clock: &'a mut CloudClock,
+    pub rng: &'a mut Rng,
+}
+
+/// Outcome + accounting for one request.
+#[derive(Debug, Clone, Default)]
+pub struct RequestReport {
+    pub generated: Vec<u32>,
+    /// Virtual finalization time of each generated token (s).
+    pub token_times: Vec<f64>,
+    /// End-to-end completion time (s).
+    pub total_s: f64,
+    /// Time the device spent stalled on the cloud (s).
+    pub stall_s: f64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    /// LLM token rows executed for this request (cost `W` numerator).
+    pub cloud_rows: u64,
+    pub offload_chunks: u32,
+    pub local_chunks: u32,
+    pub pi_hits: u32,
+    /// Rejection-position prediction matches (paper §6.5's hit rate).
+    pub pi_pos_hits: u32,
+    pub pi_misses: u32,
+    pub exits: u32,
+    pub steps: u32,
+    pub energy_j: f64,
+    /// Mean verification round-trip as seen by the device (s).
+    pub verify_rtts: Vec<f64>,
+}
+
+impl RequestReport {
+    pub fn tbt(&self) -> f64 {
+        if self.generated.is_empty() {
+            return 0.0;
+        }
+        self.total_s / self.generated.len() as f64
+    }
+}
+
+fn strip_eos(mut v: Vec<u32>) -> Vec<u32> {
+    if v.last() == Some(&EOS) {
+        v.pop();
+    }
+    v
+}
+
+// --------------------------------------------------------------------------
+// Edge-centric
+// --------------------------------------------------------------------------
+
+pub fn run_edge_centric(ctx: &mut PipelineCtx, prompt: &[u32]) -> Result<RequestReport> {
+    let mut rep = RequestReport::default();
+    let mut energy = EnergyModel::new(
+        ctx.scen.device.joules_per_token,
+        ctx.scen.device.joules_per_byte,
+    );
+    let scale = ctx.scen.device.compute_scale;
+    let params = &ctx.scen.params;
+    let (mut sess, mut cur) = ctx.dev.prefill(prompt)?;
+    let mut t = cur.compute_s * scale;
+    let exit_th = params.exit_threshold as f32;
+    while rep.generated.len() < params.max_new_tokens {
+        let tok = argmax(&cur.probs) as u32;
+        if tok == EOS {
+            break;
+        }
+        cur = ctx.dev.step(&mut sess, tok, params.early_exit, exit_th)?;
+        t += cur.compute_s * scale;
+        rep.exits += cur.exited as u32;
+        rep.steps += 1;
+        energy.record_step(cur.layer_fraction);
+        rep.generated.push(tok);
+        rep.token_times.push(t);
+    }
+    rep.total_s = t;
+    rep.energy_j = energy.total_joules();
+    rep.generated = strip_eos(rep.generated);
+    Ok(rep)
+}
+
+// --------------------------------------------------------------------------
+// Cloud-centric
+// --------------------------------------------------------------------------
+
+pub fn run_cloud_centric(ctx: &mut PipelineCtx, prompt: &[u32]) -> Result<RequestReport> {
+    let mut rep = RequestReport::default();
+    let params = &ctx.scen.params;
+    let req_id = ctx.rng.next_u64();
+    // prompt uplink: 2 bytes/token + small header (mirrors wire.rs rates)
+    let up_bytes = prompt.len() * 2 + 16;
+    rep.bytes_up = up_bytes as u64;
+    let up = ctx.link.uplink_s(up_bytes);
+    ctx.sched.submit(CloudRequest::Generate {
+        request_id: req_id,
+        prompt: prompt.to_vec(),
+        max_new: params.max_new_tokens,
+    })?;
+    let mut service = 0.0;
+    let mut tokens = Vec::new();
+    loop {
+        let (events, dt) = ctx.sched.tick()?;
+        service += dt;
+        let mut done = false;
+        for e in events {
+            if let CloudEvent::Generated { request_id, tokens: t } = e {
+                if request_id == req_id {
+                    tokens = t;
+                    done = true;
+                }
+            }
+        }
+        if done {
+            break;
+        }
+        if ctx.sched.is_idle() {
+            bail!("cloud-centric request vanished");
+        }
+    }
+    // W = 1: every generated token is cloud work (prefill charged as in
+    // Synera's uncached forwarding — excluded from W on both sides)
+    rep.cloud_rows = tokens.len() as u64;
+    let finish = ctx.cloud_clock.serve(up, service);
+    let down_bytes = tokens.len() * 2 + 16;
+    rep.bytes_down = down_bytes as u64;
+    let t_end = finish + ctx.link.downlink_s(down_bytes);
+    let mut energy = EnergyModel::new(0.0, ctx.scen.device.joules_per_byte);
+    energy.record_bytes((up_bytes + down_bytes) as u64);
+    rep.energy_j = energy.total_joules();
+    rep.generated = strip_eos(tokens);
+    let n = rep.generated.len().max(1);
+    // tokens stream back as decoded; approximate per-token times linearly
+    for i in 0..rep.generated.len() {
+        rep.token_times.push(up + (finish - up) * ((i + 1) as f64 / n as f64));
+    }
+    rep.total_s = t_end;
+    Ok(rep)
+}
+
+// --------------------------------------------------------------------------
+// EdgeFM-LLM (input-level offloading)
+// --------------------------------------------------------------------------
+
+pub fn run_edgefm(ctx: &mut PipelineCtx, prompt: &[u32]) -> Result<RequestReport> {
+    // score the prompt with the SLM; high-PPL inputs go to the cloud whole
+    let (score_sess, first) = ctx.dev.prefill(prompt)?;
+    let scale = ctx.scen.device.compute_scale;
+    let score_s = first.compute_s * scale;
+    let ppl = score_sess.prompt_ppl();
+    if ppl > ctx.profile.ppl_threshold {
+        let mut rep = run_cloud_centric(ctx, prompt)?;
+        rep.total_s += score_s; // scoring happened before offload
+        rep.token_times.iter_mut().for_each(|t| *t += score_s);
+        Ok(rep)
+    } else {
+        run_edge_centric(ctx, prompt)
+    }
+}
+
+// --------------------------------------------------------------------------
+// Synera (and Hybrid as a configuration of it)
+// --------------------------------------------------------------------------
+
+struct DraftChunk {
+    start_len: usize,
+    tokens: Vec<u32>,
+    confs: Vec<f32>,
+    /// Dense probs per draft token (for compression / PI alternatives).
+    probs: Vec<Vec<f32>>,
+    hit_eos: bool,
+}
+
+fn draft_chunk(
+    dev: &DeviceEngine,
+    sess: &mut DeviceSession,
+    cur: &mut StepOut,
+    gamma: usize,
+    early_exit: bool,
+    exit_th: f32,
+    scale: f64,
+    t: &mut f64,
+    energy: &mut EnergyModel,
+    rep: &mut RequestReport,
+) -> Result<DraftChunk> {
+    let start_len = sess.len;
+    let mut ch = DraftChunk {
+        start_len,
+        tokens: Vec::new(),
+        confs: Vec::new(),
+        probs: Vec::new(),
+        hit_eos: false,
+    };
+    for _ in 0..gamma {
+        let tok = argmax(&cur.probs) as u32;
+        ch.tokens.push(tok);
+        ch.confs.push(cur.probs[tok as usize]);
+        ch.probs.push(cur.probs.clone());
+        if tok == EOS {
+            // EOS is a draft token like any other (plain speculative
+            // decoding): it rides to the verifier, which may veto a
+            // premature ending. It is not stepped locally (nothing can
+            // follow it on the device).
+            ch.hit_eos = true;
+            break;
+        }
+        *cur = dev.step(sess, tok, early_exit, exit_th)?;
+        *t += cur.compute_s * scale;
+        rep.exits += cur.exited as u32;
+        rep.steps += 1;
+        energy.record_step(cur.layer_fraction);
+    }
+    Ok(ch)
+}
+
+/// Full Synera pipeline. `Hybrid` runs through the same code with its
+/// restricted parameterisation (see [`eval::method_scenario`]).
+pub fn run_synera(ctx: &mut PipelineCtx, prompt: &[u32]) -> Result<RequestReport> {
+    let params = ctx.scen.params.clone();
+    let scale = ctx.scen.device.compute_scale;
+    let exit_th = params.exit_threshold as f32;
+    let mut rep = RequestReport::default();
+    let mut energy = EnergyModel::new(
+        ctx.scen.device.joules_per_token,
+        ctx.scen.device.joules_per_byte,
+    );
+    let mut selector = Selector::new(
+        ctx.profile.c_th,
+        ctx.profile.i_th_for_budget(params.budget),
+        params.clone(),
+    );
+    let seq_exit = SeqExitPolicy::new(
+        params.seq_exit_frac,
+        params.max_new_tokens,
+        params.early_exit,
+    );
+    let req_id = ctx.rng.next_u64();
+
+    let (mut sess, mut cur) = ctx.dev.prefill(prompt)?;
+    let mut t = cur.compute_s * scale;
+    let mut cloud_len = 0usize; // tokens validated in the cloud's KV
+
+    'outer: while sess.len - prompt.len() < params.max_new_tokens {
+        let remaining = params.max_new_tokens - (sess.len - prompt.len());
+        let gamma = params.gamma.min(remaining);
+        let chunk = draft_chunk(
+            ctx.dev, &mut sess, &mut cur, gamma, params.early_exit, exit_th,
+            scale, &mut t, &mut energy, &mut rep,
+        )?;
+        if chunk.tokens.is_empty() {
+            break; // immediate EOS
+        }
+        let imps: Vec<f32> = (0..chunk.tokens.len())
+            .map(|j| sess.importance[chunk.start_len + j])
+            .collect();
+        let decision = selector.decide(&chunk.confs, &imps);
+        let gen_step = chunk.start_len - prompt.len();
+        // chunks that drafted EOS still offload: a premature EOS is
+        // exactly the kind of quality-critical prediction the LLM should
+        // get to veto (the correction supersedes the drafted ending)
+        let may_offload = seq_exit.offload_allowed(gen_step);
+
+        if !(decision.offload && may_offload) {
+            rep.local_chunks += 1;
+            for (j, &tok) in chunk.tokens.iter().enumerate() {
+                let _ = j;
+                rep.generated.push(tok);
+                rep.token_times.push(t);
+            }
+            if chunk.hit_eos {
+                break 'outer;
+            }
+            continue;
+        }
+
+        // ---------------- offload round ----------------
+        rep.offload_chunks += 1;
+        let uncached: Vec<u32> = sess.tokens[cloud_len..chunk.start_len].to_vec();
+        let dists: Vec<_> = chunk
+            .probs
+            .iter()
+            .map(|p| if params.compression { compress_dist(p, 8) } else { dense_dist(p) })
+            .collect();
+        let msg = UplinkMsg {
+            request_id: req_id,
+            device_id: 0,
+            uncached: uncached.clone(),
+            draft: chunk.tokens.clone(),
+            dists: dists.clone(),
+            is_first: cloud_len == 0,
+        };
+        let up_bytes = msg.wire_bytes();
+        rep.bytes_up += up_bytes as u64;
+        energy.record_bytes(up_bytes as u64);
+        let t_sent = t + ctx.link.uplink_s(up_bytes);
+
+        ctx.sched.submit(CloudRequest::Verify {
+            request_id: req_id,
+            device_id: 0,
+            uncached: uncached.clone(),
+            draft: chunk.tokens.clone(),
+            dists,
+            greedy: params.greedy,
+        })?;
+        // cost accounting (paper W): cloud-*generated/verified* tokens;
+        // KV prefill of uncached context is charged like prompt prefill
+        // in the cloud-centric baseline, i.e. not against W
+        rep.cloud_rows += chunk.tokens.len() as u64;
+        let mut service = 0.0;
+        let mut outcome: Option<VerifyOutcome> = None;
+        while outcome.is_none() {
+            let (events, dt) = ctx.sched.tick()?;
+            service += dt;
+            for e in events {
+                if let CloudEvent::VerifyDone { request_id, outcome: o, .. } = e {
+                    if request_id == req_id {
+                        outcome = Some(o);
+                    }
+                }
+            }
+            if outcome.is_none() && ctx.sched.is_idle() {
+                bail!("verification vanished from the scheduler");
+            }
+        }
+        let outcome = outcome.unwrap();
+        let verify_done = ctx.cloud_clock.serve(t_sent, service);
+        let reply = DownlinkMsg {
+            request_id: req_id,
+            accepted: outcome.accepted as u32,
+            next_token: outcome.next_token,
+        };
+        let down_bytes = reply.wire_bytes();
+        rep.bytes_down += down_bytes as u64;
+        energy.record_bytes(down_bytes as u64);
+        let t_result = verify_done + ctx.link.downlink_s(down_bytes);
+        rep.verify_rtts.push(t_result - t);
+
+        // cloud now holds: previous prefix + uncached + accepted drafts
+        let accepted = outcome.accepted.min(chunk.tokens.len());
+        cloud_len = chunk.start_len + accepted;
+
+        if chunk.hit_eos && accepted == chunk.tokens.len() {
+            // the verifier agreed with the drafted EOS: commit and end
+            rep.stall_s += (t_result - t).max(0.0);
+            t = t.max(t_result);
+            for &tok in &chunk.tokens {
+                rep.generated.push(tok);
+                rep.token_times.push(t);
+            }
+            break 'outer;
+        }
+
+        // ------------- stall-free parallel inference -------------
+        let mut adopted_pi = false;
+        if params.parallel_inference && chunk.tokens.len() > 1 {
+            if let Some(r_star) =
+                predict_rejection(ctx.profile.alpha, &chunk.confs, ctx.rng)
+            {
+                let alt = alternative_token(&chunk.probs[r_star], chunk.tokens[r_star]);
+                let mut spec = sess.snapshot();
+                spec.rewind(chunk.start_len + r_star);
+                let mut pi_cur =
+                    ctx.dev.step(&mut spec, alt, params.early_exit, exit_th)?;
+                let mut t_dev = t + pi_cur.compute_s * scale;
+                rep.steps += 1;
+                energy.record_step(pi_cur.layer_fraction);
+                let mut pi_tokens = vec![alt];
+                while pi_tokens.len() < 1 + params.delta
+                    && t_dev < t_result
+                    && spec.len - prompt.len() < params.max_new_tokens
+                {
+                    let tok = argmax(&pi_cur.probs) as u32;
+                    if tok == EOS {
+                        break;
+                    }
+                    pi_tokens.push(tok);
+                    pi_cur = ctx.dev.step(&mut spec, tok, params.early_exit, exit_th)?;
+                    t_dev += pi_cur.compute_s * scale;
+                    rep.steps += 1;
+                    energy.record_step(pi_cur.layer_fraction);
+                }
+                // paper §4.4 counts a hit when the actual rejection
+                // position matches the prediction (§6.5's 31–38%); we
+                // report that rate but only *adopt* the speculation when
+                // the substituted token also equals the cloud's
+                // correction — otherwise adoption would silently replace
+                // the LLM's fix with the SLM's guess and leak quality.
+                let pos_hit = accepted == r_star && accepted < chunk.tokens.len();
+                let hit = pos_hit && outcome.next_token == alt;
+                if pos_hit {
+                    rep.pi_pos_hits += 1;
+                }
+                if hit {
+                    rep.pi_hits += 1;
+                    adopted_pi = true;
+                    sess = spec;
+                    cur = pi_cur;
+                    t = t_dev.max(t_result);
+                    // committed: draft[0..r*] + pi_tokens
+                    for &tok in chunk.tokens.iter().take(r_star) {
+                        rep.generated.push(tok);
+                        rep.token_times.push(t);
+                    }
+                    for &tok in &pi_tokens {
+                        rep.generated.push(tok);
+                        rep.token_times.push(t);
+                    }
+                } else {
+                    rep.pi_misses += 1;
+                    rep.stall_s += (t_result - t_dev).max(0.0);
+                    t = t_dev.max(t_result);
+                }
+            }
+        } else {
+            // vanilla pipeline: the device stalls for the round trip
+            rep.stall_s += (t_result - t).max(0.0);
+            t = t.max(t_result);
+        }
+
+        if !adopted_pi {
+            // resume from the cloud-corrected prefix
+            sess.rewind(chunk.start_len + accepted);
+            for &tok in chunk.tokens.iter().take(accepted) {
+                rep.generated.push(tok);
+                rep.token_times.push(t);
+            }
+            if outcome.next_token == EOS {
+                break 'outer;
+            }
+            if sess.len - prompt.len() >= params.max_new_tokens {
+                break 'outer;
+            }
+            cur = ctx.dev.step(&mut sess, outcome.next_token, params.early_exit, exit_th)?;
+            t += cur.compute_s * scale;
+            rep.steps += 1;
+            energy.record_step(cur.layer_fraction);
+            rep.generated.push(outcome.next_token);
+            rep.token_times.push(t);
+        }
+        // (a drafted EOS that reaches this point was rejected by the
+        // verifier — generation continues from the correction)
+    }
+
+    ctx.sched.submit(CloudRequest::Release { request_id: req_id })?;
+    rep.total_s = t;
+    rep.energy_j = energy.total_joules();
+    rep.generated = strip_eos(rep.generated);
+    rep.generated.truncate(params.max_new_tokens);
+    Ok(rep)
+}
+
+/// Dispatch by method.
+pub fn run_request(ctx: &mut PipelineCtx, method: Method, prompt: &[u32]) -> Result<RequestReport> {
+    match method {
+        Method::EdgeCentric => run_edge_centric(ctx, prompt),
+        Method::CloudCentric => run_cloud_centric(ctx, prompt),
+        Method::EdgeFmLlm => run_edgefm(ctx, prompt),
+        Method::Hybrid | Method::Synera => run_synera(ctx, prompt),
+    }
+}

@@ -1,0 +1,380 @@
+//! Real-time threaded serving mode (the end-to-end driver behind
+//! `examples/multi_device_serving.rs` and `synera serve`).
+//!
+//! Unlike the discrete-event pipelines, this runs actual OS threads with
+//! real queues and wall-clock time: one cloud thread owns a PJRT runtime
+//! plus the verification-aware [`Scheduler`]; each device thread owns its
+//! own runtime (PJRT objects are thread-confined) and executes the
+//! Synera device loop, *really* overlapping speculative computation with
+//! the in-flight verification (PI runs while polling the reply channel).
+//! Network delays are injected as sleeps computed by the [`SimLink`].
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
+use crate::config::Scenario;
+use crate::device::codec::compress_dist;
+use crate::device::early_exit::SeqExitPolicy;
+use crate::device::offload::Selector;
+use crate::device::parallel::{alternative_token, predict_rejection};
+use crate::metrics::stats::Summary;
+use crate::model::cloud_engine::CloudEngine;
+use crate::model::device_engine::DeviceEngine;
+use crate::model::logits::argmax;
+use crate::net::link::SimLink;
+use crate::net::wire::{DownlinkMsg, UplinkMsg};
+use crate::profiling::{load_or_profile, OffloadProfile};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+use crate::workload::synthlang::Task;
+use crate::workload::vocab::EOS;
+
+/// Multi-device serving run configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub scenario: Scenario,
+    pub task: Task,
+    pub n_devices: usize,
+    pub requests_per_device: usize,
+    pub artifacts: PathBuf,
+}
+
+/// Wall-clock results of a serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub completed: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub tokens_per_s: f64,
+    pub e2e_latency: Summary,
+    pub verify_rtt: Summary,
+    pub quality: f64,
+    pub offload_rate: f64,
+}
+
+enum ToCloud {
+    Up(UplinkMsg, Sender<DownlinkMsg>),
+    Release(u64),
+    #[allow(dead_code)] Shutdown,
+}
+
+/// Run the threaded server end to end; blocks until all requests finish.
+pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
+    let (tx_cloud, rx_cloud) = channel::<ToCloud>();
+    let artifacts = cfg.artifacts.clone();
+    let llm = cfg.scenario.pair.llm.clone();
+    let greedy = cfg.scenario.params.greedy;
+
+    // ---------------- cloud thread ----------------
+    let cloud = std::thread::Builder::new()
+        .name("synera-cloud".into())
+        .spawn(move || -> Result<()> {
+            let rt = Runtime::load(artifacts)?;
+            let mut engine = CloudEngine::new(rt.model(&llm)?)?;
+            engine.warmup()?; // compile before accepting traffic
+            let mut sched = Scheduler::new(engine, 0xC10D);
+            let mut replies: HashMap<u64, Sender<DownlinkMsg>> = HashMap::new();
+            let mut open = true;
+            while open || !sched.is_idle() {
+                // drain incoming
+                loop {
+                    match rx_cloud.recv_timeout(Duration::from_micros(200)) {
+                        Ok(ToCloud::Up(msg, reply)) => {
+                            replies.insert(msg.request_id, reply);
+                            sched.submit(CloudRequest::Verify {
+                                request_id: msg.request_id,
+                                device_id: msg.device_id,
+                                uncached: msg.uncached,
+                                draft: msg.draft,
+                                dists: msg.dists,
+                                greedy,
+                            })?;
+                        }
+                        Ok(ToCloud::Release(id)) => {
+                            sched.submit(CloudRequest::Release { request_id: id })?;
+                        }
+                        Ok(ToCloud::Shutdown) => open = false,
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+                let (events, _) = sched.tick()?;
+                for e in events {
+                    if let CloudEvent::VerifyDone { request_id, outcome, .. } = e {
+                        if let Some(ch) = replies.get(&request_id) {
+                            let _ = ch.send(DownlinkMsg {
+                                request_id,
+                                accepted: outcome.accepted as u32,
+                                next_token: outcome.next_token,
+                            });
+                        }
+                    }
+                }
+            }
+            Ok(())
+        })?;
+
+    // ---------------- device threads ----------------
+    let profile = {
+        let rt = Runtime::load(cfg.artifacts.clone())?;
+        load_or_profile(
+            &rt,
+            &cfg.scenario.pair.slm,
+            cfg.scenario.pair.slm_weights.as_deref(),
+            &cfg.scenario.pair.llm,
+        )?
+    };
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for d in 0..cfg.n_devices {
+        let cfg = cfg.clone();
+        let profile = profile.clone();
+        let tx = tx_cloud.clone();
+        handles.push(std::thread::Builder::new().name(format!("synera-dev{d}")).spawn(
+            move || -> Result<DeviceStats> {
+                device_worker(d as u32, &cfg, &profile, tx)
+            },
+        )?);
+    }
+    drop(tx_cloud);
+
+    let mut all = DeviceStats::default();
+    for h in handles {
+        let s = h.join().map_err(|_| anyhow!("device thread panicked"))??;
+        all.merge(s);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    cloud.join().map_err(|_| anyhow!("cloud thread panicked"))??;
+
+    Ok(ServeReport {
+        completed: all.completed,
+        wall_s: wall,
+        throughput_rps: all.completed as f64 / wall,
+        tokens_per_s: all.tokens as f64 / wall,
+        e2e_latency: Summary::of(&all.e2e),
+        verify_rtt: Summary::of(&all.rtts),
+        quality: if all.completed > 0 { all.quality / all.completed as f64 } else { 0.0 },
+        offload_rate: if all.chunks > 0 { all.offloads as f64 / all.chunks as f64 } else { 0.0 },
+    })
+}
+
+#[derive(Default)]
+struct DeviceStats {
+    completed: usize,
+    tokens: usize,
+    quality: f64,
+    e2e: Vec<f64>,
+    rtts: Vec<f64>,
+    offloads: usize,
+    chunks: usize,
+}
+
+impl DeviceStats {
+    fn merge(&mut self, o: DeviceStats) {
+        self.completed += o.completed;
+        self.tokens += o.tokens;
+        self.quality += o.quality;
+        self.e2e.extend(o.e2e);
+        self.rtts.extend(o.rtts);
+        self.offloads += o.offloads;
+        self.chunks += o.chunks;
+    }
+}
+
+fn device_worker(
+    device_id: u32,
+    cfg: &ServeConfig,
+    profile: &OffloadProfile,
+    tx: Sender<ToCloud>,
+) -> Result<DeviceStats> {
+    let rt = Runtime::load(cfg.artifacts.clone())?;
+    let scen = &cfg.scenario;
+    let params = &scen.params;
+    let dev = DeviceEngine::new(
+        rt.model_variant(&scen.pair.slm, scen.pair.slm_weights.as_deref())?,
+        params.early_exit,
+    )?;
+    // compile all device executables before taking requests
+    let tags: Vec<&str> = if params.early_exit {
+        vec!["chunk_b1_c32", "step_p1", "step_p2", "p2_c4"]
+    } else {
+        vec!["chunk_b1_c32", "step_full"]
+    };
+    dev.model.warmup(&tags)?;
+    let mut link = SimLink::new(scen.link, 0x99 ^ device_id as u64);
+    let mut selector = Selector::new(
+        profile.c_th,
+        profile.i_th_for_budget(params.budget),
+        params.clone(),
+    );
+    let seq_exit = SeqExitPolicy::new(params.seq_exit_frac, params.max_new_tokens, params.early_exit);
+    let mut rng = Rng::new(0xD0 + device_id as u64);
+    let exit_th = params.exit_threshold as f32;
+    let mut stats = DeviceStats::default();
+
+    for r in 0..cfg.requests_per_device {
+        let sample = crate::workload::synthlang::generate(
+            cfg.task,
+            1,
+            (device_id as u64) * 1000 + r as u64,
+        );
+        let req_id = ((device_id as u64) << 32) | r as u64;
+        let t_req = Instant::now();
+        let (mut sess, mut cur) = dev.prefill(&sample.prompt)?;
+        let mut cloud_len = 0usize;
+        let mut generated: Vec<u32> = Vec::new();
+
+        'gen: while generated.len() < params.max_new_tokens {
+            let start_len = sess.len;
+            let mut draft = Vec::new();
+            let mut confs = Vec::new();
+            let mut probs_all = Vec::new();
+            let mut hit_eos = false;
+            for _ in 0..params.gamma.min(params.max_new_tokens - generated.len()) {
+                let tok = argmax(&cur.probs) as u32;
+                draft.push(tok);
+                confs.push(cur.probs[tok as usize]);
+                probs_all.push(cur.probs.clone());
+                if tok == EOS {
+                    hit_eos = true; // EOS rides to the verifier like any draft
+                    break;
+                }
+                cur = dev.step(&mut sess, tok, params.early_exit, exit_th)?;
+            }
+            if draft.is_empty() {
+                break;
+            }
+            let imps: Vec<f32> =
+                (0..draft.len()).map(|j| sess.importance[start_len + j]).collect();
+            stats.chunks += 1;
+            let dec = selector.decide(&confs, &imps);
+            if !(dec.offload && seq_exit.offload_allowed(generated.len())) {
+                generated.extend_from_slice(&draft);
+                if hit_eos {
+                    break;
+                }
+                continue;
+            }
+            stats.offloads += 1;
+
+            let uncached = sess.tokens[cloud_len..start_len].to_vec();
+            let dists = probs_all.iter().map(|p| compress_dist(p, 8)).collect::<Vec<_>>();
+            let msg = UplinkMsg {
+                request_id: req_id,
+                device_id,
+                uncached: uncached.clone(),
+                draft: draft.clone(),
+                dists,
+                is_first: cloud_len == 0,
+            };
+            let up_delay = link.uplink_s(msg.wire_bytes());
+            std::thread::sleep(Duration::from_secs_f64(up_delay));
+            let (reply_tx, reply_rx) = channel();
+            let t_sent = Instant::now();
+            tx.send(ToCloud::Up(msg, reply_tx)).map_err(|_| anyhow!("cloud gone"))?;
+
+            // ---- stall-free PI: speculate while the reply is in flight ----
+            let mut spec = None;
+            if params.parallel_inference {
+                if let Some(r_star) = predict_rejection(profile.alpha, &confs, &mut rng) {
+                    let alt = alternative_token(&probs_all[r_star], draft[r_star]);
+                    let mut s2 = sess.snapshot();
+                    s2.rewind(start_len + r_star);
+                    let mut c2 = dev.step(&mut s2, alt, params.early_exit, exit_th)?;
+                    let mut pi_tokens = vec![alt];
+                    loop {
+                        match reply_rx.try_recv() {
+                            Ok(reply) => {
+                                spec = Some((r_star, alt, s2, c2, pi_tokens, Some(reply)));
+                                break;
+                            }
+                            Err(_) => {
+                                if pi_tokens.len() >= 1 + params.delta {
+                                    spec = Some((r_star, alt, s2, c2, pi_tokens, None));
+                                    break;
+                                }
+                                let tok = argmax(&c2.probs) as u32;
+                                if tok == EOS {
+                                    spec = Some((r_star, alt, s2, c2, pi_tokens, None));
+                                    break;
+                                }
+                                pi_tokens.push(tok);
+                                c2 = dev.step(&mut s2, tok, params.early_exit, exit_th)?;
+                            }
+                        }
+                    }
+                }
+            }
+            let (reply, pi) = match spec {
+                Some((r_star, alt, s2, c2, pi_tokens, Some(reply))) => {
+                    (reply, Some((r_star, alt, s2, c2, pi_tokens)))
+                }
+                Some((r_star, alt, s2, c2, pi_tokens, None)) => {
+                    let reply = reply_rx
+                        .recv_timeout(Duration::from_secs(30))
+                        .map_err(|_| anyhow!("verify timeout"))?;
+                    (reply, Some((r_star, alt, s2, c2, pi_tokens)))
+                }
+                None => {
+                    let reply = reply_rx
+                        .recv_timeout(Duration::from_secs(30))
+                        .map_err(|_| anyhow!("verify timeout"))?;
+                    (reply, None)
+                }
+            };
+            stats.rtts.push(t_sent.elapsed().as_secs_f64());
+            let down = DownlinkMsg {
+                request_id: req_id,
+                accepted: reply.accepted,
+                next_token: reply.next_token,
+            };
+            std::thread::sleep(Duration::from_secs_f64(link.downlink_s(down.wire_bytes())));
+
+            let accepted = (reply.accepted as usize).min(draft.len());
+            cloud_len = start_len + accepted;
+            if hit_eos && accepted == draft.len() {
+                generated.extend_from_slice(&draft);
+                break 'gen; // verifier agreed with the drafted EOS
+            }
+            let mut adopted = false;
+            if let Some((r_star, alt, s2, c2, pi_tokens)) = pi {
+                if accepted == r_star && accepted < draft.len() {
+                    let _ = alt; // position-match adoption (paper §4.4)
+                    sess = s2;
+                    cur = c2;
+                    generated.extend(draft.iter().take(r_star));
+                    generated.extend(pi_tokens.iter());
+                    adopted = true;
+                }
+            }
+            if !adopted {
+                sess.rewind(start_len + accepted);
+                generated.extend(draft.iter().take(accepted));
+                if reply.next_token == EOS || generated.len() >= params.max_new_tokens {
+                    break 'gen;
+                }
+                cur = dev.step(&mut sess, reply.next_token, params.early_exit, exit_th)?;
+                generated.push(reply.next_token);
+            }
+        }
+
+        let _ = tx.send(ToCloud::Release(req_id));
+        generated.truncate(params.max_new_tokens);
+        if generated.last() == Some(&EOS) {
+            generated.pop();
+        }
+        stats.tokens += generated.len();
+        stats.quality += crate::metrics::quality::score_sample(&sample, &generated);
+        stats.e2e.push(t_req.elapsed().as_secs_f64());
+        stats.completed += 1;
+    }
+    Ok(stats)
+}

@@ -1,0 +1,49 @@
+//! Progressive early exit — the sequence-wise half (paper §4.3).
+//!
+//! The *layer-wise* half lives in the engine ([`crate::model::device_engine`]:
+//! split execution, margin threshold, deferred backfill); this module is
+//! the sequence-level policy that disables cloud verification near the
+//! tail of generation, where the SLM's trajectory is established.
+
+/// Sequence-wise exit policy: offloading is disabled once the generation
+/// step passes `frac × max_new` (paper: γ_seq = 0.8).
+#[derive(Debug, Clone, Copy)]
+pub struct SeqExitPolicy {
+    pub frac: f64,
+    pub max_new: usize,
+    pub enabled: bool,
+}
+
+impl SeqExitPolicy {
+    pub fn new(frac: f64, max_new: usize, enabled: bool) -> Self {
+        SeqExitPolicy { frac, max_new, enabled }
+    }
+
+    /// May the device still offload at generation step `t` (0-based)?
+    pub fn offload_allowed(&self, t: usize) -> bool {
+        if !self.enabled {
+            return true;
+        }
+        (t as f64) <= self.frac * self.max_new as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tail_disables_offloading() {
+        let p = SeqExitPolicy::new(0.8, 20, true);
+        assert!(p.offload_allowed(0));
+        assert!(p.offload_allowed(16));
+        assert!(!p.offload_allowed(17));
+        assert!(!p.offload_allowed(19));
+    }
+
+    #[test]
+    fn disabled_policy_always_allows() {
+        let p = SeqExitPolicy::new(0.8, 20, false);
+        assert!(p.offload_allowed(19));
+    }
+}

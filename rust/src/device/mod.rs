@@ -1,0 +1,13 @@
+//! Device runtime (paper §4.2–§4.4): selective token-level offloading,
+//! progressive early exit, stall-free parallel inference and
+//! distribution compression.
+
+pub mod codec;
+pub mod early_exit;
+pub mod offload;
+pub mod parallel;
+
+pub use codec::compress_dist;
+pub use early_exit::SeqExitPolicy;
+pub use offload::{OffloadDecision, Selector};
+pub use parallel::{predict_rejection, PiPlan};

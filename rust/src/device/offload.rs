@@ -1,0 +1,200 @@
+//! Selective token-level offloading (paper §4.2, Fig. 9/10).
+//!
+//! Two-stage dispatch for each γ-token draft chunk:
+//!
+//! 1. **Confidence (coarse)** — `P_conf(c)`: a scaled sigmoid over the
+//!    chunk's mean confidence; chunks at or below `c_th` always pass to
+//!    stage 2, confident chunks are increasingly retained locally.
+//! 2. **Importance (fine)** — `P_imp(i)`: a three-tier scaled sigmoid
+//!    over the chunk's mean importance with lower bound `i_th/2`
+//!    (never offload) and upper bound `i_th` (always offload). `i_th`
+//!    is the *budget knob*: the profiler maps a budget fraction to the
+//!    corresponding percentile of the importance distribution.
+//!
+//! The dispatch draws come from the deterministic splitmix64 stream, so
+//! experiments are reproducible.
+
+use crate::config::SyneraParams;
+use crate::util::rng::Rng;
+
+/// Per-chunk offloading decision with its intermediate scores
+/// (logged by the motivation benches, Fig. 4/5).
+#[derive(Debug, Clone, Copy)]
+pub struct OffloadDecision {
+    pub offload: bool,
+    pub p_conf: f64,
+    pub p_imp: f64,
+    pub mean_conf: f64,
+    pub mean_imp: f64,
+}
+
+/// Stateful dispatcher for one device session.
+pub struct Selector {
+    /// Profiled coarse threshold (paper: 0.7–1.0; from profile.json).
+    pub c_th: f64,
+    /// Fine threshold = importance percentile at (1 − budget).
+    pub i_th: f64,
+    pub params: SyneraParams,
+    rng: Rng,
+}
+
+impl Selector {
+    pub fn new(c_th: f64, i_th: f64, params: SyneraParams) -> Selector {
+        let seed = params.seed ^ 0x5E1E_C70F;
+        Selector { c_th, i_th, params, rng: Rng::new(seed) }
+    }
+
+    /// `P_conf` (paper Eq. 1): 1 below the threshold, scaled sigmoid above.
+    pub fn p_conf(&self, c: f64) -> f64 {
+        if c <= self.c_th {
+            return 1.0;
+        }
+        if self.c_th >= 1.0 {
+            return 1.0;
+        }
+        let norm = (c - self.c_th) / (1.0 - self.c_th) - 0.5;
+        1.0 / (1.0 + (self.params.k_conf * norm).exp())
+    }
+
+    /// `P_imp` (paper Eq. 2): 0 below `i_th/2`, 1 above `i_th`, scaled
+    /// sigmoid (θ < 0, so increasing) in between.
+    pub fn p_imp(&self, i: f64) -> f64 {
+        let half = self.i_th / 2.0;
+        if i <= half {
+            return 0.0;
+        }
+        if i > self.i_th {
+            return 1.0;
+        }
+        if half <= 0.0 {
+            return 1.0;
+        }
+        let norm = (i - half) / half - 0.5;
+        1.0 / (1.0 + (self.params.theta_imp * norm).exp())
+    }
+
+    /// Decide for one draft chunk. `confs`/`imps` are the per-draft-token
+    /// confidence and accumulated-importance signals.
+    pub fn decide(&mut self, confs: &[f32], imps: &[f32]) -> OffloadDecision {
+        let n = confs.len().max(1) as f64;
+        let mean_conf = confs.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let mean_imp = imps.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let p_conf = self.p_conf(mean_conf);
+        let p_imp = self.p_imp(mean_imp);
+
+        if self.params.random_offload {
+            let offload = self.rng.f64() < self.params.budget;
+            return OffloadDecision { offload, p_conf, p_imp, mean_conf, mean_imp };
+        }
+        let offload = match (self.params.use_conf, self.params.use_imp) {
+            (true, true) => {
+                // Fig. 10: coarse filter retains confident chunks; the
+                // survivors get the fine-grained budgeted decision.
+                self.rng.f64() < p_conf && self.rng.f64() < p_imp
+            }
+            (true, false) => self.rng.f64() < p_conf,
+            (false, true) => self.rng.f64() < p_imp,
+            (false, false) => false,
+        };
+        OffloadDecision { offload, p_conf, p_imp, mean_conf, mean_imp }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sel(c_th: f64, i_th: f64) -> Selector {
+        Selector::new(c_th, i_th, SyneraParams::default())
+    }
+
+    #[test]
+    fn p_conf_shape() {
+        let s = sel(0.7, 1.0);
+        assert_eq!(s.p_conf(0.3), 1.0);
+        assert_eq!(s.p_conf(0.7), 1.0);
+        assert!(s.p_conf(0.71) > 0.9); // continuous at the threshold
+        assert!(s.p_conf(0.99) < 0.05); // confident → retained locally
+        let mid = s.p_conf(0.85);
+        assert!((mid - 0.5).abs() < 0.01, "{mid}"); // sigmoid midpoint
+    }
+
+    #[test]
+    fn p_imp_three_tiers() {
+        let s = sel(0.7, 2.0);
+        assert_eq!(s.p_imp(0.9), 0.0); // ≤ i_th/2 stays local
+        assert_eq!(s.p_imp(2.4), 1.0); // > i_th always offloads
+        assert!(s.p_imp(1.05) < 0.05); // just above lower bound
+        assert!(s.p_imp(1.99) > 0.9); // just below upper bound
+        let mid = s.p_imp(1.5);
+        assert!((mid - 0.5).abs() < 0.01, "{mid}");
+    }
+
+    #[test]
+    fn p_imp_monotone() {
+        let s = sel(0.7, 2.0);
+        let mut prev = -1.0;
+        for i in 0..100 {
+            let x = i as f64 * 0.03;
+            let p = s.p_imp(x);
+            assert!(p >= prev - 1e-12, "non-monotone at {x}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn budget_zero_never_offloads_by_importance() {
+        // i_th at the maximum importance → almost nothing exceeds it
+        let mut s = sel(0.0, f64::MAX);
+        // c > c_th=0 → p_conf < 1 but the imp stage gates everything
+        let d = s.decide(&[0.5; 4], &[0.1; 4]);
+        assert_eq!(d.p_imp, 0.0);
+        assert!(!d.offload || d.p_imp > 0.0);
+    }
+
+    #[test]
+    fn uncertain_and_important_chunks_offload() {
+        let mut s = sel(0.7, 0.5);
+        let mut n_off = 0;
+        for _ in 0..200 {
+            let d = s.decide(&[0.2; 4], &[0.9; 4]); // low conf, high imp
+            n_off += d.offload as usize;
+        }
+        assert!(n_off > 190, "{n_off}"); // p_conf=1, p_imp=1
+    }
+
+    #[test]
+    fn confident_chunks_stay_local() {
+        let mut s = sel(0.7, 0.5);
+        let mut n_off = 0;
+        for _ in 0..200 {
+            let d = s.decide(&[0.99; 4], &[0.9; 4]);
+            n_off += d.offload as usize;
+        }
+        assert!(n_off < 10, "{n_off}"); // coarse filter retains
+    }
+
+    #[test]
+    fn ablation_conf_only_ignores_importance() {
+        let mut p = SyneraParams::default();
+        p.use_imp = false;
+        let mut s = Selector::new(0.7, 0.5, p);
+        let mut n_off = 0;
+        for _ in 0..200 {
+            n_off += s.decide(&[0.2; 4], &[0.0; 4]).offload as usize;
+        }
+        assert!(n_off > 190); // low confidence alone triggers offload
+    }
+
+    #[test]
+    fn decisions_deterministic_per_seed() {
+        let mut a = sel(0.7, 1.0);
+        let mut b = sel(0.7, 1.0);
+        for i in 0..50 {
+            let c = 0.5 + 0.3 * ((i % 7) as f32 / 7.0);
+            let da = a.decide(&[c; 4], &[1.0; 4]);
+            let db = b.decide(&[c; 4], &[1.0; 4]);
+            assert_eq!(da.offload, db.offload);
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Stall-free parallel inference (paper §4.4).
+//!
+//! While the cloud verifies a draft chunk, the device keeps generating
+//! from a *predicted* post-verification prefix instead of stalling:
+//!
+//! 1. **Rejection position prediction** — sample `r*` from the
+//!    confidence-adjusted capped geometric
+//!    `P(r=t) ∝ (1−α)αᵗ · (1−c_t)`, where α is the profiled per-token
+//!    acceptance probability and `c_t` the draft confidences.
+//! 2. **Parallel inference** — rewind to `r*`, substitute the rejected
+//!    token with an alternative from the local top-3, and continue for δ
+//!    tokens. On downlink, the speculation is adopted iff the cloud's
+//!    actual `(rejection position, corrected token)` matches the bet.
+
+use crate::model::logits::top_k;
+use crate::util::rng::Rng;
+
+/// The device's speculative bet for one in-flight verification.
+#[derive(Debug, Clone)]
+pub struct PiPlan {
+    /// Predicted rejection position `r* ∈ [0, γ)`.
+    pub r_star: usize,
+    /// The alternative token substituted at `r*`.
+    pub alt_token: u32,
+}
+
+/// Sample a rejection position from the confidence-adjusted capped
+/// geometric (paper §4.4). Returns `None` when γ = 0.
+pub fn predict_rejection(alpha: f64, confs: &[f32], rng: &mut Rng) -> Option<usize> {
+    let gamma = confs.len();
+    if gamma == 0 {
+        return None;
+    }
+    // capped geometric base: P(r=t) = (1-α)α^t  (t < γ)
+    let mut w = Vec::with_capacity(gamma);
+    let mut total = 0.0f64;
+    for (t, &c) in confs.iter().enumerate() {
+        let base = (1.0 - alpha) * alpha.powi(t as i32);
+        let adj = base * (1.0 - c as f64).max(1e-6);
+        w.push(adj);
+        total += adj;
+    }
+    if total <= 0.0 {
+        return Some(0);
+    }
+    let u = rng.f64() * total;
+    let mut acc = 0.0;
+    for (t, &x) in w.iter().enumerate() {
+        acc += x;
+        if u < acc {
+            return Some(t);
+        }
+    }
+    Some(gamma - 1)
+}
+
+/// Choose the substitute token at the predicted rejection position: the
+/// best *different* candidate among the local top-3 (paper: "sampled
+/// from the top-3 candidates"; greedy mode takes the strongest).
+pub fn alternative_token(probs: &[f32], rejected: u32) -> u32 {
+    for &i in &top_k(probs, 3) {
+        if i as u32 != rejected {
+            return i as u32;
+        }
+    }
+    rejected // degenerate distribution; keep the original
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_confidence_positions_attract_prediction() {
+        let mut rng = Rng::new(11);
+        // token 2 is very unconfident → predictions should concentrate there
+        let confs = [0.95f32, 0.95, 0.05, 0.95];
+        let mut hist = [0usize; 4];
+        for _ in 0..2000 {
+            hist[predict_rejection(0.8, &confs, &mut rng).unwrap()] += 1;
+        }
+        assert!(hist[2] > hist[0] && hist[2] > hist[1] && hist[2] > hist[3], "{hist:?}");
+    }
+
+    #[test]
+    fn geometric_decay_prefers_early_positions_at_equal_conf() {
+        let mut rng = Rng::new(3);
+        let confs = [0.5f32; 4];
+        let mut hist = [0usize; 4];
+        for _ in 0..4000 {
+            hist[predict_rejection(0.6, &confs, &mut rng).unwrap()] += 1;
+        }
+        assert!(hist[0] > hist[1] && hist[1] > hist[2] && hist[2] > hist[3], "{hist:?}");
+    }
+
+    #[test]
+    fn alternative_differs_from_rejected() {
+        let mut p = vec![0.0f32; 8];
+        p[3] = 0.6;
+        p[5] = 0.3;
+        p[1] = 0.1;
+        assert_eq!(alternative_token(&p, 3), 5);
+        assert_eq!(alternative_token(&p, 5), 3);
+    }
+
+    #[test]
+    fn empty_chunk_yields_none() {
+        let mut rng = Rng::new(1);
+        assert!(predict_rejection(0.8, &[], &mut rng).is_none());
+    }
+}

@@ -1,0 +1,44 @@
+//! # Synera — synergistic device–cloud LLM serving
+//!
+//! Reproduction of *Synera: Synergistic LLM Serving across Device and
+//! Cloud at Scale* (CS.DC 2025) as a three-layer Rust + JAX + Pallas
+//! stack. This crate is Layer 3: the serving system. It loads the
+//! AOT-compiled model executables from `artifacts/` (built once by
+//! `make artifacts`; Python never runs on the request path) and
+//! implements:
+//!
+//! * the **device runtime** — SLM draft loop with selective token-level
+//!   offloading ([`device::offload`]), progressive early exit
+//!   ([`device::early_exit`]), stall-free parallel inference
+//!   ([`device::parallel`]) and top-k distribution compression
+//!   ([`device::codec`]);
+//! * the **cloud runtime** — verification-aware scheduler
+//!   ([`cloud::scheduler`], paper Algorithm 1) over a slot-based
+//!   continuous-batching engine ([`cloud::engine`]) with chunked
+//!   partial prefill and speculative verification ([`cloud::verifier`]);
+//! * the **substrates** the paper's testbed provided: a bandwidth/RTT
+//!   network simulator ([`net`]), the seven SynthLang datasets
+//!   ([`workload`]), quality/latency/cost/energy metrics ([`metrics`]),
+//!   the offline profiler ([`profiling`], paper §5) and all four
+//!   baselines ([`baselines`]).
+//!
+//! Entry points: the `synera` binary (`serve`, `generate`, `eval`,
+//! `profile`), `examples/`, and one bench target per paper table/figure.
+
+pub mod baselines;
+pub mod bench;
+pub mod cloud;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod profiling;
+pub mod runtime;
+pub mod testutil;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type (anyhow-based; PJRT errors convert via `?`).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,237 @@
+//! `synera` — the leader CLI.
+//!
+//! ```text
+//! synera generate  --slm s1b --llm l13b --task xsum --index 0 [--budget 0.2]
+//! synera eval      --method synera --slm s1b --llm l13b --task xsum --n 16
+//! synera profile   [--slm s1b --llm l13b] [--refresh]
+//! synera serve     --devices 4 --requests 8 --task xsum
+//! synera info
+//! ```
+
+use anyhow::{bail, Context, Result};
+use synera::baselines::ALL_METHODS;
+use synera::config::Scenario;
+use synera::coordinator::eval::{eval_method, EvalOptions};
+use synera::coordinator::pipeline::Method;
+use synera::coordinator::serve::{run_threaded, ServeConfig};
+use synera::profiling;
+use synera::runtime::{artifacts_dir, Runtime};
+use synera::util::cli::Args;
+use synera::workload::synthlang::Task;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_method(s: &str) -> Result<Method> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "edge" | "edge-centric" => Method::EdgeCentric,
+        "cloud" | "cloud-centric" => Method::CloudCentric,
+        "hybrid" => Method::Hybrid,
+        "edgefm" | "edgefm-llm" => Method::EdgeFmLlm,
+        "synera" => Method::Synera,
+        _ => bail!("unknown method {s:?} (edge|cloud|hybrid|edgefm|synera)"),
+    })
+}
+
+fn scenario_from(args: &Args) -> Result<Scenario> {
+    let slm = args.get_or("slm", "s1b");
+    let llm = args.get_or("llm", "l13b");
+    let mut scen = Scenario::default_pair(&slm, &llm);
+    scen.params.budget = args.get_f64("budget", scen.params.budget)?;
+    scen.params.max_new_tokens = args.get_usize("max-new", scen.params.max_new_tokens)?;
+    scen.link.bandwidth_mbps = args.get_f64("bandwidth", scen.link.bandwidth_mbps)?;
+    if let Some(w) = args.get("slm-weights") {
+        scen.pair.slm_weights = Some(w.to_string());
+    }
+    Ok(scen)
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("info") => info(),
+        Some("generate") => generate(&args),
+        Some("eval") => eval(&args),
+        Some("profile") => profile(&args),
+        Some("serve") => serve(&args),
+        _ => {
+            eprintln!(
+                "usage: synera <info|generate|eval|profile|serve> [--opts]\n\
+                 see rust/src/main.rs header for examples"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    let rt = Runtime::load_default()?;
+    println!("artifacts: {} (fingerprint {})", rt.dir.display(), rt.meta.fingerprint);
+    println!(
+        "gamma={} chunk={} cloud_slots={} vocab={}",
+        rt.meta.gamma, rt.meta.chunk, rt.meta.cloud_slots, rt.meta.vocab
+    );
+    for (name, m) in &rt.meta.models {
+        println!(
+            "  {name:<6} {:>8} params  d={} L={} H={} role={} execs={}",
+            m.param_count(),
+            m.d_model,
+            m.n_layers,
+            m.n_heads,
+            m.role,
+            m.execs.len()
+        );
+    }
+    Ok(())
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let scen = scenario_from(args)?;
+    let task = Task::from_name(&args.get_or("task", "xsum")).context("bad --task")?;
+    let index = args.get_usize("index", 0)? as u64;
+    let method = parse_method(&args.get_or("method", "synera"))?;
+
+    let sample = synera::workload::synthlang::generate(task, 1, index);
+    let profile = profiling::load_or_profile(
+        &rt,
+        &scen.pair.slm,
+        scen.pair.slm_weights.as_deref(),
+        &scen.pair.llm,
+    )?;
+    let dev = synera::model::DeviceEngine::new(
+        rt.model_variant(&scen.pair.slm, scen.pair.slm_weights.as_deref())?,
+        scen.params.early_exit,
+    )?;
+    let mut sched = synera::cloud::Scheduler::new(
+        synera::model::CloudEngine::new(rt.model(&scen.pair.llm)?)?,
+        scen.params.seed,
+    );
+    let mut link = synera::net::SimLink::new(scen.link, 1);
+    let mut clock = synera::coordinator::pipeline::CloudClock::default();
+    let mut rng = synera::util::rng::Rng::new(scen.params.seed);
+    let mut ctx = synera::coordinator::pipeline::PipelineCtx {
+        dev: &dev,
+        sched: &mut sched,
+        scen: &scen,
+        profile: &profile,
+        link: &mut link,
+        cloud_clock: &mut clock,
+        rng: &mut rng,
+    };
+    let rep = synera::coordinator::pipeline::run_request(&mut ctx, method, &sample.prompt)?;
+    println!("prompt  : {:?}", sample.prompt);
+    println!("answer  : {:?}", sample.answer);
+    println!("generated: {:?}", rep.generated);
+    println!(
+        "quality={:.3} latency={:.3}s tbt={:.1}ms offloads={} local={} pi={}+{} exits={}",
+        synera::metrics::quality::score_sample(&sample, &rep.generated),
+        rep.total_s,
+        rep.tbt() * 1e3,
+        rep.offload_chunks,
+        rep.local_chunks,
+        rep.pi_hits,
+        rep.pi_misses,
+        rep.exits,
+    );
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let scen = scenario_from(args)?;
+    let task = Task::from_name(&args.get_or("task", "xsum")).context("bad --task")?;
+    let n = args.get_usize("n", 16)?;
+    let methods: Vec<Method> = match args.get("method") {
+        Some("all") | None => ALL_METHODS.to_vec(),
+        Some(m) => vec![parse_method(m)?],
+    };
+    println!(
+        "pair={} task={} n={n} budget={}",
+        scen.pair.label(),
+        task.name(),
+        scen.params.budget
+    );
+    for m in methods {
+        let rep = eval_method(&rt, &scen, m, &EvalOptions { n_samples: n, task })?;
+        println!(
+            "{:<13} quality={:.3} tbt={:6.1}ms p95={:6.1}ms cost={:.4} W={:.2} offl={:.2} pi_hit={:.2} exits={:.2}",
+            rep.method.name(),
+            rep.quality,
+            rep.tbt_s * 1e3,
+            rep.latency.p95 * 1e3,
+            rep.cost * 1e3,
+            rep.w,
+            rep.offload_rate,
+            rep.pi_hit_rate,
+            rep.exit_rate,
+        );
+    }
+    Ok(())
+}
+
+fn profile(args: &Args) -> Result<()> {
+    let rt = Runtime::load_default()?;
+    if args.has_flag("refresh") {
+        profiling::clear_cache(&rt.dir);
+    }
+    let pairs: Vec<(String, Option<String>, String)> = match (args.get("slm"), args.get("llm")) {
+        (Some(s), Some(l)) => vec![(s.into(), args.get("slm-weights").map(|w| w.into()), l.into())],
+        _ => vec![
+            ("s160m".into(), None, "l13b".into()),
+            ("s1b".into(), None, "l13b".into()),
+            ("s7b".into(), None, "l70b".into()),
+        ],
+    };
+    for (slm, w, llm) in pairs {
+        let p = profiling::load_or_profile(&rt, &slm, w.as_deref(), &llm)?;
+        println!(
+            "{}&{}: c_th={:.3} alpha={:.3} i_th(b=0.2)={:.3} ppl_th={:.2}",
+            p.slm,
+            p.llm,
+            p.c_th,
+            p.alpha,
+            p.i_th_for_budget(0.2),
+            p.ppl_threshold
+        );
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let scen = scenario_from(args)?;
+    let task = Task::from_name(&args.get_or("task", "xsum")).context("bad --task")?;
+    let cfg = ServeConfig {
+        scenario: scen,
+        task,
+        n_devices: args.get_usize("devices", 4)?,
+        requests_per_device: args.get_usize("requests", 4)?,
+        artifacts: artifacts_dir(),
+    };
+    println!(
+        "serving: {} devices × {} requests, pair={}, task={}",
+        cfg.n_devices,
+        cfg.requests_per_device,
+        cfg.scenario.pair.label(),
+        task.name()
+    );
+    let rep = run_threaded(&cfg)?;
+    println!(
+        "completed={} wall={:.2}s throughput={:.2} req/s tokens/s={:.1}",
+        rep.completed, rep.wall_s, rep.throughput_rps, rep.tokens_per_s
+    );
+    println!(
+        "e2e p50={:.0}ms p95={:.0}ms  verify-rtt p50={:.0}ms p95={:.0}ms  quality={:.3} offload={:.2}",
+        rep.e2e_latency.p50 * 1e3,
+        rep.e2e_latency.p95 * 1e3,
+        rep.verify_rtt.p50 * 1e3,
+        rep.verify_rtt.p95 * 1e3,
+        rep.quality,
+        rep.offload_rate,
+    );
+    Ok(())
+}

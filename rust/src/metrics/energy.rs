@@ -1,0 +1,77 @@
+//! Device energy model (Table 5 substitute for `tegrastats`).
+//!
+//! Energy is proportional to executed work: each decode step costs the
+//! device profile's J/token scaled by the fraction of layers actually
+//! executed (early exit runs fewer), plus a radio cost per byte moved.
+//! This reproduces Table 5's *relative* findings (EE saves energy, PI
+//! adds some, Synera nets out ≈ even) from first principles.
+
+/// Energy accounting for one device over one request/benchmark.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    /// Joules for one full-depth decode step on this device profile.
+    pub joules_per_token: f64,
+    /// Radio energy per transmitted/received byte (J/B).
+    pub joules_per_byte: f64,
+    total_j: f64,
+    tokens: u64,
+}
+
+impl EnergyModel {
+    pub fn new(joules_per_token: f64, joules_per_byte: f64) -> Self {
+        EnergyModel { joules_per_token, joules_per_byte, total_j: 0.0, tokens: 0 }
+    }
+
+    /// Record one decode step that executed `layer_fraction` of the model
+    /// (1.0 = full depth, e.g. 0.75 when early exit fired at 3/4 layers).
+    pub fn record_step(&mut self, layer_fraction: f64) {
+        self.total_j += self.joules_per_token * layer_fraction;
+        self.tokens += 1;
+    }
+
+    /// Record radio activity (uplink + downlink bytes).
+    pub fn record_bytes(&mut self, bytes: u64) {
+        self.total_j += self.joules_per_byte * bytes as f64;
+    }
+
+    pub fn total_joules(&self) -> f64 {
+        self.total_j
+    }
+
+    pub fn joules_per_generated_token(&self) -> f64 {
+        if self.tokens == 0 {
+            0.0
+        } else {
+            self.total_j / self.tokens as f64
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.total_j = 0.0;
+        self.tokens = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn early_exit_saves_energy() {
+        let mut full = EnergyModel::new(1.86, 0.0);
+        let mut ee = EnergyModel::new(1.86, 0.0);
+        for _ in 0..100 {
+            full.record_step(1.0);
+            ee.record_step(0.75);
+        }
+        assert!(ee.total_joules() < full.total_joules());
+        assert!((full.joules_per_generated_token() - 1.86).abs() < 1e-9);
+    }
+
+    #[test]
+    fn radio_energy_accumulates() {
+        let mut e = EnergyModel::new(0.0, 1e-6);
+        e.record_bytes(1_000_000);
+        assert!((e.total_joules() - 1.0).abs() < 1e-9);
+    }
+}

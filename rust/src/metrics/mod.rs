@@ -1,0 +1,11 @@
+//! Quality, latency, cost and energy metrics (paper §6.1 "Metrics").
+
+pub mod cost;
+pub mod energy;
+pub mod quality;
+pub mod stats;
+
+pub use cost::{CostModel, PackingFactors};
+pub use energy::EnergyModel;
+pub use quality::{accuracy, rouge1, score_sample};
+pub use stats::{LatencyRecorder, Summary};

@@ -1,0 +1,89 @@
+//! Generation-quality metrics: Rouge-1 F1 over token ids and exact-match
+//! accuracy — the paper's Table 2 metric assignment (CSQA/SST2/LLQA →
+//! accuracy, summarisation/QA-generation → Rouge-1).
+
+use std::collections::BTreeMap;
+
+use crate::workload::synthlang::Sample;
+
+/// Rouge-1 F1 between predicted and reference token sequences, on the
+/// same 0–1 scale the paper reports as 0–100%.
+pub fn rouge1(pred: &[u32], reference: &[u32]) -> f64 {
+    if pred.is_empty() || reference.is_empty() {
+        return 0.0;
+    }
+    let mut cp: BTreeMap<u32, usize> = BTreeMap::new();
+    let mut cr: BTreeMap<u32, usize> = BTreeMap::new();
+    for &t in pred {
+        *cp.entry(t).or_insert(0) += 1;
+    }
+    for &t in reference {
+        *cr.entry(t).or_insert(0) += 1;
+    }
+    let overlap: usize = cr
+        .iter()
+        .map(|(t, &n)| n.min(cp.get(t).copied().unwrap_or(0)))
+        .sum();
+    if overlap == 0 {
+        return 0.0;
+    }
+    let p = overlap as f64 / pred.len() as f64;
+    let r = overlap as f64 / reference.len() as f64;
+    2.0 * p * r / (p + r)
+}
+
+/// Exact-match on the first answer token (classification tasks decode a
+/// single label/value token).
+pub fn accuracy(pred: &[u32], reference: &[u32]) -> f64 {
+    if pred.first() == reference.first() && !reference.is_empty() {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Task-appropriate quality score for a generated continuation.
+pub fn score_sample(sample: &Sample, generated: &[u32]) -> f64 {
+    if sample.task.is_classification() {
+        accuracy(generated, &sample.answer)
+    } else {
+        rouge1(generated, &sample.answer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rouge_perfect_and_empty() {
+        assert_eq!(rouge1(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(rouge1(&[], &[1]), 0.0);
+        assert_eq!(rouge1(&[1], &[]), 0.0);
+        assert_eq!(rouge1(&[4, 5], &[1, 2]), 0.0);
+    }
+
+    #[test]
+    fn rouge_partial_overlap() {
+        // pred {1,2}, ref {2,3}: overlap 1, p=0.5, r=0.5 → f1=0.5
+        assert!((rouge1(&[1, 2], &[2, 3]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge_counts_multiplicity() {
+        // pred [7,7], ref [7]: overlap 1, p=0.5, r=1 → 2/3
+        assert!((rouge1(&[7, 7], &[7]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge_order_invariant() {
+        assert_eq!(rouge1(&[1, 2, 3], &[3, 2, 1]), 1.0);
+    }
+
+    #[test]
+    fn accuracy_first_token() {
+        assert_eq!(accuracy(&[5, 9], &[5]), 1.0);
+        assert_eq!(accuracy(&[9, 5], &[5]), 0.0);
+        assert_eq!(accuracy(&[], &[5]), 0.0);
+    }
+}

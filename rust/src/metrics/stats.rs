@@ -1,0 +1,118 @@
+//! Latency recording and summary statistics (mean / p50 / p95 / p99).
+
+use std::time::Duration;
+
+/// Summary statistics over a set of f64 observations.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub std: f64,
+}
+
+impl Summary {
+    pub fn of(values: &[f64]) -> Summary {
+        if values.is_empty() {
+            return Summary::default();
+        }
+        let mut v: Vec<f64> = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| v[(((n - 1) as f64) * p).round() as usize];
+        Summary {
+            n,
+            mean,
+            min: v[0],
+            max: v[n - 1],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            std: var.sqrt(),
+        }
+    }
+}
+
+/// Accumulates per-token / per-request latencies (in seconds).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    values: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.values.push(seconds);
+    }
+
+    pub fn record_duration(&mut self, d: Duration) {
+        self.values.push(d.as_secs_f64());
+    }
+
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.values.extend_from_slice(&other.values);
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.values)
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.p50, 3.0); // nearest-rank on 4 samples
+    }
+
+    #[test]
+    fn summary_empty_is_zero() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let v: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let s = Summary::of(&v);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!((s.p50 - 500.0).abs() < 2.0);
+        assert!((s.p95 - 949.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn recorder_merge() {
+        let mut a = LatencyRecorder::new();
+        a.record(1.0);
+        let mut b = LatencyRecorder::new();
+        b.record(3.0);
+        a.merge(&b);
+        assert_eq!(a.summary().n, 2);
+        assert_eq!(a.summary().mean, 2.0);
+    }
+}

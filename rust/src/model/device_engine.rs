@@ -1,0 +1,355 @@
+//! Device-side SLM engine: B=1 prefill/decode over the AOT executables,
+//! with optional split execution for layer-wise early exit (paper §4.3).
+//!
+//! Split mode runs `step_p1` (layers `[0, k)` + shared exit head) every
+//! step; when the exit margin clears the threshold the token is emitted
+//! from the exit logits and the deep layers are **deferred**: the hidden
+//! state queues up and is flushed through the `p2_c4` backfill executable
+//! before the next full-depth event (a non-exited step or an offload),
+//! keeping the deep KV cache dense. This is CALM-style state propagation
+//! adapted to the AOT setting — exits save real compute as long as they
+//! cluster, and the conf/imp offloading signals are available right after
+//! part 1, which is the paper's primary goal for this module.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::model::logits::{argmax, margin_top12, softmax};
+use crate::runtime::{KvCache, Model};
+
+/// Outcome of one decode step.
+#[derive(Debug, Clone)]
+pub struct StepOut {
+    /// Softmax distribution the token was drawn from (exit or final head).
+    pub probs: Vec<f32>,
+    /// Greedy token (callers may re-sample from `probs`).
+    pub token: u32,
+    /// Top-1 probability — the paper's confidence score.
+    pub confidence: f32,
+    /// Top-1 − top-2 margin (early-exit signal).
+    pub margin: f32,
+    /// True when the step exited at the split layer.
+    pub exited: bool,
+    /// Fraction of layers executed by this step (energy accounting).
+    pub layer_fraction: f64,
+    /// Measured PJRT compute seconds for this step (incl. any backfill).
+    pub compute_s: f64,
+}
+
+/// Per-request device state. Cheap to snapshot (all host vectors), which
+/// is how stall-free parallel inference rolls back mispredictions.
+#[derive(Clone)]
+pub struct DeviceSession {
+    /// Prompt + committed generation (the cache holds K/V for all of it).
+    pub tokens: Vec<u32>,
+    /// Tokens committed to the part-1 (or full) cache.
+    pub len: usize,
+    /// Tokens committed to the part-2 (deep) cache; `len - p2_len` hidden
+    /// states are queued in `pending`.
+    pub p2_len: usize,
+    kv_full: Option<KvCache>,
+    kv1: Option<KvCache>,
+    kv2: Option<KvCache>,
+    /// Deferred part-2 inputs: hidden states of exited positions
+    /// (contiguous from `p2_len`).
+    pending: Vec<Vec<f32>>,
+    /// Accumulated per-position importance mass (kernel colsums summed
+    /// over steps — the H2O-style online importance signal).
+    pub importance: Vec<f32>,
+    /// Number of generated (non-prompt) tokens.
+    pub generated: usize,
+    /// Mean next-token NLL of the prompt under this SLM (EdgeFM-LLM's
+    /// input-level offloading signal; ppl = exp of this).
+    pub prompt_nll: f64,
+}
+
+impl DeviceSession {
+    /// Rollback target for speculative work: restoring a clone reverts
+    /// caches, queues and counters (stale KV beyond `len` is masked out).
+    pub fn snapshot(&self) -> DeviceSession {
+        self.clone()
+    }
+
+    /// Rewind the committed length to `new_len` (≥ prompt length). Stale
+    /// KV beyond it is never attended to (position masking), so this is
+    /// O(dropped) bookkeeping — the rollback primitive behind both
+    /// verification corrections and PI mispredictions.
+    pub fn rewind(&mut self, new_len: usize) {
+        assert!(new_len <= self.len, "rewind {new_len} > len {}", self.len);
+        let drop = self.len - new_len;
+        self.tokens.truncate(self.tokens.len() - drop);
+        self.len = new_len;
+        self.generated -= drop.min(self.generated);
+        // pending holds hidden states for positions [p2_len, len);
+        // dropping the tail keeps the invariant p2_len + pending == len
+        while !self.pending.is_empty() && self.p2_len + self.pending.len() > new_len {
+            self.pending.pop();
+        }
+        // the deep cache may already cover positions ≥ new_len (full mode,
+        // or split mode after a backfill): clamp — stale deep KV beyond the
+        // logical length is position-masked and never attended to
+        self.p2_len = self.p2_len.min(new_len);
+    }
+
+    /// Prompt perplexity under the SLM.
+    pub fn prompt_ppl(&self) -> f64 {
+        self.prompt_nll.exp()
+    }
+}
+
+/// SLM executor bound to one model variant.
+pub struct DeviceEngine {
+    pub model: Rc<Model>,
+    /// Execute split (early-exit capable) decode steps.
+    pub split: bool,
+}
+
+impl DeviceEngine {
+    pub fn new(model: Rc<Model>, split: bool) -> Result<DeviceEngine> {
+        if model.meta.role != "device" {
+            bail!("{} is not a device model", model.meta.name);
+        }
+        Ok(DeviceEngine { model, split })
+    }
+
+    fn dims(&self) -> (usize, usize, usize, usize, usize) {
+        let m = &self.model.meta;
+        (m.n_layers, m.max_len, m.n_heads, m.d_head, m.split_layer)
+    }
+
+    /// Prefill the prompt in chunks of 32; returns the session plus the
+    /// distribution over the first generated token.
+    pub fn prefill(&self, prompt: &[u32]) -> Result<(DeviceSession, StepOut)> {
+        let (l, m, h, dh, split) = self.dims();
+        if prompt.is_empty() || prompt.len() > m {
+            bail!("prompt length {} out of range (max {m})", prompt.len());
+        }
+        let chunk = self.model.meta.exec("chunk_b1_c32")?.c;
+        let mut kv = KvCache::new(l, 1, m, h, dh);
+        let mut importance = vec![0f32; m];
+        let t0 = Instant::now();
+        let mut last_logits: Vec<f32> = Vec::new();
+        let mut pos = 0usize;
+        let mut nll_sum = 0f64;
+        while pos < prompt.len() {
+            let n = (prompt.len() - pos).min(chunk);
+            let mut toks = vec![0i32; chunk];
+            for i in 0..n {
+                toks[i] = prompt[pos + i] as i32;
+            }
+            let out = self.model.run_chunk(
+                "chunk_b1_c32",
+                &toks,
+                &[pos as i32],
+                &[n as i32],
+                &mut kv,
+            )?;
+            for (a, b) in importance.iter_mut().zip(&out.importance) {
+                *a += b;
+            }
+            let v = self.model.meta.vocab;
+            // prompt NLL: row i predicts prompt[pos+i+1]
+            for i in 0..n {
+                let next = if pos + i + 1 < prompt.len() {
+                    prompt[pos + i + 1]
+                } else {
+                    break;
+                };
+                let row = softmax(&out.logits[i * v..(i + 1) * v]);
+                nll_sum -= (row[next as usize].max(1e-9) as f64).ln();
+            }
+            last_logits = out.logits[(n - 1) * v..n * v].to_vec();
+            pos += n;
+        }
+        let prompt_nll = nll_sum / (prompt.len().saturating_sub(1).max(1)) as f64;
+        let compute_s = t0.elapsed().as_secs_f64();
+
+        let (kv_full, kv1, kv2) = if self.split {
+            let (a, b) = kv.split_at_layer(split);
+            (None, Some(a), Some(b))
+        } else {
+            (Some(kv), None, None)
+        };
+        let sess = DeviceSession {
+            tokens: prompt.to_vec(),
+            len: prompt.len(),
+            p2_len: prompt.len(),
+            kv_full,
+            kv1,
+            kv2,
+            pending: Vec::new(),
+            importance,
+            generated: 0,
+            prompt_nll,
+        };
+        let probs = softmax(&last_logits);
+        let token = argmax(&probs) as u32;
+        let confidence = probs[token as usize];
+        let margin = margin_top12(&probs);
+        Ok((
+            sess,
+            StepOut {
+                probs,
+                token,
+                confidence,
+                margin,
+                exited: false,
+                layer_fraction: 1.0,
+                compute_s,
+            },
+        ))
+    }
+
+    /// One decode step: append `token` (position `sess.len`) and return
+    /// the distribution over the next token.
+    ///
+    /// `allow_exit` gates layer-wise early exit (sequence position and
+    /// module toggles are the caller's policy); `exit_threshold` is the
+    /// margin cut (paper default 0.7).
+    pub fn step(
+        &self,
+        sess: &mut DeviceSession,
+        token: u32,
+        allow_exit: bool,
+        exit_threshold: f32,
+    ) -> Result<StepOut> {
+        if sess.len + 1 > self.model.meta.max_len {
+            bail!("KV cache exhausted at len {}", sess.len);
+        }
+        sess.tokens.push(token);
+        sess.generated += 1;
+        if self.split {
+            self.step_split(sess, token, allow_exit, exit_threshold)
+        } else {
+            self.step_full(sess, token)
+        }
+    }
+
+    fn step_full(&self, sess: &mut DeviceSession, token: u32) -> Result<StepOut> {
+        let t0 = Instant::now();
+        let kv = sess.kv_full.as_mut().expect("full-mode session");
+        let out = self.model.run_chunk(
+            "step_full",
+            &[token as i32],
+            &[sess.len as i32],
+            &[1],
+            kv,
+        )?;
+        sess.len += 1;
+        sess.p2_len = sess.len;
+        for (a, b) in sess.importance.iter_mut().zip(&out.importance) {
+            *a += b;
+        }
+        let probs = softmax(&out.logits);
+        let tok = argmax(&probs) as u32;
+        Ok(StepOut {
+            confidence: probs[tok as usize],
+            margin: margin_top12(&probs),
+            token: tok,
+            probs,
+            exited: false,
+            layer_fraction: 1.0,
+            compute_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn step_split(
+        &self,
+        sess: &mut DeviceSession,
+        token: u32,
+        allow_exit: bool,
+        exit_threshold: f32,
+    ) -> Result<StepOut> {
+        let (l, _, _, _, split) = self.dims();
+        let t0 = Instant::now();
+        let kv1 = sess.kv1.as_mut().expect("split-mode session");
+        let out1 = self.model.run_chunk(
+            "step_p1",
+            &[token as i32],
+            &[sess.len as i32],
+            &[1],
+            kv1,
+        )?;
+        let pos = sess.len;
+        sess.len += 1;
+        for (a, b) in sess.importance.iter_mut().zip(&out1.importance) {
+            *a += b;
+        }
+        let exit_probs = softmax(&out1.logits);
+        let margin = margin_top12(&exit_probs);
+        let hidden = out1.hidden.expect("p1 returns hidden");
+
+        if allow_exit && margin >= exit_threshold {
+            // Early exit: emit from the exit head; defer deep layers.
+            sess.pending.push(hidden);
+            if sess.pending.len() >= self.backfill_capacity() {
+                self.flush_backfill(sess)?;
+            }
+            let tok = argmax(&exit_probs) as u32;
+            return Ok(StepOut {
+                confidence: exit_probs[tok as usize],
+                margin,
+                token: tok,
+                probs: exit_probs,
+                exited: true,
+                layer_fraction: split as f64 / l as f64,
+                compute_s: t0.elapsed().as_secs_f64(),
+            });
+        }
+
+        // No exit: backfill any deferred positions, then run deep layers.
+        self.flush_backfill(sess)?;
+        let kv2 = sess.kv2.as_mut().unwrap();
+        let out2 = self.model.run_hidden(
+            "step_p2",
+            &hidden,
+            &[pos as i32],
+            &[1],
+            kv2,
+        )?;
+        sess.p2_len = sess.len;
+        // importance accumulates from part-1 only so the signal is
+        // comparable between exited and non-exited steps
+        let probs = softmax(&out2.logits);
+        let tok = argmax(&probs) as u32;
+        Ok(StepOut {
+            confidence: probs[tok as usize],
+            margin: margin_top12(&probs),
+            token: tok,
+            probs,
+            exited: false,
+            layer_fraction: 1.0,
+            compute_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn backfill_capacity(&self) -> usize {
+        self.model.meta.exec("p2_c4").map(|e| e.c).unwrap_or(4)
+    }
+
+    /// Flush queued exit hiddens through the `p2_c4` backfill executable
+    /// so the deep cache catches up to `sess.len`.
+    fn flush_backfill(&self, sess: &mut DeviceSession) -> Result<()> {
+        while !sess.pending.is_empty() {
+            let cap = self.backfill_capacity();
+            let d = self.model.meta.d_model;
+            let n = sess.pending.len().min(cap);
+            let mut hid = vec![0f32; cap * d];
+            for (i, h) in sess.pending.drain(..n).enumerate() {
+                hid[i * d..(i + 1) * d].copy_from_slice(&h);
+            }
+            let kv2 = sess.kv2.as_mut().unwrap();
+            let _ = self.model.run_hidden(
+                "p2_c4",
+                &hid,
+                &[sess.p2_len as i32],
+                &[n as i32],
+                kv2,
+            )?;
+            sess.p2_len += n;
+        }
+        Ok(())
+    }
+}

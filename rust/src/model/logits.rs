@@ -1,0 +1,107 @@
+//! Logits post-processing: softmax, argmax, top-k, margins, sampling.
+
+/// Numerically stable in-place softmax; returns the probabilities.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut p: Vec<f32> = logits.iter().map(|&x| (x - mx).exp()).collect();
+    let s: f32 = p.iter().sum();
+    if s > 0.0 {
+        p.iter_mut().for_each(|x| *x /= s);
+    }
+    p
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the k largest entries, descending.
+pub fn top_k(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    let k = k.min(xs.len());
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap()
+    });
+    idx.truncate(k);
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx
+}
+
+/// Top-1 minus top-2 probability — the layer-wise early-exit margin
+/// score (paper §4.3, after EdgeFM).
+pub fn margin_top12(probs: &[f32]) -> f32 {
+    let (mut m1, mut m2) = (0f32, 0f32);
+    for &p in probs {
+        if p > m1 {
+            m2 = m1;
+            m1 = p;
+        } else if p > m2 {
+            m2 = p;
+        }
+    }
+    m1 - m2
+}
+
+/// Sample from a distribution with a uniform draw `u ∈ [0,1)`.
+pub fn sample_with(probs: &[f32], u: f64) -> usize {
+    let mut acc = 0f64;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p as f64;
+        if u < acc {
+            return i;
+        }
+    }
+    probs.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let p = softmax(&[1000.0, 999.0]);
+        assert!(p.iter().all(|x| x.is_finite()));
+        assert!(p[0] > p[1]);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn top_k_sorted_desc() {
+        let xs = [0.1f32, 0.9, 0.3, 0.5];
+        assert_eq!(top_k(&xs, 3), vec![1, 3, 2]);
+        assert_eq!(top_k(&xs, 10).len(), 4);
+    }
+
+    #[test]
+    fn margin_of_onehot_is_high() {
+        assert!(margin_top12(&[0.98, 0.01, 0.01]) > 0.9);
+        assert!(margin_top12(&[0.5, 0.5]) < 1e-6);
+    }
+
+    #[test]
+    fn sample_with_matches_cdf() {
+        let p = [0.25f32, 0.25, 0.5];
+        assert_eq!(sample_with(&p, 0.10), 0);
+        assert_eq!(sample_with(&p, 0.30), 1);
+        assert_eq!(sample_with(&p, 0.99), 2);
+    }
+}

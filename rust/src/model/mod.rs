@@ -1,0 +1,11 @@
+//! Engine facades over the PJRT runtime: [`DeviceEngine`] (B=1 SLM with
+//! optional split early-exit execution) and [`CloudEngine`] (slot-based
+//! LLM batch engine), plus logits post-processing.
+
+pub mod cloud_engine;
+pub mod device_engine;
+pub mod logits;
+
+pub use cloud_engine::{CloudEngine, SlotChunk};
+pub use device_engine::{DeviceEngine, DeviceSession, StepOut};
+pub use logits::{argmax, margin_top12, softmax, top_k};

@@ -1,0 +1,101 @@
+//! Bandwidth + RTT link model.
+
+/// Static link parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkProfile {
+    pub bandwidth_mbps: f64,
+    pub rtt_ms: f64,
+    /// Per-message probability of a retransmission-equivalent delay spike.
+    pub loss: f64,
+}
+
+impl LinkProfile {
+    pub fn new(bandwidth_mbps: f64, rtt_ms: f64) -> Self {
+        LinkProfile { bandwidth_mbps, rtt_ms, loss: 0.0 }
+    }
+
+    /// The paper's default evaluation link (§6: typical 10 Mbps).
+    pub fn wifi() -> Self {
+        LinkProfile::new(10.0, 20.0)
+    }
+
+    pub fn lte() -> Self {
+        LinkProfile::new(5.0, 50.0)
+    }
+
+    /// Severely constrained (Fig. 13 leftmost point).
+    pub fn constrained(mbps: f64) -> Self {
+        LinkProfile::new(mbps, 40.0)
+    }
+}
+
+/// A simulated half-duplex link; returns *delays* so callers can either
+/// sleep them (threaded mode) or add them to a virtual clock (timeline
+/// mode). Deterministic given the seed.
+#[derive(Debug, Clone)]
+pub struct SimLink {
+    pub profile: LinkProfile,
+    rng: crate::util::rng::Rng,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+}
+
+impl SimLink {
+    pub fn new(profile: LinkProfile, seed: u64) -> Self {
+        SimLink { profile, rng: crate::util::rng::Rng::new(seed), bytes_up: 0, bytes_down: 0 }
+    }
+
+    fn transfer_s(&mut self, bytes: usize) -> f64 {
+        let bw_bytes_per_s = self.profile.bandwidth_mbps * 1e6 / 8.0;
+        let mut d = self.profile.rtt_ms / 2.0 / 1e3 + bytes as f64 / bw_bytes_per_s;
+        if self.profile.loss > 0.0 && self.rng.f64() < self.profile.loss {
+            d += self.profile.rtt_ms / 1e3; // one retransmission round
+        }
+        d
+    }
+
+    /// Delay to move `bytes` device → cloud.
+    pub fn uplink_s(&mut self, bytes: usize) -> f64 {
+        self.bytes_up += bytes as u64;
+        self.transfer_s(bytes)
+    }
+
+    /// Delay to move `bytes` cloud → device.
+    pub fn downlink_s(&mut self, bytes: usize) -> f64 {
+        self.bytes_down += bytes as u64;
+        self.transfer_s(bytes)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_up + self.bytes_down
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delay_arithmetic() {
+        let mut l = SimLink::new(LinkProfile::new(8.0, 20.0), 1);
+        // 8 Mbps = 1e6 B/s; 10 KB → 10 ms + half-RTT 10 ms = 20 ms
+        let d = l.uplink_s(10_000);
+        assert!((d - 0.020).abs() < 1e-9, "{d}");
+        assert_eq!(l.bytes_up, 10_000);
+    }
+
+    #[test]
+    fn narrow_link_dominates() {
+        let mut slow = SimLink::new(LinkProfile::constrained(0.1), 1);
+        let mut fast = SimLink::new(LinkProfile::constrained(100.0), 1);
+        assert!(slow.uplink_s(5000) > 15.0 * fast.uplink_s(5000)); // RTT floors the fast link
+    }
+
+    #[test]
+    fn loss_adds_delay_deterministically() {
+        let p = LinkProfile { bandwidth_mbps: 10.0, rtt_ms: 20.0, loss: 1.0 };
+        let mut l = SimLink::new(p, 3);
+        let mut base = SimLink::new(LinkProfile::new(10.0, 20.0), 3);
+        assert!(l.uplink_s(100) > base.uplink_s(100));
+    }
+}

@@ -1,0 +1,14 @@
+//! Device↔cloud network substrate.
+//!
+//! The paper's testbed varies real Wi-Fi/LTE links from 0.1 to 100 Mbps;
+//! here a [`SimLink`] computes transfer delays from the *actual
+//! serialized payload sizes* (bandwidth × bytes + RTT/2 per direction),
+//! which is exactly the arithmetic those experiments measure. The wire
+//! format lives in [`wire`]; top-k distribution compression (paper §4.2
+//! "Compression before transmission") in [`super::device::codec`].
+
+pub mod link;
+pub mod wire;
+
+pub use link::{LinkProfile, SimLink};
+pub use wire::{DownlinkMsg, UplinkMsg};

@@ -1,0 +1,296 @@
+//! Synera offline profiling (paper §5).
+//!
+//! For an SLM–LLM pair, run a profiling pass with **every** chunk
+//! offloaded and collect:
+//!
+//! * `c_th` — mean chunk confidence over *fully accepted* chunks (the
+//!   coarse-filter threshold);
+//! * the distribution of chunk mean-importance → a percentile table so
+//!   the budget knob maps to `i_th` at runtime;
+//! * `α` — the per-token draft acceptance probability (drives the
+//!   capped-geometric rejection-position prior);
+//! * the SLM prompt-perplexity distribution → the EdgeFM-LLM baseline's
+//!   input-offloading threshold.
+//!
+//! Results are cached as `artifacts/profile_<slm>_<llm>.json`.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
+use crate::model::cloud_engine::CloudEngine;
+use crate::model::device_engine::DeviceEngine;
+use crate::model::logits::argmax;
+use crate::net::wire::Dist;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use crate::workload::trace::mixed_eval_set;
+use crate::workload::vocab::EOS;
+
+/// Profiled parameters for one SLM–LLM pair.
+#[derive(Debug, Clone)]
+pub struct OffloadProfile {
+    pub slm: String,
+    pub llm: String,
+    pub c_th: f64,
+    pub alpha: f64,
+    /// Percentiles 0..=100 of chunk mean-importance.
+    pub imp_percentiles: Vec<f64>,
+    pub ppl_threshold: f64,
+}
+
+impl OffloadProfile {
+    /// Budget → fine threshold: offloading the top `budget` fraction by
+    /// importance means `i_th` sits at the (1−budget) percentile.
+    pub fn i_th_for_budget(&self, budget: f64) -> f64 {
+        let b = budget.clamp(0.0, 1.0);
+        let idx = ((1.0 - b) * 100.0).round() as usize;
+        self.imp_percentiles[idx.min(100)]
+    }
+
+    /// A neutral profile for unit tests (no artifacts needed).
+    pub fn synthetic() -> OffloadProfile {
+        OffloadProfile {
+            slm: "test".into(),
+            llm: "test".into(),
+            c_th: 0.7,
+            alpha: 0.6,
+            imp_percentiles: (0..=100).map(|i| i as f64 / 25.0).collect(),
+            ppl_threshold: 8.0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("slm", Json::str(self.slm.clone())),
+            ("llm", Json::str(self.llm.clone())),
+            ("c_th", Json::num(self.c_th)),
+            ("alpha", Json::num(self.alpha)),
+            (
+                "imp_percentiles",
+                Json::arr(self.imp_percentiles.iter().map(|&x| Json::num(x))),
+            ),
+            ("ppl_threshold", Json::num(self.ppl_threshold)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<OffloadProfile> {
+        Ok(OffloadProfile {
+            slm: j.get("slm")?.as_str()?.into(),
+            llm: j.get("llm")?.as_str()?.into(),
+            c_th: j.get("c_th")?.as_f64()?,
+            alpha: j.get("alpha")?.as_f64()?,
+            imp_percentiles: j
+                .get("imp_percentiles")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Result<_>>()?,
+            ppl_threshold: j.get("ppl_threshold")?.as_f64()?,
+        })
+    }
+}
+
+fn percentiles_0_100(values: &mut Vec<f64>) -> Vec<f64> {
+    if values.is_empty() {
+        return vec![0.0; 101];
+    }
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (0..=100)
+        .map(|p| values[((values.len() - 1) as f64 * p as f64 / 100.0).round() as usize])
+        .collect()
+}
+
+/// Run the offload-everything profiling pass (paper §5). `n_samples`
+/// mixed-task prompts; γ-token chunks; greedy drafting.
+pub fn profile_pair(
+    rt: &Rc<Runtime>,
+    slm: &str,
+    slm_weights: Option<&str>,
+    llm: &str,
+    n_samples: usize,
+    gamma: usize,
+    max_new: usize,
+) -> Result<OffloadProfile> {
+    // split mode (exits disabled) so the importance signal is measured by
+    // the same part-1 layer range the Synera runtime reads — calibrating
+    // i_th on a different layer range would shift the budget mapping
+    let dev = DeviceEngine::new(rt.model_variant(slm, slm_weights)?, true)?;
+    let mut sched = Scheduler::new(CloudEngine::new(rt.model(llm)?)?, 0xBEEF);
+
+    let mut conf_full_accept: Vec<f64> = Vec::new();
+    let mut conf_all: Vec<f64> = Vec::new();
+    let mut chunk_imps: Vec<f64> = Vec::new();
+    let mut ppls: Vec<f64> = Vec::new();
+
+    let samples = mixed_eval_set((n_samples / 7).max(1));
+    for (si, s) in samples.iter().enumerate() {
+        let req_id = 0x5000 + si as u64;
+        let (mut sess, mut cur) = dev.prefill(&s.prompt)?;
+        ppls.push(sess.prompt_ppl());
+        let mut cloud_len = 0usize;
+        while sess.len - s.prompt.len() < max_new {
+            let start_len = sess.len;
+            let mut draft = Vec::new();
+            let mut confs = Vec::new();
+            let mut dists = Vec::new();
+            for _ in 0..gamma.min(max_new - (sess.len - s.prompt.len())) {
+                let tok = argmax(&cur.probs) as u32;
+                if tok == EOS {
+                    break;
+                }
+                draft.push(tok);
+                confs.push(cur.probs[tok as usize] as f64);
+                dists.push(Dist::Dense(cur.probs.clone()));
+                cur = dev.step(&mut sess, tok, false, 1.0)?;
+            }
+            if draft.is_empty() {
+                break;
+            }
+            let imps: Vec<f64> = (0..draft.len())
+                .map(|j| sess.importance[start_len + j] as f64)
+                .collect();
+            chunk_imps.push(imps.iter().sum::<f64>() / imps.len() as f64);
+
+            let uncached: Vec<u32> = sess.tokens[cloud_len..start_len].to_vec();
+            sched.submit(CloudRequest::Verify {
+                request_id: req_id,
+                device_id: 0,
+                uncached,
+                draft: draft.clone(),
+                dists,
+                greedy: true,
+            })?;
+            let mut outcome = None;
+            while outcome.is_none() {
+                let (events, _) = sched.tick()?;
+                for e in events {
+                    if let CloudEvent::VerifyDone { outcome: o, .. } = e {
+                        outcome = Some(o);
+                    }
+                }
+            }
+            let o = outcome.unwrap();
+            let accepted = o.accepted.min(draft.len());
+            let mean_conf = confs.iter().sum::<f64>() / confs.len() as f64;
+            conf_all.push(mean_conf);
+            if accepted == draft.len() {
+                conf_full_accept.push(mean_conf);
+            }
+            cloud_len = start_len + accepted;
+            sess.rewind(start_len + accepted);
+            if o.next_token == EOS {
+                break;
+            }
+            cur = dev.step(&mut sess, o.next_token, false, 1.0)?;
+        }
+        sched.submit(CloudRequest::Release { request_id: req_id })?;
+    }
+
+    let alpha = sched.acceptance_rate().clamp(0.05, 0.98);
+    // coarse threshold: paper §4.2/Fig 10 — the confidence filter should
+    // retain only the most confident ~20% of chunks locally, so c_th
+    // sits at the 80th percentile of profiled chunk confidences, floored
+    // by the mean confidence of fully accepted chunks (paper §5).
+    let accept_mean = if conf_full_accept.is_empty() {
+        0.8
+    } else {
+        conf_full_accept.iter().sum::<f64>() / conf_full_accept.len() as f64
+    };
+    let c_th = if conf_all.is_empty() {
+        accept_mean
+    } else {
+        conf_all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p80 = conf_all[(conf_all.len() - 1) * 80 / 100];
+        p80.max(accept_mean)
+    };
+    ppls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ppl_threshold = if ppls.is_empty() {
+        8.0
+    } else {
+        ppls[(ppls.len() - 1) * 60 / 100] // offload the worst ~40% of inputs
+    };
+    Ok(OffloadProfile {
+        slm: match slm_weights {
+            Some(w) => w.to_string(),
+            None => slm.to_string(),
+        },
+        llm: llm.to_string(),
+        c_th,
+        alpha,
+        imp_percentiles: percentiles_0_100(&mut chunk_imps),
+        ppl_threshold,
+    })
+}
+
+/// Load the cached profile or compute and cache it.
+pub fn load_or_profile(
+    rt: &Rc<Runtime>,
+    slm: &str,
+    slm_weights: Option<&str>,
+    llm: &str,
+) -> Result<OffloadProfile> {
+    let key = match slm_weights {
+        Some(w) => format!("profile_{w}_{llm}.json"),
+        None => format!("profile_{slm}_{llm}.json"),
+    };
+    let path = rt.dir.join(&key);
+    if path.exists() {
+        if let Ok(j) = Json::parse_file(&path) {
+            if let Ok(p) = OffloadProfile::from_json(&j) {
+                return Ok(p);
+            }
+        }
+    }
+    let p = profile_pair(rt, slm, slm_weights, llm, 28, rt.meta.gamma, 12)?;
+    let _ = std::fs::write(&path, p.to_json().to_string());
+    Ok(p)
+}
+
+/// Remove cached profiles (CLI `profile --refresh`).
+pub fn clear_cache(dir: &Path) {
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            let name = e.file_name();
+            if name.to_string_lossy().starts_with("profile_") {
+                let _ = std::fs::remove_file(e.path());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_to_threshold_mapping() {
+        let p = OffloadProfile::synthetic();
+        // budget 0 → 100th percentile (max importance): nothing offloads
+        assert_eq!(p.i_th_for_budget(0.0), p.imp_percentiles[100]);
+        // budget 1 → 0th percentile: everything passes the fine filter
+        assert_eq!(p.i_th_for_budget(1.0), p.imp_percentiles[0]);
+        // monotone: higher budget → lower threshold
+        assert!(p.i_th_for_budget(0.6) <= p.i_th_for_budget(0.2));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = OffloadProfile::synthetic();
+        let q = OffloadProfile::from_json(&Json::parse(&p.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(p.c_th, q.c_th);
+        assert_eq!(p.imp_percentiles, q.imp_percentiles);
+    }
+
+    #[test]
+    fn percentile_table_is_monotone() {
+        let mut v: Vec<f64> = (0..500).map(|i| ((i * 7919) % 101) as f64).collect();
+        let p = percentiles_0_100(&mut v);
+        assert_eq!(p.len(), 101);
+        for w in p.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Model loading + execution over the PJRT CPU client.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::kv::KvCache;
+use super::meta::{artifacts_dir, ExecMeta, ModelMeta, ZooMeta};
+use super::weights::read_weights;
+
+/// Per-thread runtime: one PJRT client + the artifact inventory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub meta: ZooMeta,
+    models: RefCell<BTreeMap<String, Rc<Model>>>,
+}
+
+impl Runtime {
+    pub fn load(dir: PathBuf) -> Result<Rc<Runtime>> {
+        let meta = ZooMeta::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Rc::new(Runtime { client, dir, meta, models: RefCell::new(BTreeMap::new()) }))
+    }
+
+    /// Load from `$SYNERA_ARTIFACTS` or the nearest `artifacts/` ancestor.
+    pub fn load_default() -> Result<Rc<Runtime>> {
+        Self::load(artifacts_dir())
+    }
+
+    /// Get (and cache) a model with its default weights.
+    pub fn model(self: &Rc<Self>, name: &str) -> Result<Rc<Model>> {
+        self.model_variant(name, None)
+    }
+
+    /// Get a model with an alternate weight file (quantized variants, e.g.
+    /// `model_variant("s7b", Some("s7b_bnb4"))`).
+    pub fn model_variant(self: &Rc<Self>, name: &str, weights: Option<&str>) -> Result<Rc<Model>> {
+        let key = match weights {
+            Some(w) => format!("{name}@{w}"),
+            None => name.to_string(),
+        };
+        if let Some(m) = self.models.borrow().get(&key) {
+            return Ok(m.clone());
+        }
+        let meta = self.meta.model(name)?.clone();
+        let wfile = match weights {
+            Some(w) => format!("{w}.weights.bin"),
+            None => meta.weights_file.clone(),
+        };
+        let model = Rc::new(Model::load(self, meta, &wfile)?);
+        self.models.borrow_mut().insert(key, model.clone());
+        Ok(model)
+    }
+}
+
+/// Outputs of one executable call (see `aot.py` ABI).
+#[derive(Debug, Clone)]
+pub struct ExecOut {
+    /// `[B, C, V]` logits — for part-1 executables these are the *exit*
+    /// logits (shared head applied at the split layer).
+    pub logits: Vec<f32>,
+    /// `[B, C, D]` hidden states (part-1 executables only).
+    pub hidden: Option<Vec<f32>>,
+    /// `[B, M]` fused importance scores (mean over executed layers).
+    pub importance: Vec<f32>,
+}
+
+struct LoadedExec {
+    spec: ExecMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// One model: device-resident weights + lazily compiled executables.
+pub struct Model {
+    pub meta: ModelMeta,
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    weights: Vec<xla::PjRtBuffer>,
+    execs: RefCell<BTreeMap<String, Rc<LoadedExec>>>,
+    /// Cumulative PJRT execution count (perf accounting).
+    pub calls: std::cell::Cell<u64>,
+}
+
+impl Model {
+    fn load(rt: &Runtime, meta: ModelMeta, weights_file: &str) -> Result<Model> {
+        let wpath = rt.dir.join(weights_file);
+        let tensors = read_weights(&wpath)?;
+        let mut weights = Vec::with_capacity(tensors.len());
+        for t in &tensors {
+            weights.push(
+                rt.client
+                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                    .with_context(|| format!("uploading {}", t.name))?,
+            );
+        }
+        Ok(Model {
+            meta,
+            client: rt.client.clone(),
+            dir: rt.dir.clone(),
+            weights,
+            execs: RefCell::new(BTreeMap::new()),
+            calls: std::cell::Cell::new(0),
+        })
+    }
+
+    fn exec(&self, tag: &str) -> Result<Rc<LoadedExec>> {
+        if let Some(e) = self.execs.borrow().get(tag) {
+            return Ok(e.clone());
+        }
+        let spec = self.meta.exec(tag)?.clone();
+        let path = self.dir.join(format!("{}_{}.hlo.txt", self.meta.name, tag));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let le = Rc::new(LoadedExec { spec, exe });
+        self.execs.borrow_mut().insert(tag.to_string(), le.clone());
+        Ok(le)
+    }
+
+    /// Eagerly compile a set of executables (so first-token latency in
+    /// experiments isn't a compile).
+    pub fn warmup(&self, tags: &[&str]) -> Result<()> {
+        for t in tags {
+            self.exec(t)?;
+        }
+        Ok(())
+    }
+
+    /// Token-input executables (`chunk_*`, `step_full`, `step_p1`).
+    ///
+    /// `tokens`: `[B*C]` row-major; `pos_base`/`n_valid`: `[B]`;
+    /// `kv` shape must match the executable's layer range.
+    pub fn run_chunk(
+        &self,
+        tag: &str,
+        tokens: &[i32],
+        pos_base: &[i32],
+        n_valid: &[i32],
+        kv: &mut KvCache,
+    ) -> Result<ExecOut> {
+        let e = self.exec(tag)?;
+        if e.spec.part2 {
+            bail!("{tag} takes hidden states, not tokens");
+        }
+        let (b, c) = (e.spec.b, e.spec.c);
+        if tokens.len() != b * c || pos_base.len() != b || n_valid.len() != b {
+            bail!(
+                "{tag}: arg shapes tokens={} pos={} nv={} (want {}x{})",
+                tokens.len(), pos_base.len(), n_valid.len(), b, c
+            );
+        }
+        let tok_buf = self.client.buffer_from_host_buffer::<i32>(tokens, &[b, c], None)?;
+        self.dispatch(&e, tok_buf, pos_base, n_valid, kv)
+    }
+
+    /// Hidden-state-input executables (`step_p2`, `p2_c4`).
+    pub fn run_hidden(
+        &self,
+        tag: &str,
+        hidden: &[f32],
+        pos_base: &[i32],
+        n_valid: &[i32],
+        kv: &mut KvCache,
+    ) -> Result<ExecOut> {
+        let e = self.exec(tag)?;
+        if !e.spec.part2 {
+            bail!("{tag} takes tokens, not hidden states");
+        }
+        let (b, c, d) = (e.spec.b, e.spec.c, self.meta.d_model);
+        if hidden.len() != b * c * d {
+            bail!("{tag}: hidden len {} != {}x{}x{}", hidden.len(), b, c, d);
+        }
+        let hbuf = self.client.buffer_from_host_buffer::<f32>(hidden, &[b, c, d], None)?;
+        self.dispatch(&e, hbuf, pos_base, n_valid, kv)
+    }
+
+    fn dispatch(
+        &self,
+        e: &LoadedExec,
+        first: xla::PjRtBuffer,
+        pos_base: &[i32],
+        n_valid: &[i32],
+        kv: &mut KvCache,
+    ) -> Result<ExecOut> {
+        let spec = &e.spec;
+        let (b, c) = (spec.b, spec.c);
+        let lp = spec.hi - spec.lo;
+        let m = self.meta.max_len;
+        let (h, dh) = (self.meta.n_heads, self.meta.d_head);
+        if kv.shape != [lp, b, m, h, dh] {
+            bail!(
+                "{}: kv shape {:?} != expected {:?}",
+                spec.tag, kv.shape, [lp, b, m, h, dh]
+            );
+        }
+        let kv_dims = [lp, b, m, h, dh];
+        let pos_buf = self.client.buffer_from_host_buffer::<i32>(pos_base, &[b], None)?;
+        let nv_buf = self.client.buffer_from_host_buffer::<i32>(n_valid, &[b], None)?;
+        let kk = self.client.buffer_from_host_buffer::<f32>(&kv.k, &kv_dims, None)?;
+        let vv = self.client.buffer_from_host_buffer::<f32>(&kv.v, &kv_dims, None)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&first, &pos_buf, &nv_buf, &kk, &vv];
+        args.extend(self.weights.iter());
+
+        let out = e.exe.execute_b(&args)?;
+        self.calls.set(self.calls.get() + 1);
+        let mut lit = out[0][0].to_literal_sync()?;
+        let parts = lit.decompose_tuple()?;
+
+        let expected = if spec.exit_logits { 5 } else { 4 };
+        if parts.len() != expected {
+            bail!("{}: got {} outputs, want {expected}", spec.tag, parts.len());
+        }
+        let d = self.meta.d_model;
+        let v = self.meta.vocab;
+        let (hidden, logits, kv_at) = if spec.exit_logits {
+            let mut hid = vec![0f32; b * c * d];
+            parts[0].copy_raw_to(&mut hid)?;
+            let mut lg = vec![0f32; b * c * v];
+            parts[1].copy_raw_to(&mut lg)?;
+            (Some(hid), lg, 2)
+        } else {
+            let mut lg = vec![0f32; b * c * v];
+            parts[0].copy_raw_to(&mut lg)?;
+            (None, lg, 1)
+        };
+        parts[kv_at].copy_raw_to(&mut kv.k)?;
+        parts[kv_at + 1].copy_raw_to(&mut kv.v)?;
+        let mut importance = vec![0f32; b * m];
+        parts[kv_at + 2].copy_raw_to(&mut importance)?;
+        Ok(ExecOut { logits, hidden, importance })
+    }
+}

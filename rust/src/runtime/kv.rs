@@ -1,0 +1,136 @@
+//! Host-side KV cache state: a `[L, B, M, H, Dh]` f32 block per K and V.
+//!
+//! The cache rides into every executable call and comes back updated.
+//! Because attention masks by position (`pos <= pos_base+i`), *rollback*
+//! after mispredicted speculative work is just rewinding the logical
+//! length — stale slots beyond it are never attended to. Splitting at the
+//! early-exit layer is a contiguous copy (layer-major layout).
+
+/// Mutable KV state for one executable family (a layer range).
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// `[layers, slots, max_len, heads, d_head]`
+    pub shape: [usize; 5],
+}
+
+impl KvCache {
+    pub fn new(layers: usize, slots: usize, max_len: usize, heads: usize, d_head: usize) -> Self {
+        let n = layers * slots * max_len * heads * d_head;
+        KvCache { k: vec![0.0; n], v: vec![0.0; n], shape: [layers, slots, max_len, heads, d_head] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn layers(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn slots(&self) -> usize {
+        self.shape[1]
+    }
+
+    /// Split into layer ranges `[0, at)` and `[at, L)` — used once after
+    /// device prefill to hand the cache to the p1/p2 early-exit executables.
+    pub fn split_at_layer(&self, at: usize) -> (KvCache, KvCache) {
+        let [l, b, m, h, dh] = self.shape;
+        assert!(at <= l, "split {at} > layers {l}");
+        let per_layer = b * m * h * dh;
+        let cut = at * per_layer;
+        let mk = |k: &[f32], v: &[f32], layers| KvCache {
+            k: k.to_vec(),
+            v: v.to_vec(),
+            shape: [layers, b, m, h, dh],
+        };
+        (
+            mk(&self.k[..cut], &self.v[..cut], at),
+            mk(&self.k[cut..], &self.v[cut..], l - at),
+        )
+    }
+
+    /// Zero the whole cache (slot reuse). Lengths are tracked by callers.
+    pub fn clear(&mut self) {
+        self.k.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Copy slot `src_slot` of `other` into our `dst_slot` (cloud KV
+    /// migration between batches; layouts must match except slot count).
+    pub fn copy_slot_from(&mut self, dst_slot: usize, other: &KvCache, src_slot: usize) {
+        let [l, b, m, h, dh] = self.shape;
+        let [ol, ob, om, oh, odh] = other.shape;
+        assert_eq!((l, m, h, dh), (ol, om, oh, odh), "incompatible kv shapes");
+        assert!(dst_slot < b && src_slot < ob);
+        let row = m * h * dh;
+        for layer in 0..l {
+            let d0 = (layer * b + dst_slot) * row;
+            let s0 = (layer * ob + src_slot) * row;
+            self.k[d0..d0 + row].copy_from_slice(&other.k[s0..s0 + row]);
+            self.v[d0..d0 + row].copy_from_slice(&other.v[s0..s0 + row]);
+        }
+    }
+
+    /// Zero one slot across all layers.
+    pub fn clear_slot(&mut self, slot: usize) {
+        let [l, b, m, h, dh] = self.shape;
+        assert!(slot < b);
+        let row = m * h * dh;
+        for layer in 0..l {
+            let o = (layer * b + slot) * row;
+            self.k[o..o + row].iter_mut().for_each(|x| *x = 0.0);
+            self.v[o..o + row].iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(l: usize, b: usize) -> KvCache {
+        let mut kv = KvCache::new(l, b, 4, 2, 3);
+        for (i, x) in kv.k.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        for (i, x) in kv.v.iter_mut().enumerate() {
+            *x = -(i as f32);
+        }
+        kv
+    }
+
+    #[test]
+    fn split_is_contiguous_and_complete() {
+        let kv = filled(4, 1);
+        let (a, b) = kv.split_at_layer(3);
+        assert_eq!(a.shape, [3, 1, 4, 2, 3]);
+        assert_eq!(b.shape, [1, 1, 4, 2, 3]);
+        let mut rejoined = a.k.clone();
+        rejoined.extend_from_slice(&b.k);
+        assert_eq!(rejoined, kv.k);
+    }
+
+    #[test]
+    fn copy_slot_moves_only_that_slot() {
+        let src = filled(2, 3);
+        let mut dst = KvCache::new(2, 2, 4, 2, 3);
+        dst.copy_slot_from(1, &src, 2);
+        let row = 4 * 2 * 3;
+        // layer 0, slot 1 of dst == layer 0, slot 2 of src
+        assert_eq!(&dst.k[row..2 * row], &src.k[2 * row..3 * row]);
+        // slot 0 untouched
+        assert!(dst.k[..row].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn clear_slot_zeroes_across_layers() {
+        let mut kv = filled(2, 2);
+        kv.clear_slot(0);
+        let row = 4 * 2 * 3;
+        assert!(kv.k[..row].iter().all(|&x| x == 0.0)); // layer0 slot0
+        assert!(kv.k[2 * row..3 * row].iter().all(|&x| x == 0.0)); // layer1 slot0
+        assert!(kv.k[row..2 * row].iter().any(|&x| x != 0.0)); // layer0 slot1 kept
+    }
+}

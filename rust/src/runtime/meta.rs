@@ -1,0 +1,147 @@
+//! `artifacts/meta.json` schema (written by `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One exported executable of a model.
+#[derive(Debug, Clone)]
+pub struct ExecMeta {
+    pub tag: String,
+    /// Batch slots.
+    pub b: usize,
+    /// Chunk length (query tokens per call).
+    pub c: usize,
+    /// Layer range [lo, hi).
+    pub lo: usize,
+    pub hi: usize,
+    /// Takes hidden states instead of token ids (early-exit part 2).
+    pub part2: bool,
+    /// Additionally returns exit logits (early-exit part 1).
+    pub exit_logits: bool,
+}
+
+/// Model dimensions + executable inventory.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_len: usize,
+    pub split_layer: usize,
+    pub role: String,
+    pub weights_file: String,
+    pub execs: Vec<ExecMeta>,
+}
+
+impl ModelMeta {
+    pub fn exec(&self, tag: &str) -> Result<&ExecMeta> {
+        self.execs
+            .iter()
+            .find(|e| e.tag == tag)
+            .with_context(|| format!("model {} has no executable {tag:?}", self.name))
+    }
+
+    /// Host-side parameter count (for the cost model / reports).
+    pub fn param_count(&self) -> usize {
+        let (d, l, f, v) = (self.d_model, self.n_layers, self.d_ff, self.vocab);
+        v * d + l * (4 * d * d + 3 * d * f + 2 * d) + d
+    }
+}
+
+/// The whole artifact bundle.
+#[derive(Debug, Clone)]
+pub struct ZooMeta {
+    pub fingerprint: String,
+    pub chunk: usize,
+    pub cloud_slots: usize,
+    pub gamma: usize,
+    pub vocab: usize,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl ZooMeta {
+    pub fn load(dir: &Path) -> Result<ZooMeta> {
+        let path = dir.join("meta.json");
+        if !path.exists() {
+            bail!(
+                "artifacts not built: {} missing — run `make artifacts`",
+                path.display()
+            );
+        }
+        let j = Json::parse_file(&path)?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models")?.as_obj()? {
+            let cfg = m.get("config")?;
+            let mut execs = Vec::new();
+            for e in m.get("execs")?.as_arr()? {
+                execs.push(ExecMeta {
+                    tag: e.get("tag")?.as_str()?.to_string(),
+                    b: e.get("b")?.as_usize()?,
+                    c: e.get("c")?.as_usize()?,
+                    lo: e.get("lo")?.as_usize()?,
+                    hi: e.get("hi")?.as_usize()?,
+                    part2: e.get("part2")?.as_bool()?,
+                    exit_logits: e.get("exit_logits")?.as_bool()?,
+                });
+            }
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    vocab: cfg.get("vocab")?.as_usize()?,
+                    d_model: cfg.get("d_model")?.as_usize()?,
+                    n_layers: cfg.get("n_layers")?.as_usize()?,
+                    n_heads: cfg.get("n_heads")?.as_usize()?,
+                    d_head: cfg.get("d_head")?.as_usize()?,
+                    d_ff: cfg.get("d_ff")?.as_usize()?,
+                    max_len: cfg.get("max_len")?.as_usize()?,
+                    split_layer: cfg.get("split_layer")?.as_usize()?,
+                    role: m.get("role")?.as_str()?.to_string(),
+                    weights_file: m.get("weights")?.as_str()?.to_string(),
+                    execs,
+                },
+            );
+        }
+        Ok(ZooMeta {
+            fingerprint: j.get("fingerprint")?.as_str()?.to_string(),
+            chunk: j.get("chunk")?.as_usize()?,
+            cloud_slots: j.get("cloud_slots")?.as_usize()?,
+            gamma: j.get("gamma")?.as_usize()?,
+            vocab: j.get("vocab")?.as_usize()?,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .with_context(|| format!("unknown model {name:?} (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+}
+
+/// Default artifacts directory: `$SYNERA_ARTIFACTS` or `./artifacts`
+/// (walking up from the current dir so tests/benches work from any cwd).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("SYNERA_ARTIFACTS") {
+        return p.into();
+    }
+    let mut d = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = d.join("artifacts");
+        if cand.join("meta.json").exists() {
+            return cand;
+        }
+        if !d.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `*.weights.bin` + `meta.json`) and executes them on the CPU PJRT
+//! client via the `xla` crate.
+//!
+//! Conventions (must match `python/compile/aot.py`):
+//! * interchange is HLO **text** (xla_extension 0.5.1 rejects jax≥0.5
+//!   serialized protos — 64-bit instruction ids);
+//! * executables are lowered with `return_tuple=True`, so each run
+//!   returns ONE tuple buffer which we decompose into
+//!   `(logits|hidden, [exit_logits,] kv_k, kv_v, importance)`;
+//! * weights are uploaded to device buffers once per model and reused
+//!   (`execute_b`); KV caches live host-side in [`KvCache`] and ride in
+//!   per call (pure memcpy on the CPU plugin, ~µs at our sizes — see
+//!   EXPERIMENTS.md §Perf).
+//!
+//! PJRT objects are `Rc`-based (thread-confined): every thread that
+//! executes models owns its own [`Runtime`].
+
+pub mod engine;
+pub mod kv;
+pub mod meta;
+pub mod weights;
+
+pub use engine::{ExecOut, Model, Runtime};
+pub use kv::KvCache;
+pub use meta::{artifacts_dir, ExecMeta, ModelMeta, ZooMeta};

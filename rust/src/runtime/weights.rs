@@ -1,0 +1,123 @@
+//! `*.weights.bin` reader — format written by `aot.write_weights`:
+//! `b"SYNW1\n"`, u32-le header length, JSON header
+//! `{"tensors": [{name, shape, offset}...], "total_bytes"}`, raw f32 payload.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// A named host tensor (row-major f32).
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+pub const MAGIC: &[u8] = b"SYNW1\n";
+
+/// Read all tensors from a weight binary, in file (= `WEIGHT_ORDER`) order.
+pub fn read_weights(path: &Path) -> Result<Vec<HostTensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() < MAGIC.len() + 4 || &bytes[..MAGIC.len()] != MAGIC {
+        bail!("{}: bad magic (not a SYNW1 weight file)", path.display());
+    }
+    let hlen_off = MAGIC.len();
+    let hlen = u32::from_le_bytes(bytes[hlen_off..hlen_off + 4].try_into().unwrap()) as usize;
+    let hstart = hlen_off + 4;
+    let header = std::str::from_utf8(&bytes[hstart..hstart + hlen])?;
+    let j = Json::parse(header)?;
+    let payload = &bytes[hstart + hlen..];
+    let total = j.get("total_bytes")?.as_usize()?;
+    if payload.len() != total {
+        bail!("{}: payload {} != header total {}", path.display(), payload.len(), total);
+    }
+
+    let mut out = Vec::new();
+    for t in j.get("tensors")?.as_arr()? {
+        let name = t.get("name")?.as_str()?.to_string();
+        let shape = t.get("shape")?.usize_arr()?;
+        let offset = t.get("offset")?.as_usize()?;
+        let numel: usize = shape.iter().product();
+        let end = offset + numel * 4;
+        if end > payload.len() {
+            bail!("{}: tensor {name} overruns payload", path.display());
+        }
+        let mut data = vec![0f32; numel];
+        // payload is little-endian f32; this target is little-endian
+        let src = &payload[offset..end];
+        for (i, chunk) in src.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        out.push(HostTensor { name, shape, data });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_test_file(path: &Path, tensors: &[(&str, Vec<usize>, Vec<f32>)]) {
+        let mut headers = Vec::new();
+        let mut payload: Vec<u8> = Vec::new();
+        for (name, shape, data) in tensors {
+            let offset = payload.len();
+            for x in data {
+                payload.extend_from_slice(&x.to_le_bytes());
+            }
+            let dims = shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",");
+            headers.push(format!(
+                r#"{{"name":"{name}","shape":[{dims}],"offset":{offset}}}"#
+            ));
+        }
+        let header = format!(
+            r#"{{"tensors":[{}],"total_bytes":{}}}"#,
+            headers.join(","),
+            payload.len()
+        );
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(header.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(header.as_bytes()).unwrap();
+        f.write_all(&payload).unwrap();
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("synera_wtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        write_test_file(
+            &path,
+            &[
+                ("a", vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+                ("b", vec![3], vec![-1.0, 0.5, 9.0]),
+            ],
+        );
+        let ts = read_weights(&path).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "a");
+        assert_eq!(ts[0].shape, vec![2, 2]);
+        assert_eq!(ts[0].data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(ts[1].data, vec![-1.0, 0.5, 9.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("synera_wtest2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTAWEIGHTFILE....").unwrap();
+        assert!(read_weights(&path).is_err());
+    }
+}

@@ -1,0 +1,76 @@
+//! Property-testing mini-framework (the offline mirror carries no
+//! proptest). Seeded random case generation over splitmix64 with
+//! failing-seed reporting; on failure, re-run with
+//! `SYNERA_PROP_SEED=<seed>` to reproduce the exact case.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with `SYNERA_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("SYNERA_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `n` seeded cases. The closure gets a per-case RNG;
+/// return `Err(reason)` (or panic) to fail. Prints the failing seed.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let forced: Option<u64> = std::env::var("SYNERA_PROP_SEED").ok().and_then(|s| s.parse().ok());
+    let n = if forced.is_some() { 1 } else { default_cases() };
+    for i in 0..n {
+        let seed = forced.unwrap_or(0x9E37_0000 + i * 0x1001);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on seed {seed:#x} (case {i}): {msg}\n\
+                 reproduce with SYNERA_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below((hi - lo + 1) as u64) as usize
+}
+
+/// Uniform f64 in [lo, hi).
+pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+    lo + rng.f64() * (hi - lo)
+}
+
+/// Random probability vector of length `n` (sums to 1).
+pub fn prob_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..n).map(|_| (rng.f64() as f32).max(1e-6)).collect();
+    let s: f32 = v.iter().sum();
+    v.iter_mut().for_each(|x| *x /= s);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prob_vec_sums_to_one() {
+        check("prob_vec normalised", |rng| {
+            let n = usize_in(rng, 1, 64);
+            let p = prob_vec(rng, n);
+            let s: f32 = p.iter().sum();
+            if (s - 1.0).abs() > 1e-4 {
+                return Err(format!("sum {s}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports_seed() {
+        check("always fails", |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities (the offline crate mirror carries no
+//! serde/clap, so JSON and CLI parsing are hand-rolled here).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+/// Monotonic nanosecond timestamp helper used by metrics and benches.
+pub fn now() -> std::time::Instant {
+    std::time::Instant::now()
+}

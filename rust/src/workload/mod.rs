@@ -1,0 +1,9 @@
+//! Workloads: the SynthLang task suite (mirror of
+//! `python/compile/synthlang.py`, verified against
+//! `artifacts/golden_workload.json`) plus multi-user request traces.
+
+pub mod synthlang;
+pub mod trace;
+pub mod vocab;
+
+pub use synthlang::{generate, Sample, Task, TASKS};

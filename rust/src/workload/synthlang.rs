@@ -1,0 +1,369 @@
+//! SynthLang generators — exact mirror of `python/compile/synthlang.py`.
+//!
+//! `generate(task, split, index)` must produce byte-identical samples to
+//! the Python side (same splitmix64 draws in the same order); the
+//! integration test `tests/golden.rs` replays
+//! `artifacts/golden_workload.json` to enforce this.
+
+use crate::util::rng::{hash2, Rng};
+use crate::workload::vocab::*;
+
+/// The seven evaluation datasets (paper Table 2 stand-ins).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    Kgqa,
+    Sst2,
+    Cnndm,
+    Xsum,
+    Llqa,
+    Heysquad,
+    Sensorqa,
+}
+
+pub const TASKS: [Task; 7] = [
+    Task::Kgqa,
+    Task::Sst2,
+    Task::Cnndm,
+    Task::Xsum,
+    Task::Llqa,
+    Task::Heysquad,
+    Task::Sensorqa,
+];
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Kgqa => "kgqa",
+            Task::Sst2 => "sst2",
+            Task::Cnndm => "cnndm",
+            Task::Xsum => "xsum",
+            Task::Llqa => "llqa",
+            Task::Heysquad => "heysquad",
+            Task::Sensorqa => "sensorqa",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Task> {
+        TASKS.iter().copied().find(|t| t.name() == s)
+    }
+
+    pub fn index(&self) -> u64 {
+        TASKS.iter().position(|t| t == self).unwrap() as u64
+    }
+
+    /// Paper Table 2: CSQA/SST2/LLQA report accuracy, the rest Rouge-1.
+    pub fn is_classification(&self) -> bool {
+        matches!(self, Task::Kgqa | Task::Sst2 | Task::Llqa)
+    }
+
+    /// Paper's display name for report tables.
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            Task::Kgqa => "CSQA",
+            Task::Sst2 => "SST2",
+            Task::Cnndm => "CNNDM",
+            Task::Xsum => "XSum",
+            Task::Llqa => "LLQA",
+            Task::Heysquad => "HeySQuAD",
+            Task::Sensorqa => "SensorQA",
+        }
+    }
+}
+
+/// One evaluation sample: prompt tokens and the reference answer.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub task: Task,
+    pub prompt: Vec<u32>,
+    pub answer: Vec<u32>,
+}
+
+// ----------------------------- static world --------------------------------
+
+/// Knowledge-graph fact table: value token for (entity, relation) indices.
+pub fn kg_value(ent: u64, rel: u64) -> u32 {
+    VAL0 + (hash2(WORLD_SEED, ent * N_RELS + rel, 0x4B47) % N_VALS) as u32
+}
+
+pub fn topic_keyword(topic: u64, i: u64) -> u32 {
+    VAL0 + (hash2(WORLD_SEED, topic * N_KEYWORDS + i, 0x544F) % N_VALS) as u32
+}
+
+/// 0 = negative-leaning, 1 = positive-leaning.
+pub fn value_polarity(val_tok: u32) -> u64 {
+    hash2(WORLD_SEED, val_tok as u64, 0x504F) % 2
+}
+
+pub fn sample_seed(task_idx: u64, split: u64, index: u64) -> u64 {
+    WORLD_SEED ^ task_idx.wrapping_mul(0x0100_0003) ^ (split << 40) ^ index
+}
+
+// ------------------------------ generators ---------------------------------
+
+fn gen_kgqa(rng: &mut Rng) -> Sample {
+    let ent = ENT0 + rng.below(N_ENTS) as u32;
+    let rel = REL0 + rng.below(N_RELS) as u32;
+    Sample {
+        task: Task::Kgqa,
+        prompt: vec![TM_KGQA, QUERY, ent, rel, SEP],
+        answer: vec![kg_value((ent - ENT0) as u64, (rel - REL0) as u64)],
+    }
+}
+
+fn gen_sst2(rng: &mut Rng) -> Sample {
+    let n = 8 + rng.below(5);
+    let label = rng.below(2);
+    let mut words = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        let w = if rng.chance(7, 10) {
+            loop {
+                let w = VAL0 + rng.below(N_VALS) as u32;
+                if value_polarity(w) == label {
+                    break w;
+                }
+            }
+        } else {
+            VAL0 + rng.below(N_VALS) as u32
+        };
+        words.push(w);
+    }
+    let pos: u64 = words.iter().map(|w| value_polarity(*w)).sum();
+    let lab = if 2 * pos > words.len() as u64 { POS_TOK } else { NEG_TOK };
+    let mut prompt = vec![TM_SENT];
+    prompt.extend_from_slice(&words);
+    prompt.push(SEP);
+    Sample { task: Task::Sst2, prompt, answer: vec![lab] }
+}
+
+fn doc_sentences(rng: &mut Rng, n_sents: u64) -> (Vec<[u32; 4]>, Vec<u64>) {
+    let mut sents = Vec::new();
+    let mut ents = Vec::new();
+    for _ in 0..n_sents {
+        let e = rng.below(N_ENTS);
+        let r = rng.below(N_RELS);
+        ents.push(e);
+        sents.push([
+            ENT0 + e as u32,
+            REL0 + r as u32,
+            kg_value(e, r),
+            FILL0 + rng.below(N_FILLS) as u32,
+        ]);
+    }
+    (sents, ents)
+}
+
+fn gen_cnndm(rng: &mut Rng) -> Sample {
+    let topic = rng.below(N_TOPICS);
+    let n = 4 + rng.below(3);
+    let (sents, _) = doc_sentences(rng, n);
+    let mut prompt = vec![TM_SUM, TOPIC0 + topic as u32];
+    for s in &sents {
+        prompt.extend_from_slice(s);
+    }
+    prompt.push(SEP);
+    let answer = (0..N_KEYWORDS).map(|i| topic_keyword(topic, i)).collect();
+    Sample { task: Task::Cnndm, prompt, answer }
+}
+
+fn gen_xsum(rng: &mut Rng) -> Sample {
+    let topic = rng.below(N_TOPICS);
+    let n = 4 + rng.below(3);
+    let (sents, ents) = doc_sentences(rng, n);
+    let mut prompt = vec![TM_XSUM, TOPIC0 + topic as u32];
+    for s in &sents {
+        prompt.extend_from_slice(s);
+    }
+    prompt.push(SEP);
+    // majority entity, ties toward larger count then smaller id — mirror of
+    // python's max(set(ents), key=lambda e: (ents.count(e), -e))
+    let mut uniq: Vec<u64> = Vec::new();
+    for e in &ents {
+        if !uniq.contains(e) {
+            uniq.push(*e);
+        }
+    }
+    let e_major = uniq
+        .iter()
+        .copied()
+        .max_by_key(|e| {
+            let cnt = ents.iter().filter(|x| *x == e).count() as i64;
+            (cnt, -(*e as i64))
+        })
+        .unwrap();
+    let rot = e_major % 4;
+    let answer = (0..4)
+        .map(|i| topic_keyword(topic, (rot + i) % N_KEYWORDS))
+        .collect();
+    Sample { task: Task::Xsum, prompt, answer }
+}
+
+fn gen_llqa(rng: &mut Rng) -> Sample {
+    let n = (6 + rng.below(5)) as usize;
+    let mut slots: Vec<u64> = (0..N_SLOTS).collect();
+    // fisher-yates, mirror of python (i from N-1 down to 1)
+    for i in (1..N_SLOTS as usize).rev() {
+        let j = rng.below((i + 1) as u64) as usize;
+        slots.swap(i, j);
+    }
+    let mut chosen: Vec<u64> = slots[..n].to_vec();
+    chosen.sort_unstable();
+    let mut log = Vec::new();
+    let mut acts = std::collections::BTreeMap::new();
+    for &s in &chosen {
+        let a = rng.below(N_ACTS);
+        acts.insert(s, a);
+        log.push(SLOT0 + s as u32);
+        log.push(ACT0 + a as u32);
+    }
+    let q = chosen[rng.below(n as u64) as usize];
+    let mut prompt = vec![TM_LLQA];
+    prompt.extend_from_slice(&log);
+    prompt.extend_from_slice(&[QUERY, SLOT0 + q as u32, SEP]);
+    Sample { task: Task::Llqa, prompt, answer: vec![ACT0 + acts[&q] as u32] }
+}
+
+fn gen_heysquad(rng: &mut Rng) -> Sample {
+    let mut facts = Vec::new();
+    for _ in 0..3 {
+        let e = rng.below(N_ENTS);
+        let r = rng.below(N_RELS);
+        facts.push((e, r));
+    }
+    let mut ctx = Vec::new();
+    for &(e, r) in &facts {
+        ctx.push(ENT0 + e as u32);
+        ctx.push(REL0 + r as u32);
+        ctx.push(kg_value(e, r));
+        ctx.push(FILL0 + rng.below(N_FILLS) as u32);
+    }
+    let (qe, qr) = facts[rng.below(3) as usize];
+    let answer = vec![kg_value(qe, qr)];
+    let noisy: Vec<u32> = ctx
+        .iter()
+        .map(|&t| {
+            // python evaluates the replacement draw BEFORE the chance test?
+            // No: `(VAL0 + rng.below(N_VALS)) if rng.chance(1,10) else t`
+            // evaluates chance first, then the replacement draw when taken.
+            if rng.chance(1, 10) {
+                VAL0 + rng.below(N_VALS) as u32
+            } else {
+                t
+            }
+        })
+        .collect();
+    let mut prompt = vec![TM_HEY];
+    prompt.extend_from_slice(&noisy);
+    prompt.extend_from_slice(&[QUERY, ENT0 + qe as u32, REL0 + qr as u32, SEP]);
+    Sample { task: Task::Heysquad, prompt, answer }
+}
+
+fn gen_sensorqa(rng: &mut Rng) -> Sample {
+    let n_kinds = 3 + rng.below(3);
+    let kinds: Vec<u32> = (0..n_kinds).map(|_| VAL0 + rng.below(N_VALS) as u32).collect();
+    let n = 10 + rng.below(6);
+    let readings: Vec<u32> = (0..n).map(|_| kinds[rng.below(n_kinds) as usize]).collect();
+    let mut counts = std::collections::BTreeMap::new();
+    for &r in &readings {
+        *counts.entry(r).or_insert(0usize) += 1;
+    }
+    // mode; ties toward smaller token id (mirror of python min by (-count, k))
+    let mode = *counts
+        .iter()
+        .min_by_key(|(k, v)| (-(**v as i64), **k))
+        .unwrap()
+        .0;
+    let mut prompt = vec![TM_SENSOR];
+    prompt.extend_from_slice(&readings);
+    prompt.extend_from_slice(&[QUERY, AGG_MODE, SEP]);
+    Sample { task: Task::Sensorqa, prompt, answer: vec![mode, UNIT] }
+}
+
+/// Cross-language entry point: same `(task, split, index)` → same sample
+/// as `synthlang.generate` in Python. `split`: 0 = train, 1 = eval.
+pub fn generate(task: Task, split: u64, index: u64) -> Sample {
+    let mut rng = Rng::new(sample_seed(task.index(), split, index));
+    match task {
+        Task::Kgqa => gen_kgqa(&mut rng),
+        Task::Sst2 => gen_sst2(&mut rng),
+        Task::Cnndm => gen_cnndm(&mut rng),
+        Task::Xsum => gen_xsum(&mut rng),
+        Task::Llqa => gen_llqa(&mut rng),
+        Task::Heysquad => gen_heysquad(&mut rng),
+        Task::Sensorqa => gen_sensorqa(&mut rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        for task in TASKS {
+            let a = generate(task, 1, 3);
+            let b = generate(task, 1, 3);
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.answer, b.answer);
+        }
+    }
+
+    #[test]
+    fn split_and_index_vary() {
+        let a = generate(Task::Kgqa, 1, 0);
+        let b = generate(Task::Kgqa, 1, 1);
+        let c = generate(Task::Kgqa, 0, 0);
+        assert!(a.prompt != b.prompt || a.answer != b.answer);
+        assert!(a.prompt != c.prompt || a.answer != c.answer);
+    }
+
+    #[test]
+    fn prompts_fit_runtime_budget() {
+        // device prefill assumes prompt ≤ 40 and prompt+answer ≤ 56 (< max_len 64)
+        for task in TASKS {
+            for i in 0..200 {
+                let s = generate(task, 1, i);
+                assert!(s.prompt.len() <= 40, "{} prompt {}", task.name(), s.prompt.len());
+                assert!(s.prompt.len() + s.answer.len() <= 56);
+                assert!(!s.answer.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn kgqa_answer_matches_fact_table() {
+        for i in 0..50 {
+            let s = generate(Task::Kgqa, 1, i);
+            let e = (s.prompt[2] - ENT0) as u64;
+            let r = (s.prompt[3] - REL0) as u64;
+            assert_eq!(s.answer[0], kg_value(e, r));
+        }
+    }
+
+    #[test]
+    fn sensorqa_mode_is_true_mode() {
+        for i in 0..50 {
+            let s = generate(Task::Sensorqa, 1, i);
+            let readings = &s.prompt[1..s.prompt.len() - 3];
+            let mode = s.answer[0];
+            let mode_count = readings.iter().filter(|&&t| t == mode).count();
+            for &t in readings {
+                let c = readings.iter().filter(|&&x| x == t).count();
+                assert!(
+                    c < mode_count || (c == mode_count && mode <= t),
+                    "mode {mode} not maximal vs {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sst2_label_is_majority_polarity() {
+        for i in 0..50 {
+            let s = generate(Task::Sst2, 1, i);
+            let words = &s.prompt[1..s.prompt.len() - 1];
+            let pos: u64 = words.iter().map(|w| value_polarity(*w)).sum();
+            let expect = if 2 * pos > words.len() as u64 { POS_TOK } else { NEG_TOK };
+            assert_eq!(s.answer[0], expect);
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Multi-user request traces for the scalability experiments (Fig. 15).
+//!
+//! Poisson arrivals of evaluation samples from a task mix, attributed to
+//! a population of simulated devices.
+
+use crate::util::rng::Rng;
+use crate::workload::synthlang::{generate, Sample, Task, TASKS};
+
+/// One request in an open-loop arrival trace.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Arrival time in seconds from trace start.
+    pub at_s: f64,
+    /// Originating device id `0..n_devices`.
+    pub device: usize,
+    pub sample: Sample,
+}
+
+/// Open-loop Poisson trace: `rate_rps` requests/second across `n_devices`.
+pub fn poisson_trace(
+    seed: u64,
+    n_devices: usize,
+    rate_rps: f64,
+    duration_s: f64,
+    tasks: &[Task],
+) -> Vec<TraceEvent> {
+    assert!(!tasks.is_empty() && n_devices > 0 && rate_rps > 0.0);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    let mut idx = 0u64;
+    while t < duration_s {
+        t += rng.exp(rate_rps);
+        if t >= duration_s {
+            break;
+        }
+        let task = tasks[rng.below(tasks.len() as u64) as usize];
+        let device = rng.below(n_devices as u64) as usize;
+        out.push(TraceEvent { at_s: t, device, sample: generate(task, 1, 1000 + idx) });
+        idx += 1;
+    }
+    out
+}
+
+/// Fixed-size eval set for a dataset (deterministic, held-out split).
+pub fn eval_set(task: Task, n: usize) -> Vec<Sample> {
+    (0..n as u64).map(|i| generate(task, 1, i)).collect()
+}
+
+/// A balanced mixed-task eval set (used by profiling and cost experiments).
+pub fn mixed_eval_set(n_per_task: usize) -> Vec<Sample> {
+    let mut v = Vec::new();
+    for t in TASKS {
+        v.extend(eval_set(t, n_per_task));
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_is_calibrated() {
+        let tr = poisson_trace(1, 4, 50.0, 20.0, &[Task::Xsum]);
+        let rate = tr.len() as f64 / 20.0;
+        assert!((rate - 50.0).abs() < 5.0, "rate {rate}");
+        // arrivals are sorted and in range
+        for w in tr.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s);
+        }
+        assert!(tr.iter().all(|e| e.device < 4));
+    }
+
+    #[test]
+    fn trace_is_deterministic() {
+        let a = poisson_trace(7, 2, 5.0, 10.0, &TASKS);
+        let b = poisson_trace(7, 2, 5.0, 10.0, &TASKS);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.device, y.device);
+            assert_eq!(x.sample.prompt, y.sample.prompt);
+        }
+    }
+
+    #[test]
+    fn eval_set_distinct_and_stable() {
+        let s = eval_set(Task::Cnndm, 16);
+        assert_eq!(s.len(), 16);
+        assert!(s.windows(2).any(|w| w[0].prompt != w[1].prompt));
+    }
+}

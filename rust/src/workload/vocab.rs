@@ -1,0 +1,42 @@
+//! SynthLang vocabulary layout — MUST match `python/compile/synthlang.py`.
+
+pub const VOCAB: usize = 512;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const SEP: u32 = 3;
+pub const QUERY: u32 = 4;
+
+pub const TM_KGQA: u32 = 10;
+pub const TM_SENT: u32 = 11;
+pub const TM_SUM: u32 = 12;
+pub const TM_XSUM: u32 = 13;
+pub const TM_LLQA: u32 = 14;
+pub const TM_HEY: u32 = 15;
+pub const TM_SENSOR: u32 = 16;
+
+pub const POS_TOK: u32 = 20;
+pub const NEG_TOK: u32 = 21;
+pub const AGG_MODE: u32 = 24;
+pub const UNIT: u32 = 25;
+
+pub const SLOT0: u32 = 30;
+pub const N_SLOTS: u64 = 16;
+pub const ACT0: u32 = 50;
+pub const N_ACTS: u64 = 32;
+pub const ENT0: u32 = 100;
+pub const N_ENTS: u64 = 48;
+pub const REL0: u32 = 170;
+pub const N_RELS: u64 = 8;
+pub const VAL0: u32 = 200;
+pub const N_VALS: u64 = 128;
+pub const TOPIC0: u32 = 350;
+pub const N_TOPICS: u64 = 24;
+pub const FILL0: u32 = 400;
+pub const N_FILLS: u64 = 112;
+
+pub const N_KEYWORDS: u64 = 8;
+
+/// Fixed world identity ("SYNERA!"), mirror of `synthlang.WORLD_SEED`.
+pub const WORLD_SEED: u64 = 0x0053_594E_4552_4121;

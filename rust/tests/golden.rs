@@ -1,0 +1,36 @@
+//! Generator parity: replay `artifacts/golden_workload.json` (written by
+//! the Python side during `make artifacts`) through the Rust SynthLang
+//! mirror and require byte-identical samples. This is what guarantees
+//! the Python-trained models and the Rust serving stack see the same
+//! data distribution.
+
+use synera::runtime::artifacts_dir;
+use synera::util::json::Json;
+use synera::workload::synthlang::{generate, Task};
+
+#[test]
+fn golden_workload_matches_python() {
+    let path = artifacts_dir().join("golden_workload.json");
+    let j = Json::parse_file(&path).expect("run `make artifacts` first");
+    let arr = j.as_arr().unwrap();
+    assert!(arr.len() >= 7 * 8, "golden file too small: {}", arr.len());
+    for g in arr {
+        let task = Task::from_name(g.get("task").unwrap().as_str().unwrap()).unwrap();
+        let index = g.get("index").unwrap().as_usize().unwrap() as u64;
+        let want_prompt: Vec<u32> = g
+            .get("prompt").unwrap().as_arr().unwrap()
+            .iter().map(|x| x.as_usize().unwrap() as u32).collect();
+        let want_answer: Vec<u32> = g
+            .get("answer").unwrap().as_arr().unwrap()
+            .iter().map(|x| x.as_usize().unwrap() as u32).collect();
+        let got = generate(task, 1, index);
+        assert_eq!(got.prompt, want_prompt, "{} #{index} prompt", task.name());
+        assert_eq!(got.answer, want_answer, "{} #{index} answer", task.name());
+        assert_eq!(
+            got.task.is_classification(),
+            g.get("classification").unwrap().as_bool().unwrap(),
+            "{} metric kind",
+            task.name()
+        );
+    }
+}

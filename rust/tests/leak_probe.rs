@@ -1,0 +1,90 @@
+//! RSS probe for the engine hot loop (run with --ignored).
+use synera::model::{CloudEngine, SlotChunk};
+use synera::runtime::Runtime;
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    s.lines().find(|l| l.starts_with("VmRSS")).unwrap()
+        .split_whitespace().nth(1).unwrap().parse::<f64>().unwrap() / 1024.0
+}
+
+#[test]
+#[ignore]
+fn engine_loop_rss() {
+    let rt = Runtime::load_default().unwrap();
+    let mut eng = CloudEngine::new(rt.model("l13b").unwrap()).unwrap();
+    let s = eng.alloc_slot(1).unwrap();
+    println!("start rss={:.0}MB", rss_mb());
+    for i in 0..300 {
+        eng.run_batch(&[SlotChunk { slot: s, tokens: vec![200, 201, 202, 203] }]).unwrap();
+        eng.rollback(s, 0);
+        if i % 50 == 49 {
+            println!("iter {i} rss={:.0}MB", rss_mb());
+        }
+    }
+}
+
+#[test]
+#[ignore]
+fn fig15_sim_rss() {
+    use synera::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
+    use synera::net::wire::Dist;
+    use synera::util::rng::Rng;
+    let rt = Runtime::load_default().unwrap();
+    let gamma = rt.meta.gamma;
+    let budget = 0.3f64;
+    let user_rps = 5.0;
+    let offl = (budget + 0.15).min(1.0);
+    let verifies_per_req = ((16.0 * offl / gamma as f64).ceil()) as usize;
+    let verify_rps = user_rps * verifies_per_req as f64;
+    let uncached_len = ((gamma as f64 * (1.0 - offl) / offl).round() as usize).max(1);
+    println!("vpr={verifies_per_req} vrps={verify_rps} unc={uncached_len}");
+
+    let mut rng = Rng::new(0xF15 ^ (budget * 100.0) as u64 ^ user_rps as u64);
+    let horizon = 1.2;
+    let mut arrivals: Vec<(f64, u64)> = Vec::new();
+    let mut t = 0.0;
+    let mut id = 1u64;
+    while t < horizon {
+        t += rng.exp(verify_rps);
+        if t >= horizon { break; }
+        arrivals.push((t, id));
+        id += 1;
+    }
+    println!("arrivals={} rss={:.0}MB", arrivals.len(), rss_mb());
+
+    let mut sched = Scheduler::new(CloudEngine::new(rt.model("l13b").unwrap()).unwrap(), 0x5CA1E);
+    let mut now = 0.0f64;
+    let mut next = 0usize;
+    let mut done = 0usize;
+    for i in 0..2_500 {
+        while next < arrivals.len() && arrivals[next].0 <= now {
+            let (_, aid) = arrivals[next];
+            sched.submit(CloudRequest::Verify {
+                request_id: aid,
+                device_id: aid as u32,
+                uncached: (0..uncached_len).map(|_| 200 + rng.below(128) as u32).collect(),
+                draft: (0..gamma).map(|_| 200 + rng.below(128) as u32).collect(),
+                dists: vec![Dist::Dense(vec![1.0 / 512.0; 512]); gamma],
+                greedy: true,
+            }).unwrap();
+            next += 1;
+        }
+        if sched.is_idle() {
+            match arrivals.get(next) {
+                Some(a) => { now = a.0; continue; }
+                None => break,
+            }
+        }
+        let (events, dt) = sched.tick().unwrap();
+        now += dt.max(1e-6);
+        for e in events {
+            if let CloudEvent::VerifyDone { request_id, .. } = e {
+                done += 1;
+                sched.submit(CloudRequest::Release { request_id }).unwrap();
+            }
+        }
+        if i % 200 == 199 { println!("tick {i} now={now:.3} done={done} rss={:.0}MB", rss_mb()); }
+    }
+    println!("END done={done} rss={:.0}MB", rss_mb());
+}

@@ -1,0 +1,248 @@
+//! Property-based invariant suites (via the in-repo `testutil::prop`
+//! driver — seeded splitmix64 case generation, failing-seed reporting).
+
+use synera::cloud::verifier::verify_chunk;
+use synera::config::SyneraParams;
+use synera::device::codec::compress_dist;
+use synera::device::offload::Selector;
+use synera::device::parallel::predict_rejection;
+use synera::metrics::quality::rouge1;
+use synera::model::logits::{argmax, margin_top12, softmax, top_k};
+use synera::net::wire::{Dist, UplinkMsg};
+use synera::testutil::{check, f64_in, prob_vec, usize_in};
+use synera::util::json::Json;
+use synera::util::rng::Rng;
+
+#[test]
+fn prop_softmax_is_distribution() {
+    check("softmax sums to 1 and is monotone", |rng| {
+        let n = usize_in(rng, 2, 512);
+        let logits: Vec<f32> = (0..n).map(|_| (f64_in(rng, -30.0, 30.0)) as f32).collect();
+        let p = softmax(&logits);
+        let s: f32 = p.iter().sum();
+        if (s - 1.0).abs() > 1e-4 {
+            return Err(format!("sum {s}"));
+        }
+        if argmax(&p) != argmax(&logits) {
+            return Err("argmax changed".into());
+        }
+        let m = margin_top12(&p);
+        if !(0.0..=1.0).contains(&m) {
+            return Err(format!("margin {m}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_returns_k_largest() {
+    check("top_k is the k largest, descending", |rng| {
+        let n = usize_in(rng, 1, 256);
+        let k = usize_in(rng, 1, n);
+        let xs: Vec<f32> = (0..n).map(|_| f64_in(rng, 0.0, 1.0) as f32).collect();
+        let idx = top_k(&xs, k);
+        if idx.len() != k {
+            return Err("wrong k".into());
+        }
+        for w in idx.windows(2) {
+            if xs[w[0]] < xs[w[1]] {
+                return Err("not descending".into());
+            }
+        }
+        let min_in = idx.iter().map(|&i| xs[i]).fold(f32::INFINITY, f32::min);
+        for (i, &x) in xs.iter().enumerate() {
+            if !idx.contains(&i) && x > min_in + 1e-9 {
+                return Err(format!("missed larger value {x} at {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_selector_probabilities_valid_and_monotone() {
+    check("P_conf/P_imp in [0,1], P_imp monotone in i", |rng| {
+        let c_th = f64_in(rng, 0.1, 0.95);
+        let i_th = f64_in(rng, 0.05, 5.0);
+        let s = Selector::new(c_th, i_th, SyneraParams::default());
+        let mut prev = -1.0;
+        for i in 0..50 {
+            let x = i as f64 / 49.0 * i_th * 1.4;
+            let p = s.p_imp(x);
+            if !(0.0..=1.0).contains(&p) || p + 1e-9 < prev {
+                return Err(format!("p_imp({x}) = {p}, prev {prev}"));
+            }
+            prev = p;
+        }
+        for i in 0..50 {
+            let c = i as f64 / 49.0;
+            let p = s.p_conf(c);
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("p_conf({c}) = {p}"));
+            }
+            if c <= c_th && p != 1.0 {
+                return Err("below threshold must dispatch to stage 2".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_verify_accepted_prefix_matches_greedy_argmax() {
+    check("greedy verify accepts exactly the argmax-matching prefix", |rng| {
+        let v = 64;
+        let gamma = usize_in(rng, 1, 6);
+        let draft: Vec<u32> = (0..gamma).map(|_| rng.below(v as u64) as u32).collect();
+        let q_rows: Vec<Vec<f32>> = (0..=gamma).map(|_| prob_vec(rng, v)).collect();
+        let dists: Vec<Dist> = (0..gamma).map(|_| Dist::Dense(prob_vec(rng, v))).collect();
+        let mut vr = Rng::new(rng.next_u64());
+        let out = verify_chunk(&draft, &dists, &q_rows, true, &mut vr);
+        let mut expect = gamma;
+        for j in 0..gamma {
+            if argmax(&q_rows[j]) as u32 != draft[j] {
+                expect = j;
+                break;
+            }
+        }
+        if out.accepted != expect {
+            return Err(format!("accepted {} want {expect}", out.accepted));
+        }
+        if out.accepted < gamma && out.next_token != argmax(&q_rows[out.accepted]) as u32 {
+            return Err("correction is not argmax q".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stochastic_verify_never_reduces_q_support() {
+    check("stochastic corrections live where q > 0", |rng| {
+        let v = 32;
+        let draft = vec![rng.below(v as u64) as u32];
+        let q0 = prob_vec(rng, v);
+        let q_rows = vec![q0.clone(), prob_vec(rng, v)];
+        let dists = vec![Dist::Dense(prob_vec(rng, v))];
+        let mut vr = Rng::new(rng.next_u64());
+        let out = verify_chunk(&draft, &dists, &q_rows, false, &mut vr);
+        if out.accepted == 0 && q0[out.next_token as usize] <= 0.0 {
+            return Err("corrected token outside q support".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rejection_prediction_in_range() {
+    check("r* ∈ [0, γ)", |rng| {
+        let gamma = usize_in(rng, 1, 8);
+        let confs: Vec<f32> = (0..gamma).map(|_| f64_in(rng, 0.0, 1.0) as f32).collect();
+        let alpha = f64_in(rng, 0.05, 0.95);
+        let mut pr = Rng::new(rng.next_u64());
+        match predict_rejection(alpha, &confs, &mut pr) {
+            Some(r) if r < gamma => Ok(()),
+            Some(r) => Err(format!("r*={r} out of range")),
+            None => Err("unexpected None".into()),
+        }
+    });
+}
+
+#[test]
+fn prop_codec_preserves_topk_mass_and_shrinks_wire() {
+    check("compression keeps top-k probs, shrinks bytes", |rng| {
+        let v = 512;
+        let p = prob_vec(rng, v);
+        let k = usize_in(rng, 1, 16);
+        let d = compress_dist(&p, k);
+        for &i in top_k(&p, k).iter() {
+            let got = d.prob_of(i as u32);
+            if (got - p[i]).abs() > 2e-3 {
+                return Err(format!("prob {i}: {got} vs {}", p[i]));
+            }
+        }
+        let msg = |dists: Vec<Dist>| UplinkMsg {
+            request_id: 0,
+            device_id: 0,
+            uncached: vec![1],
+            draft: vec![1],
+            dists,
+            is_first: false,
+        };
+        let dense = msg(vec![Dist::Dense(p.clone())]).wire_bytes();
+        let sparse = msg(vec![d]).wire_bytes();
+        if sparse * 4 > dense {
+            return Err(format!("sparse {sparse} not ≪ dense {dense}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rouge_bounds_and_identity() {
+    check("rouge1 ∈ [0,1], =1 on permutations", |rng| {
+        let n = usize_in(rng, 1, 32);
+        let a: Vec<u32> = (0..n).map(|_| rng.below(100) as u32).collect();
+        let mut b = a.clone();
+        // deterministic shuffle
+        for i in (1..b.len()).rev() {
+            let j = rng.below((i + 1) as u64) as usize;
+            b.swap(i, j);
+        }
+        let r = rouge1(&a, &b);
+        if (r - 1.0).abs() > 1e-12 {
+            return Err(format!("permutation rouge {r}"));
+        }
+        let c: Vec<u32> = (0..n).map(|_| 200 + rng.below(50) as u32).collect();
+        let r2 = rouge1(&a, &c);
+        if !(0.0..=1.0).contains(&r2) {
+            return Err(format!("rouge out of bounds {r2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_trees() {
+    check("json write→parse is identity", |rng| {
+        fn gen(rng: &mut Rng, depth: usize) -> Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.below(2) == 1),
+                2 => Json::Num((rng.below(1_000_000) as f64) - 500_000.0),
+                3 => Json::Str(format!("s{}‡\n\"{}", rng.below(100), rng.below(100))),
+                4 => Json::Arr((0..rng.below(4)).map(|_| gen(rng, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(4))
+                        .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen(rng, 3);
+        let v2 = Json::parse(&v.to_string()).map_err(|e| e.to_string())?;
+        if v != v2 {
+            return Err(format!("{v:?} != {v2:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_sizes_scale_with_content() {
+    check("uplink bytes grow with payload", |rng| {
+        let n1 = usize_in(rng, 1, 10);
+        let n2 = n1 + usize_in(rng, 1, 10);
+        let mk = |n: usize| UplinkMsg {
+            request_id: 1,
+            device_id: 0,
+            uncached: vec![5; n],
+            draft: vec![7; 4],
+            dists: vec![Dist::TopK { ids: vec![1, 2], probs_f16: vec![0, 0] }; 4],
+            is_first: false,
+        };
+        if mk(n2).wire_bytes() <= mk(n1).wire_bytes() {
+            return Err("bytes not monotone in payload".into());
+        }
+        Ok(())
+    });
+}
