@@ -2,6 +2,12 @@
 //! rate for offloading budgets 0.3 / 0.6 / 0.9 (discrete-event sim over
 //! the real scheduler+engine; virtual time advances by measured tick
 //! compute, arrivals are Poisson).
+//!
+//! The second table adds a cloud-centric background load (prefill +
+//! decode rows) to the verify stream: under the mixed
+//! continuous-batching scheduler all three classes share iterations, so
+//! verification latency degrades gracefully instead of queueing behind
+//! whole prefill/decode phases.
 
 use synera::bench::Table;
 use synera::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
@@ -10,14 +16,26 @@ use synera::net::wire::Dist;
 use synera::runtime::Runtime;
 use synera::util::rng::Rng;
 
+enum Work {
+    Verify { uncached: Vec<u32>, draft: Vec<u32> },
+    Generate { prompt: Vec<u32>, max_new: usize },
+}
+
 struct Arrival {
     at: f64,
     id: u64,
-    uncached: Vec<u32>,
-    draft: Vec<u32>,
+    work: Work,
 }
 
-fn simulate(rt: &std::rc::Rc<Runtime>, budget: f64, user_rps: f64) -> anyhow::Result<(f64, f64)> {
+/// Simulate `user_rps` offloading users (plus `gen_rps` cloud-centric
+/// users when non-zero); returns verify p50 latency and the completed
+/// fraction across both classes.
+fn simulate(
+    rt: &std::rc::Rc<Runtime>,
+    budget: f64,
+    user_rps: f64,
+    gen_rps: f64,
+) -> anyhow::Result<(f64, f64)> {
     let gamma = rt.meta.gamma;
     // effective offload fraction under the importance filter (budget +
     // sigmoid smear), verifies per user request, uncached gap per verify
@@ -39,31 +57,61 @@ fn simulate(rt: &std::rc::Rc<Runtime>, budget: f64, user_rps: f64) -> anyhow::Re
         arrivals.push(Arrival {
             at: t,
             id,
-            uncached: (0..uncached_len).map(|_| 200 + rng.below(128) as u32).collect(),
-            draft: (0..gamma).map(|_| 200 + rng.below(128) as u32).collect(),
+            work: Work::Verify {
+                uncached: (0..uncached_len).map(|_| 200 + rng.below(128) as u32).collect(),
+                draft: (0..gamma).map(|_| 200 + rng.below(128) as u32).collect(),
+            },
         });
         id += 1;
     }
+    if gen_rps > 0.0 {
+        let mut t = 0.0;
+        while t < horizon {
+            t += rng.exp(gen_rps);
+            if t >= horizon {
+                break;
+            }
+            arrivals.push(Arrival {
+                at: t,
+                id,
+                work: Work::Generate {
+                    prompt: (0..24).map(|_| 200 + rng.below(128) as u32).collect(),
+                    max_new: 8,
+                },
+            });
+            id += 1;
+        }
+        arrivals.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+    }
 
+    // default BatchPolicy: mixed batching, budget = engine capacity
     let mut sched = Scheduler::new(CloudEngine::new(rt.model("l13b")?)?, 0x5CA1E);
     let mut now = 0.0f64;
     let mut next = 0usize;
     let mut start_at = std::collections::HashMap::new();
     let mut lats = Vec::new();
+    let mut done = 0usize;
     // cap simulated work so overload points terminate
     let max_ticks = 2_500;
     for _ in 0..max_ticks {
         while next < arrivals.len() && arrivals[next].at <= now {
             let a = &arrivals[next];
             start_at.insert(a.id, a.at);
-            sched.submit(CloudRequest::Verify {
-                request_id: a.id,
-                device_id: a.id as u32,
-                uncached: a.uncached.clone(),
-                draft: a.draft.clone(),
-                dists: vec![Dist::Dense(vec![1.0 / 512.0; 512]); a.draft.len()],
-                greedy: true,
-            })?;
+            match &a.work {
+                Work::Verify { uncached, draft } => sched.submit(CloudRequest::Verify {
+                    request_id: a.id,
+                    device_id: a.id as u32,
+                    uncached: uncached.clone(),
+                    draft: draft.clone(),
+                    dists: vec![Dist::Dense(vec![1.0 / 512.0; 512]); draft.len()],
+                    greedy: true,
+                })?,
+                Work::Generate { prompt, max_new } => sched.submit(CloudRequest::Generate {
+                    request_id: a.id,
+                    prompt: prompt.clone(),
+                    max_new: *max_new,
+                })?,
+            }
             next += 1;
         }
         if sched.is_idle() {
@@ -78,22 +126,26 @@ fn simulate(rt: &std::rc::Rc<Runtime>, budget: f64, user_rps: f64) -> anyhow::Re
         let (events, dt) = sched.tick()?;
         now += dt.max(1e-6);
         for e in events {
-            if let CloudEvent::VerifyDone { request_id, .. } = e {
-                lats.push(now - start_at[&request_id]);
-                sched.submit(CloudRequest::Release { request_id })?;
+            match e {
+                CloudEvent::VerifyDone { request_id, .. } => {
+                    lats.push(now - start_at[&request_id]);
+                    done += 1;
+                    sched.submit(CloudRequest::Release { request_id })?;
+                }
+                CloudEvent::Generated { .. } => done += 1,
             }
         }
     }
     lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let p50 = lats.get(lats.len() / 2).copied().unwrap_or(f64::NAN);
-    let done_frac = lats.len() as f64 / arrivals.len().max(1) as f64;
+    let done_frac = done as f64 / arrivals.len().max(1) as f64;
     Ok((p50, done_frac))
 }
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::load_default()?;
     // warm the engine (compile) before timing-sensitive simulation
-    let _ = simulate(&rt, 0.3, 5.0)?;
+    let _ = simulate(&rt, 0.3, 5.0, 0.0)?;
     let mut t = Table::new(
         "Fig 15: verification latency (p50, ms) vs offered user request rate",
         &["user req/s", "budget 0.3", "budget 0.6", "budget 0.9"],
@@ -101,7 +153,7 @@ fn main() -> anyhow::Result<()> {
     for rps in [5.0, 15.0, 40.0, 90.0, 180.0] {
         let mut cells = vec![format!("{rps}")];
         for b in [0.3, 0.6, 0.9] {
-            let (p50, done) = simulate(&rt, b, rps)?;
+            let (p50, done) = simulate(&rt, b, rps, 0.0)?;
             if done < 0.9 {
                 cells.push(format!("{:.1} (overload)", p50 * 1e3));
             } else {
@@ -111,5 +163,23 @@ fn main() -> anyhow::Result<()> {
         t.row(&cells);
     }
     t.print();
+
+    let mut t2 = Table::new(
+        "Fig 15b: verify p50 (ms) with cloud-centric background load (20% of user rate)",
+        &["user req/s", "budget 0.3", "budget 0.9"],
+    );
+    for rps in [15.0, 40.0, 90.0] {
+        let mut cells = vec![format!("{rps}")];
+        for b in [0.3, 0.9] {
+            let (p50, done) = simulate(&rt, b, rps, rps * 0.2)?;
+            if done < 0.9 {
+                cells.push(format!("{:.1} (overload)", p50 * 1e3));
+            } else {
+                cells.push(format!("{:.1}", p50 * 1e3));
+            }
+        }
+        t2.row(&cells);
+    }
+    t2.print();
     Ok(())
 }

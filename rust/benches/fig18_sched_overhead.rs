@@ -19,6 +19,7 @@ fn main() -> anyhow::Result<()> {
     for b in [0.1, 0.2, 0.4, 0.6, 0.8, 1.0] {
         let offl = (b as f64 + 0.15).min(1.0);
         let uncached_len = ((gamma as f64 * (1.0 - offl) / offl).round() as usize).max(1);
+        // default BatchPolicy: mixed batching, budget = engine capacity
         let mut sched = Scheduler::new(CloudEngine::new(rt.model("l13b")?)?, 0xF18);
         let mut rng = Rng::new(0xF18);
         let n = 40;

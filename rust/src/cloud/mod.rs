@@ -1,6 +1,7 @@
 //! Cloud runtime (paper §3.4, §4.5): speculative verification and the
-//! verification-aware continuous-batching scheduler over the slot-based
-//! [`crate::model::CloudEngine`].
+//! mixed continuous-batching scheduler — prefill, verification and
+//! decode rows co-scheduled per iteration under a token budget — over
+//! the slot-based [`crate::model::CloudEngine`].
 
 pub mod scheduler;
 pub mod verifier;

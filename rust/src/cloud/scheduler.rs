@@ -1,25 +1,39 @@
-//! Verification-aware scheduler — paper Algorithm 1.
+//! Mixed continuous-batching scheduler (paper Algorithm 1, evolved to a
+//! Sarathi-style single-queue iteration).
 //!
-//! Each `tick()` is one scheduling iteration over the slot-based engine:
-//! prefill requests are admitted and batched first (lines 5–11); when no
-//! prefill work exists, pending verification requests run as **chunked
-//! partial prefill** (lines 12–21, chunk = 32 after Sarathi-Serve) and
-//! are verified when their last chunk lands; cloud-centric decode
-//! batches run when nothing else is waiting. Completed requests leave
-//! the batch (line 22).
+//! Each `tick()` packs **one** engine call from *all* runnable work:
+//!
+//! * **decode rows** — cloud-centric generations past their prefill;
+//!   each contributes a 1-token chunk (latency-critical, packed first);
+//! * **verification chunks** — pending Synera verify rounds, executed
+//!   as chunked partial prefill (chunk = C after Sarathi-Serve) and
+//!   verified when their last chunk lands;
+//! * **prefill chunks** — newly admitted generation prompts.
+//!
+//! Packing runs under a per-iteration token-row budget
+//! ([`BatchPolicy::token_budget`]); while decode or verify rows are
+//! runnable, prefill may claim at most [`BatchPolicy::prefill_share`]
+//! of it (the chunked-prefill cap), so a long prompt stream cannot
+//! induce head-of-line blocking. Any job skipped for
+//! [`BatchPolicy::age_threshold`] consecutive iterations is promoted
+//! ahead of all non-aged work — no class can starve another
+//! indefinitely. Batches mixing 1-token and multi-token rows run on the
+//! chunk executable; pure-decode batches take the engine's `step_b4`
+//! fast path (see [`BatchEngine`]).
 //!
 //! Verification requests keep their slot across rounds (the KV prefix
 //! persists; rejected draft tails are rolled back by position masking).
 //! When all slots are busy, arrivals queue — that queueing is exactly
 //! the latency knee the Fig. 15 scalability experiment measures.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::cloud::verifier::{verify_chunk, VerifyOutcome};
-use crate::model::cloud_engine::{CloudEngine, SlotChunk};
+use crate::config::BatchPolicy;
+use crate::model::cloud_engine::{BatchEngine, CloudEngine, SlotChunk};
 use crate::model::logits::argmax;
 use crate::net::wire::Dist;
 use crate::util::rng::Rng;
@@ -56,9 +70,16 @@ pub enum CloudEvent {
 #[derive(Debug, Clone, Default)]
 pub struct SchedulerStats {
     pub iterations: u64,
+    /// Iterations whose batch contained ≥1 prefill chunk.
     pub prefill_iters: u64,
+    /// Iterations whose batch contained ≥1 verification chunk.
     pub verify_iters: u64,
+    /// Iterations whose batch contained ≥1 decode row.
     pub decode_iters: u64,
+    /// Iterations that co-scheduled more than one work class.
+    pub mixed_iters: u64,
+    /// Jobs scheduled via the aging promotion (fairness escape hatch).
+    pub aged_promotions: u64,
     pub rows_executed: u64,
     /// Engine compute inside ticks.
     pub busy_s: f64,
@@ -77,6 +98,8 @@ struct GenJob {
     max_new: usize,
     generated: Vec<u32>,
     next_token: Option<u32>,
+    /// Consecutive iterations this job was runnable but not scheduled.
+    wait_iters: u64,
 }
 
 struct VerifyJob {
@@ -91,11 +114,31 @@ struct VerifyJob {
     greedy: bool,
     consumed: usize,
     rows: Vec<Vec<f32>>,
+    /// Consecutive iterations this job was runnable but not scheduled.
+    wait_iters: u64,
 }
 
-/// The verification-aware scheduler bound to one [`CloudEngine`].
-pub struct Scheduler {
-    pub engine: CloudEngine,
+/// Work classes in packing-priority order (lower = packed earlier).
+const CLASS_DECODE: u8 = 0;
+const CLASS_VERIFY: u8 = 1;
+const CLASS_PREFILL: u8 = 2;
+
+/// One packed entry of an iteration's batch plan.
+struct Pick {
+    class: u8,
+    /// Index into the class's job pool.
+    idx: usize,
+    /// Token rows granted this iteration.
+    n: usize,
+    /// Scheduled via the aging promotion.
+    aged: bool,
+}
+
+/// The mixed continuous-batching scheduler bound to one [`BatchEngine`]
+/// (the PJRT [`CloudEngine`] in production, a mock in tests).
+pub struct Scheduler<E: BatchEngine = CloudEngine> {
+    pub engine: E,
+    pub policy: BatchPolicy,
     waiting_gen: VecDeque<CloudRequest>,
     waiting_verify: VecDeque<CloudRequest>,
     prefilling: Vec<GenJob>,
@@ -103,20 +146,36 @@ pub struct Scheduler {
     verifying: Vec<VerifyJob>,
     /// Persistent slot per Synera session.
     session_slot: HashMap<u64, usize>,
+    /// Sessions released while a verify round was in flight; their slot
+    /// is freed when that round completes (freeing earlier would hand
+    /// the slot — and its live KV positions — to another job).
+    pending_release: HashSet<u64>,
+    /// Round-robin toggle between the generate and verify admission
+    /// queues (free slots are shared; neither queue can starve).
+    admit_verify_first: bool,
     rng: Rng,
     pub stats: SchedulerStats,
 }
 
-impl Scheduler {
-    pub fn new(engine: CloudEngine, seed: u64) -> Scheduler {
+impl<E: BatchEngine> Scheduler<E> {
+    pub fn new(engine: E, seed: u64) -> Scheduler<E> {
+        Scheduler::with_policy(engine, seed, BatchPolicy::default())
+    }
+
+    /// Build a scheduler with an explicit batching policy (the
+    /// `SyneraParams::batch` config block).
+    pub fn with_policy(engine: E, seed: u64, policy: BatchPolicy) -> Scheduler<E> {
         Scheduler {
             engine,
+            policy,
             waiting_gen: VecDeque::new(),
             waiting_verify: VecDeque::new(),
             prefilling: Vec::new(),
             decoding: Vec::new(),
             verifying: Vec::new(),
             session_slot: HashMap::new(),
+            pending_release: HashSet::new(),
+            admit_verify_first: true,
             rng: Rng::new(seed ^ 0xC10D),
             stats: SchedulerStats::default(),
         }
@@ -124,15 +183,48 @@ impl Scheduler {
 
     pub fn submit(&mut self, req: CloudRequest) -> Result<()> {
         match &req {
-            CloudRequest::Generate { .. } => self.waiting_gen.push_back(req),
-            CloudRequest::Verify { uncached, .. } => {
+            CloudRequest::Generate { prompt, max_new, .. } => {
+                if prompt.is_empty() {
+                    bail!("generation requires ≥1 prompt token");
+                }
+                if *max_new == 0 {
+                    bail!("generation requires max_new ≥ 1");
+                }
+                // reject here rather than let a mid-flight engine-call
+                // failure take down the scheduling loop
+                if prompt.len() + *max_new > self.engine.max_len() {
+                    bail!(
+                        "request needs {} rows but the slot cache holds {}",
+                        prompt.len() + *max_new,
+                        self.engine.max_len()
+                    );
+                }
+                self.waiting_gen.push_back(req);
+            }
+            CloudRequest::Verify { uncached, draft, .. } => {
                 if uncached.is_empty() {
                     bail!("verify round must carry ≥1 uncached token");
+                }
+                if uncached.len() + draft.len() > self.engine.max_len() {
+                    bail!(
+                        "verify round of {} rows exceeds the slot cache ({})",
+                        uncached.len() + draft.len(),
+                        self.engine.max_len()
+                    );
                 }
                 self.waiting_verify.push_back(req);
             }
             CloudRequest::Release { request_id } => {
-                if let Some(slot) = self.session_slot.remove(request_id) {
+                let rid = *request_id;
+                // queued rounds of a released session will never be read
+                self.waiting_verify.retain(
+                    |r| !matches!(r, CloudRequest::Verify { request_id, .. } if *request_id == rid),
+                );
+                if self.verifying.iter().any(|j| j.request_id == rid) {
+                    // the in-flight round still writes this slot's KV;
+                    // defer the free until it completes
+                    self.pending_release.insert(rid);
+                } else if let Some(slot) = self.session_slot.remove(&rid) {
                     self.engine.free_slot(slot);
                 }
             }
@@ -153,238 +245,371 @@ impl Scheduler {
         self.waiting_gen.len() + self.waiting_verify.len()
     }
 
-    /// One Algorithm-1 iteration. Returns surfaced events plus the
-    /// engine compute seconds consumed by this tick (the caller's clock).
+    /// One mixed continuous-batching iteration. Returns surfaced events
+    /// plus the engine compute seconds consumed by this tick (the
+    /// caller's clock).
     pub fn tick(&mut self) -> Result<(Vec<CloudEvent>, f64)> {
         let t_tick = Instant::now();
         self.stats.iterations += 1;
         let mut events = Vec::new();
-        let mut compute_s = 0.0;
 
-        self.admit();
+        self.admit(&mut events)?;
 
-        // ---- lines 5–11: prefill-priority iteration -----------------------
-        if !self.prefilling.is_empty() {
-            self.stats.prefill_iters += 1;
-            let chunk = self.engine.chunk;
-            let mut items = Vec::new();
-            for job in self.prefilling.iter_mut().take(self.engine.slots) {
-                let n = (job.prompt.len() - job.consumed).min(chunk);
-                items.push(SlotChunk {
-                    slot: job.slot,
-                    tokens: job.prompt[job.consumed..job.consumed + n].to_vec(),
-                });
+        // ---- plan: pack one mixed batch under the token budget ------------
+        let chunk = self.engine.chunk();
+        let capacity = self.engine.slots() * chunk;
+        let budget = if self.policy.token_budget == 0 {
+            capacity
+        } else {
+            self.policy.token_budget.clamp(1, capacity)
+        };
+        let age_th = self.policy.age_threshold;
+
+        // candidates: (class, pool index, slot, runnable rows, waited)
+        let mut cands: Vec<(u8, usize, usize, usize, u64)> = Vec::new();
+        for (i, j) in self.decoding.iter().enumerate() {
+            if j.next_token.is_some() {
+                cands.push((CLASS_DECODE, i, j.slot, 1, j.wait_iters));
             }
-            let sched_before = t_tick.elapsed().as_secs_f64();
-            let (res, dt) = self.engine.run_batch(&items)?;
-            compute_s += dt;
-            self.stats.busy_s += dt;
-            let v = self.engine.model.meta.vocab;
-            for r in &res {
-                let job = self
-                    .prefilling
-                    .iter_mut()
-                    .find(|j| j.slot == r.slot)
-                    .expect("job for slot");
-                job.consumed += r.n_rows;
-                if job.consumed == job.prompt.len() {
-                    job.next_token =
-                        Some(argmax(&r.rows[(r.n_rows - 1) * v..r.n_rows * v]) as u32);
-                }
-            }
-            self.stats.rows_executed = self.engine.rows_executed;
-            // move finished prefills to the decode pool
-            let mut i = 0;
-            while i < self.prefilling.len() {
-                if self.prefilling[i].consumed == self.prefilling[i].prompt.len() {
-                    let job = self.prefilling.remove(i);
-                    self.decoding.push(job);
-                } else {
-                    i += 1;
-                }
-            }
-            self.stats.sched_overhead_s += t_tick.elapsed().as_secs_f64() - sched_before - dt;
-            return Ok((events, compute_s));
+        }
+        for (i, j) in self.verifying.iter().enumerate() {
+            cands.push((CLASS_VERIFY, i, j.slot, j.tokens.len() - j.consumed, j.wait_iters));
+        }
+        for (i, j) in self.prefilling.iter().enumerate() {
+            cands.push((CLASS_PREFILL, i, j.slot, j.prompt.len() - j.consumed, j.wait_iters));
+        }
+        if cands.is_empty() {
+            self.stats.sched_overhead_s += t_tick.elapsed().as_secs_f64();
+            return Ok((events, 0.0));
         }
 
-        // ---- lines 12–21: verification iteration --------------------------
-        if !self.verifying.is_empty() {
-            self.stats.verify_iters += 1;
-            let chunk = self.engine.chunk;
-            let mut items = Vec::new();
-            for job in self.verifying.iter_mut().take(self.engine.slots) {
-                let n = (job.tokens.len() - job.consumed).min(chunk);
-                items.push(SlotChunk {
-                    slot: job.slot,
-                    tokens: job.tokens[job.consumed..job.consumed + n].to_vec(),
-                });
+        // aged jobs first (longest wait leads), then decode < verify <
+        // prefill; FIFO within a class (stable sort over pool order)
+        cands.sort_by_key(|&(class, _, _, _, waited)| {
+            if waited >= age_th {
+                (0u8, u64::MAX - waited)
+            } else {
+                (1u8, class as u64)
             }
-            let sched_mark = t_tick.elapsed().as_secs_f64();
-            let (res, dt) = self.engine.run_batch(&items)?;
-            compute_s += dt;
-            self.stats.busy_s += dt;
-            let v = self.engine.model.meta.vocab;
-            for r in &res {
-                let job = self
-                    .verifying
-                    .iter_mut()
-                    .find(|j| j.slot == r.slot)
-                    .expect("job for slot");
-                for i in 0..r.n_rows {
-                    let gi = job.consumed + i; // global row in the verify seq
-                    if gi + 1 >= job.u {
-                        job.rows.push(r.rows[i * v..(i + 1) * v].to_vec());
+        });
+
+        let latency_rows_present =
+            cands.iter().any(|&(class, _, _, _, _)| class != CLASS_PREFILL);
+        // chunked-prefill cap: prompts may not crowd out latency-critical
+        // rows of the same iteration
+        let prefill_cap = if latency_rows_present {
+            (((budget as f64) * self.policy.prefill_share).ceil() as usize).max(1)
+        } else {
+            budget
+        };
+
+        let mut remaining = budget;
+        let mut prefill_used = 0usize;
+        let mut slot_used = vec![false; self.engine.slots()];
+        let mut picks: Vec<Pick> = Vec::new();
+        for &(class, idx, slot, runnable, waited) in &cands {
+            if remaining == 0 {
+                break;
+            }
+            // one chunk per slot per engine call (duplicate slots can
+            // only arise from pipelined verify rounds, which admit()
+            // serialises — this guard keeps the invariant local)
+            if slot_used[slot] {
+                continue;
+            }
+            let mut grant = runnable.min(chunk).min(remaining);
+            if class == CLASS_PREFILL {
+                grant = grant.min(prefill_cap.saturating_sub(prefill_used));
+            }
+            if grant == 0 {
+                continue;
+            }
+            if class == CLASS_PREFILL {
+                prefill_used += grant;
+            }
+            remaining -= grant;
+            slot_used[slot] = true;
+            picks.push(Pick { class, idx, n: grant, aged: waited >= age_th });
+        }
+
+        // fairness accounting: scheduled jobs reset their wait; skipped
+        // runnable jobs age by one iteration
+        let mut picked_decode = vec![false; self.decoding.len()];
+        let mut picked_verify = vec![false; self.verifying.len()];
+        let mut picked_prefill = vec![false; self.prefilling.len()];
+        for p in &picks {
+            match p.class {
+                CLASS_DECODE => picked_decode[p.idx] = true,
+                CLASS_VERIFY => picked_verify[p.idx] = true,
+                _ => picked_prefill[p.idx] = true,
+            }
+            if p.aged {
+                self.stats.aged_promotions += 1;
+            }
+        }
+        for (i, j) in self.decoding.iter_mut().enumerate() {
+            j.wait_iters = if picked_decode[i] { 0 } else { j.wait_iters + 1 };
+        }
+        for (i, j) in self.verifying.iter_mut().enumerate() {
+            j.wait_iters = if picked_verify[i] { 0 } else { j.wait_iters + 1 };
+        }
+        for (i, j) in self.prefilling.iter_mut().enumerate() {
+            j.wait_iters = if picked_prefill[i] { 0 } else { j.wait_iters + 1 };
+        }
+
+        let has_d = picks.iter().any(|p| p.class == CLASS_DECODE);
+        let has_v = picks.iter().any(|p| p.class == CLASS_VERIFY);
+        let has_p = picks.iter().any(|p| p.class == CLASS_PREFILL);
+        self.stats.decode_iters += has_d as u64;
+        self.stats.verify_iters += has_v as u64;
+        self.stats.prefill_iters += has_p as u64;
+        if (has_d as u8 + has_v as u8 + has_p as u8) > 1 {
+            self.stats.mixed_iters += 1;
+        }
+
+        // ---- execute: one engine call for the whole mixed batch -----------
+        let mut items = Vec::with_capacity(picks.len());
+        for p in &picks {
+            let (slot, toks) = match p.class {
+                CLASS_DECODE => {
+                    let j = &self.decoding[p.idx];
+                    (j.slot, vec![j.next_token.expect("decode has next")])
+                }
+                CLASS_VERIFY => {
+                    let j = &self.verifying[p.idx];
+                    (j.slot, j.tokens[j.consumed..j.consumed + p.n].to_vec())
+                }
+                _ => {
+                    let j = &self.prefilling[p.idx];
+                    (j.slot, j.prompt[j.consumed..j.consumed + p.n].to_vec())
+                }
+            };
+            items.push(SlotChunk { slot, tokens: toks });
+        }
+        let (res, dt) = self.engine.run_batch(&items)?;
+        let compute_s = dt;
+        self.stats.busy_s += dt;
+        self.stats.rows_executed = self.engine.rows_executed();
+
+        // ---- apply per-slot results to their jobs -------------------------
+        let v = self.engine.vocab();
+        for (p, item) in picks.iter().zip(&items) {
+            let r = res
+                .iter()
+                .find(|r| r.slot == item.slot)
+                .expect("engine result for scheduled slot");
+            match p.class {
+                CLASS_DECODE => {
+                    let job = &mut self.decoding[p.idx];
+                    let committed = job.next_token.take().expect("token");
+                    job.generated.push(committed);
+                    let next = argmax(&r.rows) as u32;
+                    if committed != EOS && job.generated.len() < job.max_new {
+                        job.next_token = Some(next);
+                    } // else: done (committed EOS or budget reached)
+                }
+                CLASS_VERIFY => {
+                    let job = &mut self.verifying[p.idx];
+                    for i in 0..r.n_rows {
+                        let gi = job.consumed + i; // global row in the verify seq
+                        if gi + 1 >= job.u {
+                            job.rows.push(r.rows[i * v..(i + 1) * v].to_vec());
+                        }
+                    }
+                    job.consumed += r.n_rows;
+                }
+                _ => {
+                    let job = &mut self.prefilling[p.idx];
+                    job.consumed += r.n_rows;
+                    if job.consumed == job.prompt.len() {
+                        job.next_token =
+                            Some(argmax(&r.rows[(r.n_rows - 1) * v..r.n_rows * v]) as u32);
                     }
                 }
-                job.consumed += r.n_rows;
             }
-            self.stats.rows_executed = self.engine.rows_executed;
+        }
 
-            let mut i = 0;
-            while i < self.verifying.len() {
-                if self.verifying[i].consumed == self.verifying[i].tokens.len() {
-                    let job = self.verifying.remove(i);
-                    let outcome = verify_chunk(
-                        &job.draft,
-                        &job.dists,
-                        &job.rows,
-                        job.greedy,
-                        &mut self.rng,
-                    );
-                    self.stats.verifies_done += 1;
-                    self.stats.draft_tokens_seen += job.draft.len() as u64;
-                    self.stats.draft_tokens_accepted += outcome.accepted as u64;
+        // ---- completions --------------------------------------------------
+        // finished prefills join the decode pool (run from next tick on)
+        let mut i = 0;
+        while i < self.prefilling.len() {
+            if self.prefilling[i].consumed == self.prefilling[i].prompt.len() {
+                let job = self.prefilling.remove(i);
+                self.decoding.push(job);
+            } else {
+                i += 1;
+            }
+        }
+        // fully-forwarded verify rounds: run acceptance, roll back the
+        // rejected tail, surface the outcome
+        let mut i = 0;
+        while i < self.verifying.len() {
+            if self.verifying[i].consumed == self.verifying[i].tokens.len() {
+                let job = self.verifying.remove(i);
+                let outcome = verify_chunk(
+                    &job.draft,
+                    &job.dists,
+                    &job.rows,
+                    job.greedy,
+                    &mut self.rng,
+                );
+                self.stats.verifies_done += 1;
+                self.stats.draft_tokens_seen += job.draft.len() as u64;
+                self.stats.draft_tokens_accepted += outcome.accepted as u64;
+                if self.pending_release.remove(&job.request_id) {
+                    // the session was released mid-round: free the slot
+                    // now that its last round has committed
+                    if let Some(slot) = self.session_slot.remove(&job.request_id) {
+                        self.engine.free_slot(slot);
+                    }
+                } else {
                     // commit prefix + uncached + accepted; mask the rest
                     self.engine
                         .rollback(job.slot, job.base_len + job.u + outcome.accepted);
-                    events.push(CloudEvent::VerifyDone {
-                        request_id: job.request_id,
-                        device_id: job.device_id,
-                        outcome,
-                    });
-                } else {
-                    i += 1;
                 }
+                events.push(CloudEvent::VerifyDone {
+                    request_id: job.request_id,
+                    device_id: job.device_id,
+                    outcome,
+                });
+            } else {
+                i += 1;
             }
-            self.stats.sched_overhead_s += t_tick.elapsed().as_secs_f64() - sched_mark - dt;
-            return Ok((events, compute_s));
+        }
+        // finished generations leave the batch and free their slot
+        let mut i = 0;
+        while i < self.decoding.len() {
+            if self.decoding[i].next_token.is_none() {
+                let job = self.decoding.remove(i);
+                self.engine.free_slot(job.slot);
+                events.push(CloudEvent::Generated {
+                    request_id: job.request_id,
+                    tokens: job.generated,
+                });
+            } else {
+                i += 1;
+            }
         }
 
-        // ---- cloud-centric decode batch ------------------------------------
-        if !self.decoding.is_empty() {
-            self.stats.decode_iters += 1;
-            let toks: Vec<(usize, u32)> = self
-                .decoding
-                .iter()
-                .take(self.engine.slots)
-                .map(|j| (j.slot, j.next_token.expect("decode has next")))
-                .collect();
-            let sched_mark = t_tick.elapsed().as_secs_f64();
-            let (res, dt) = self.engine.run_decode(&toks)?;
-            compute_s += dt;
-            self.stats.busy_s += dt;
-            for r in &res {
-                let job = self
-                    .decoding
-                    .iter_mut()
-                    .find(|j| j.slot == r.slot)
-                    .expect("job for slot");
-                let committed = job.next_token.take().expect("token");
-                job.generated.push(committed);
-                let next = argmax(&r.rows) as u32;
-                if committed == EOS || job.generated.len() >= job.max_new {
-                    // done (committed EOS or budget reached)
-                } else {
-                    job.next_token = Some(next);
-                }
-            }
-            self.stats.rows_executed = self.engine.rows_executed;
-            let mut i = 0;
-            while i < self.decoding.len() {
-                if self.decoding[i].next_token.is_none() {
-                    let job = self.decoding.remove(i);
-                    self.engine.free_slot(job.slot);
-                    events.push(CloudEvent::Generated {
-                        request_id: job.request_id,
-                        tokens: job.generated,
-                    });
-                } else {
-                    i += 1;
-                }
-            }
-            self.stats.sched_overhead_s += t_tick.elapsed().as_secs_f64() - sched_mark - dt;
-            return Ok((events, compute_s));
-        }
-
-        self.stats.sched_overhead_s += t_tick.elapsed().as_secs_f64();
+        self.stats.sched_overhead_s += t_tick.elapsed().as_secs_f64() - dt;
         Ok((events, compute_s))
     }
 
-    /// Admit waiting requests into free slots.
-    fn admit(&mut self) {
-        while !self.waiting_gen.is_empty() && self.engine.free_slots() > 0 {
-            if let Some(CloudRequest::Generate { request_id, prompt, max_new }) =
-                self.waiting_gen.pop_front()
-            {
-                let slot = self.engine.alloc_slot(request_id).expect("free slot");
-                self.prefilling.push(GenJob {
-                    request_id,
-                    prompt,
-                    consumed: 0,
-                    slot,
-                    max_new,
-                    generated: Vec::new(),
-                    next_token: None,
-                });
-            }
-        }
-        let mut requeue = VecDeque::new();
+    /// Admit waiting requests. Verify rounds whose session already owns
+    /// a slot are admitted unconditionally (they consume no new slot;
+    /// rounds of one session stay serialised — a round's `base_len`
+    /// depends on its predecessor's acceptance). Free slots are then
+    /// shared **round-robin** between the generate queue and new verify
+    /// sessions, so neither admission queue can starve the other. A
+    /// request of the wrong variant in either queue is an internal
+    /// routing bug and surfaces as an error instead of being silently
+    /// dropped.
+    fn admit(&mut self, events: &mut Vec<CloudEvent>) -> Result<()> {
+        // pass 1: triage the verify queue
+        let mut deferred: VecDeque<CloudRequest> = VecDeque::new();
+        let mut new_sessions: VecDeque<CloudRequest> = VecDeque::new();
         while let Some(req) = self.waiting_verify.pop_front() {
-            let CloudRequest::Verify { request_id, device_id, uncached, draft, dists, greedy } =
-                req
-            else {
-                continue;
+            let CloudRequest::Verify { request_id, .. } = &req else {
+                bail!("misrouted request in the verify queue: {req:?}");
             };
-            let slot = match self.session_slot.get(&request_id) {
-                Some(&s) => Some(s),
-                None => {
-                    let s = self.engine.alloc_slot(request_id);
-                    if let Some(s) = s {
-                        self.session_slot.insert(request_id, s);
-                    }
-                    s
-                }
-            };
-            match slot {
-                Some(slot) => {
-                    let base_len = self.engine.slot_len[slot];
-                    let mut tokens = uncached.clone();
-                    tokens.extend_from_slice(&draft);
-                    self.verifying.push(VerifyJob {
-                        request_id,
-                        device_id,
-                        slot,
-                        base_len,
-                        u: uncached.len(),
-                        tokens,
-                        draft,
-                        dists,
-                        greedy,
-                        consumed: 0,
-                        rows: Vec::new(),
-                    });
-                }
-                None => requeue.push_back(CloudRequest::Verify {
-                    request_id,
-                    device_id,
-                    uncached,
-                    draft,
-                    dists,
-                    greedy,
-                }),
+            let request_id = *request_id;
+            let earlier_round_pending = new_sessions.iter().any(
+                |r| matches!(r, CloudRequest::Verify { request_id: o, .. } if *o == request_id),
+            );
+            if self.verifying.iter().any(|j| j.request_id == request_id) || earlier_round_pending
+            {
+                deferred.push_back(req); // serialise rounds of one session
+            } else if self.session_slot.contains_key(&request_id) {
+                self.start_verify(req, events);
+            } else {
+                new_sessions.push_back(req);
             }
         }
-        self.waiting_verify = requeue;
+        // pass 2: hand out free slots alternately
+        while self.engine.free_slots() > 0
+            && !(self.waiting_gen.is_empty() && new_sessions.is_empty())
+        {
+            let take_verify = if new_sessions.is_empty() {
+                false
+            } else if self.waiting_gen.is_empty() {
+                true
+            } else {
+                self.admit_verify_first
+            };
+            self.admit_verify_first = !self.admit_verify_first;
+            if take_verify {
+                let req = new_sessions.pop_front().expect("checked non-empty");
+                let CloudRequest::Verify { request_id, .. } = &req else {
+                    unreachable!("triaged in pass 1");
+                };
+                let slot = self.engine.alloc_slot(*request_id).expect("free slot");
+                self.session_slot.insert(*request_id, slot);
+                self.start_verify(req, events);
+            } else {
+                match self.waiting_gen.pop_front() {
+                    Some(CloudRequest::Generate { request_id, prompt, max_new }) => {
+                        let slot = self.engine.alloc_slot(request_id).expect("free slot");
+                        self.prefilling.push(GenJob {
+                            request_id,
+                            prompt,
+                            consumed: 0,
+                            slot,
+                            max_new,
+                            generated: Vec::new(),
+                            next_token: None,
+                            wait_iters: 0,
+                        });
+                    }
+                    Some(other) => {
+                        bail!("misrouted request in the generate queue: {other:?}")
+                    }
+                    None => unreachable!("checked non-empty"),
+                }
+            }
+        }
+        // unadmitted new sessions queue behind the serialised rounds
+        deferred.append(&mut new_sessions);
+        self.waiting_verify = deferred;
+        Ok(())
+    }
+
+    /// Start a verify round on its session's slot (the caller ensures
+    /// the slot exists and no round of the session is in flight). A
+    /// round that would overflow the slot's KV capacity ends the
+    /// session gracefully (EOS correction, zero accepted) instead of
+    /// failing the scheduling loop mid-tick.
+    fn start_verify(&mut self, req: CloudRequest, events: &mut Vec<CloudEvent>) {
+        let CloudRequest::Verify { request_id, device_id, uncached, draft, dists, greedy } = req
+        else {
+            unreachable!("start_verify takes only verify requests");
+        };
+        let slot = *self.session_slot.get(&request_id).expect("session slot");
+        let base_len = self.engine.slot_len(slot);
+        if base_len + uncached.len() + draft.len() > self.engine.max_len() {
+            events.push(CloudEvent::VerifyDone {
+                request_id,
+                device_id,
+                outcome: VerifyOutcome { accepted: 0, next_token: EOS },
+            });
+            return;
+        }
+        let u = uncached.len();
+        let mut tokens = uncached;
+        tokens.extend_from_slice(&draft);
+        self.verifying.push(VerifyJob {
+            request_id,
+            device_id,
+            slot,
+            base_len,
+            u,
+            tokens,
+            draft,
+            dists,
+            greedy,
+            consumed: 0,
+            rows: Vec::new(),
+            wait_iters: 0,
+        });
     }
 
     /// Empirical acceptance rate α (profiling support, paper §5).

@@ -82,6 +82,36 @@ impl DeviceProfile {
     }
 }
 
+/// Cloud mixed continuous-batching policy (Sarathi-style).
+///
+/// Each scheduler iteration packs **all** runnable work — decode rows,
+/// verification chunks and prefill chunks — into one engine call under a
+/// per-iteration token-row budget. Decode rows (1 token each) are packed
+/// first, then verification chunks, then prefill chunks; prefill is
+/// additionally capped at `prefill_share` of the budget whenever
+/// latency-critical rows are present, so a long prompt stream cannot
+/// monopolise the iteration. Any job skipped for `age_threshold`
+/// consecutive iterations is promoted ahead of all non-aged work, which
+/// bounds worst-case queueing delay for every class.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Max token rows per engine iteration. `0` = auto (slots × chunk,
+    /// i.e. the engine's full capacity — non-constraining).
+    pub token_budget: usize,
+    /// Fraction of the budget prefill chunks may claim while decode or
+    /// verify rows are runnable (chunked-prefill cap; ∈ (0,1]).
+    pub prefill_share: f64,
+    /// Iterations a runnable job may be skipped before it jumps the
+    /// priority order.
+    pub age_threshold: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { token_budget: 0, prefill_share: 0.5, age_threshold: 4 }
+    }
+}
+
 /// Synera runtime parameters (paper defaults annotated).
 #[derive(Debug, Clone)]
 pub struct SyneraParams {
@@ -112,6 +142,8 @@ pub struct SyneraParams {
     pub greedy: bool,
     /// Dispatch-sampling seed (P_conf/P_imp draws).
     pub seed: u64,
+    /// Cloud mixed continuous-batching policy.
+    pub batch: BatchPolicy,
 }
 
 impl Default for SyneraParams {
@@ -133,6 +165,7 @@ impl Default for SyneraParams {
             random_offload: false,
             greedy: true,
             seed: 0xC0FFEE,
+            batch: BatchPolicy::default(),
         }
     }
 }
@@ -199,5 +232,13 @@ mod tests {
     fn quant_speedup_reduces_scale() {
         let d = DeviceProfile::jetson_orin_50w().with_quant_speedup(1.3);
         assert!(d.compute_scale < 1.0);
+    }
+
+    #[test]
+    fn batch_policy_defaults_sane() {
+        let b = BatchPolicy::default();
+        assert_eq!(b.token_budget, 0, "default budget is auto (engine capacity)");
+        assert!(b.prefill_share > 0.0 && b.prefill_share <= 1.0);
+        assert!(b.age_threshold >= 1);
     }
 }

@@ -117,7 +117,11 @@ pub fn eval_with_profile(
         rt.model_variant(&scen.pair.slm, scen.pair.slm_weights.as_deref())?,
         split,
     )?;
-    let mut sched = Scheduler::new(CloudEngine::new(rt.model(&scen.pair.llm)?)?, scen.params.seed);
+    let mut sched = Scheduler::with_policy(
+        CloudEngine::new(rt.model(&scen.pair.llm)?)?,
+        scen.params.seed,
+        scen.params.batch.clone(),
+    );
     let mut link = SimLink::new(scen.link, scen.params.seed ^ 0x11);
     let mut clock = CloudClock::default();
     let mut rng = Rng::new(scen.params.seed ^ 0x77);

@@ -11,6 +11,7 @@ use crate::device::early_exit::SeqExitPolicy;
 use crate::device::offload::Selector;
 use crate::device::parallel::{alternative_token, predict_rejection};
 use crate::metrics::energy::EnergyModel;
+use crate::model::cloud_engine::{BatchEngine, CloudEngine};
 use crate::model::device_engine::{DeviceEngine, DeviceSession, StepOut};
 use crate::model::logits::argmax;
 use crate::net::link::SimLink;
@@ -67,9 +68,11 @@ impl CloudClock {
 
 /// Everything a pipeline run needs. The scheduler (and its engine) is
 /// shared across requests of an experiment; sessions are per-request.
-pub struct PipelineCtx<'a> {
+/// Generic over the cloud [`BatchEngine`] (PJRT in production, the
+/// testutil mock in scheduler tests); defaults to [`CloudEngine`].
+pub struct PipelineCtx<'a, E: BatchEngine = CloudEngine> {
     pub dev: &'a DeviceEngine,
-    pub sched: &'a mut Scheduler,
+    pub sched: &'a mut Scheduler<E>,
     pub scen: &'a Scenario,
     pub profile: &'a OffloadProfile,
     pub link: &'a mut SimLink,
@@ -124,7 +127,10 @@ fn strip_eos(mut v: Vec<u32>) -> Vec<u32> {
 // Edge-centric
 // --------------------------------------------------------------------------
 
-pub fn run_edge_centric(ctx: &mut PipelineCtx, prompt: &[u32]) -> Result<RequestReport> {
+pub fn run_edge_centric<E: BatchEngine>(
+    ctx: &mut PipelineCtx<E>,
+    prompt: &[u32],
+) -> Result<RequestReport> {
     let mut rep = RequestReport::default();
     let mut energy = EnergyModel::new(
         ctx.scen.device.joules_per_token,
@@ -158,7 +164,10 @@ pub fn run_edge_centric(ctx: &mut PipelineCtx, prompt: &[u32]) -> Result<Request
 // Cloud-centric
 // --------------------------------------------------------------------------
 
-pub fn run_cloud_centric(ctx: &mut PipelineCtx, prompt: &[u32]) -> Result<RequestReport> {
+pub fn run_cloud_centric<E: BatchEngine>(
+    ctx: &mut PipelineCtx<E>,
+    prompt: &[u32],
+) -> Result<RequestReport> {
     let mut rep = RequestReport::default();
     let params = &ctx.scen.params;
     let req_id = ctx.rng.next_u64();
@@ -216,7 +225,10 @@ pub fn run_cloud_centric(ctx: &mut PipelineCtx, prompt: &[u32]) -> Result<Reques
 // EdgeFM-LLM (input-level offloading)
 // --------------------------------------------------------------------------
 
-pub fn run_edgefm(ctx: &mut PipelineCtx, prompt: &[u32]) -> Result<RequestReport> {
+pub fn run_edgefm<E: BatchEngine>(
+    ctx: &mut PipelineCtx<E>,
+    prompt: &[u32],
+) -> Result<RequestReport> {
     // score the prompt with the SLM; high-PPL inputs go to the cloud whole
     let (score_sess, first) = ctx.dev.prefill(prompt)?;
     let scale = ctx.scen.device.compute_scale;
@@ -289,7 +301,10 @@ fn draft_chunk(
 
 /// Full Synera pipeline. `Hybrid` runs through the same code with its
 /// restricted parameterisation (see [`eval::method_scenario`]).
-pub fn run_synera(ctx: &mut PipelineCtx, prompt: &[u32]) -> Result<RequestReport> {
+pub fn run_synera<E: BatchEngine>(
+    ctx: &mut PipelineCtx<E>,
+    prompt: &[u32],
+) -> Result<RequestReport> {
     let params = ctx.scen.params.clone();
     let scale = ctx.scen.device.compute_scale;
     let exit_th = params.exit_threshold as f32;
@@ -524,7 +539,11 @@ pub fn run_synera(ctx: &mut PipelineCtx, prompt: &[u32]) -> Result<RequestReport
 }
 
 /// Dispatch by method.
-pub fn run_request(ctx: &mut PipelineCtx, method: Method, prompt: &[u32]) -> Result<RequestReport> {
+pub fn run_request<E: BatchEngine>(
+    ctx: &mut PipelineCtx<E>,
+    method: Method,
+    prompt: &[u32],
+) -> Result<RequestReport> {
     match method {
         Method::EdgeCentric => run_edge_centric(ctx, prompt),
         Method::CloudCentric => run_cloud_centric(ctx, prompt),

@@ -69,6 +69,7 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
     let artifacts = cfg.artifacts.clone();
     let llm = cfg.scenario.pair.llm.clone();
     let greedy = cfg.scenario.params.greedy;
+    let batch = cfg.scenario.params.batch.clone();
 
     // ---------------- cloud thread ----------------
     let cloud = std::thread::Builder::new()
@@ -77,7 +78,7 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
             let rt = Runtime::load(artifacts)?;
             let mut engine = CloudEngine::new(rt.model(&llm)?)?;
             engine.warmup()?; // compile before accepting traffic
-            let mut sched = Scheduler::new(engine, 0xC10D);
+            let mut sched = Scheduler::with_policy(engine, 0xC10D, batch);
             let mut replies: HashMap<u64, Sender<DownlinkMsg>> = HashMap::new();
             let mut open = true;
             while open || !sched.is_idle() {

@@ -12,10 +12,12 @@
 //!   ([`device::early_exit`]), stall-free parallel inference
 //!   ([`device::parallel`]) and top-k distribution compression
 //!   ([`device::codec`]);
-//! * the **cloud runtime** — verification-aware scheduler
-//!   ([`cloud::scheduler`], paper Algorithm 1) over a slot-based
-//!   continuous-batching engine ([`cloud::engine`]) with chunked
-//!   partial prefill and speculative verification ([`cloud::verifier`]);
+//! * the **cloud runtime** — a mixed continuous-batching scheduler
+//!   ([`cloud::scheduler`], paper Algorithm 1 evolved Sarathi-style:
+//!   prefill, verification and decode rows co-scheduled per iteration
+//!   under a token budget with aging-based fairness) over a slot-based
+//!   batch engine ([`model::cloud_engine`]) with chunked partial
+//!   prefill and speculative verification ([`cloud::verifier`]);
 //! * the **substrates** the paper's testbed provided: a bandwidth/RTT
 //!   network simulator ([`net`]), the seven SynthLang datasets
 //!   ([`workload`]), quality/latency/cost/energy metrics ([`metrics`]),

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! synera generate  --slm s1b --llm l13b --task xsum --index 0 [--budget 0.2]
+//!                  [--token-budget 0] [--prefill-share 0.5] [--age-threshold 4]
 //! synera eval      --method synera --slm s1b --llm l13b --task xsum --n 16
 //! synera profile   [--slm s1b --llm l13b] [--refresh]
 //! synera serve     --devices 4 --requests 8 --task xsum
@@ -44,6 +45,13 @@ fn scenario_from(args: &Args) -> Result<Scenario> {
     scen.params.budget = args.get_f64("budget", scen.params.budget)?;
     scen.params.max_new_tokens = args.get_usize("max-new", scen.params.max_new_tokens)?;
     scen.link.bandwidth_mbps = args.get_f64("bandwidth", scen.link.bandwidth_mbps)?;
+    // cloud mixed-batching policy knobs
+    scen.params.batch.token_budget =
+        args.get_usize("token-budget", scen.params.batch.token_budget)?;
+    scen.params.batch.prefill_share =
+        args.get_f64("prefill-share", scen.params.batch.prefill_share)?;
+    scen.params.batch.age_threshold =
+        args.get_usize("age-threshold", scen.params.batch.age_threshold as usize)? as u64;
     if let Some(w) = args.get("slm-weights") {
         scen.pair.slm_weights = Some(w.to_string());
     }
@@ -107,9 +115,10 @@ fn generate(args: &Args) -> Result<()> {
         rt.model_variant(&scen.pair.slm, scen.pair.slm_weights.as_deref())?,
         scen.params.early_exit,
     )?;
-    let mut sched = synera::cloud::Scheduler::new(
+    let mut sched = synera::cloud::Scheduler::with_policy(
         synera::model::CloudEngine::new(rt.model(&scen.pair.llm)?)?,
         scen.params.seed,
+        scen.params.batch.clone(),
     );
     let mut link = synera::net::SimLink::new(scen.link, 1);
     let mut clock = synera::coordinator::pipeline::CloudClock::default();

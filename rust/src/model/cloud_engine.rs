@@ -1,7 +1,15 @@
 //! Cloud-side LLM engine: a slot-based batch executor over the
-//! `chunk_b4_c32` executable. One call advances up to B slots by up to C
-//! tokens each — the uniform "partial prefill" primitive that serves
-//! plain prefill chunks AND verification chunks (paper Takeaway-3).
+//! `chunk_b4_c32` / `step_b4` executables. One call advances up to B
+//! slots by up to C tokens each — the uniform batch primitive that
+//! serves plain prefill chunks, verification chunks AND decode rows
+//! (paper Takeaway-3): a decode is simply a 1-token chunk, and when a
+//! batch consists only of 1-token rows the engine transparently routes
+//! it to the cheaper `step_b4` executable.
+//!
+//! The [`BatchEngine`] trait abstracts the slot/batch surface the
+//! scheduler needs, so scheduling policy can be tested against a
+//! deterministic in-memory engine (see `testutil::MockBatchEngine`)
+//! without PJRT or compiled artifacts.
 
 use std::rc::Rc;
 use std::time::Instant;
@@ -26,6 +34,38 @@ pub struct SlotLogits {
     /// token following `tokens[i]`.
     pub rows: Vec<f32>,
     pub n_rows: usize,
+}
+
+/// The slot/batch execution surface the cloud scheduler schedules over.
+///
+/// Implemented by the real PJRT-backed [`CloudEngine`] and by the
+/// in-memory mock in `testutil` (scheduler-policy tests run without
+/// artifacts). One `run_batch` call advances each listed slot by its
+/// chunk of tokens; 1-token chunks are decode rows.
+pub trait BatchEngine {
+    /// Number of batch slots (B).
+    fn slots(&self) -> usize;
+    /// Max tokens per slot per call (C).
+    fn chunk(&self) -> usize;
+    /// Vocabulary size (row width of returned logits).
+    fn vocab(&self) -> usize;
+    /// Per-slot KV cache capacity in token rows.
+    fn max_len(&self) -> usize;
+    /// Committed sequence length of a slot.
+    fn slot_len(&self, slot: usize) -> usize;
+    /// Cumulative executed token rows (cost accounting).
+    fn rows_executed(&self) -> u64;
+    /// Claim a free slot for `owner`; starts with an empty cache.
+    fn alloc_slot(&mut self, owner: u64) -> Option<usize>;
+    /// Release a slot (stale KV is masked by `slot_len`).
+    fn free_slot(&mut self, slot: usize);
+    /// Number of currently unclaimed slots.
+    fn free_slots(&self) -> usize;
+    /// Roll a slot's committed length back (verify rejects a tail).
+    fn rollback(&mut self, slot: usize, len: usize);
+    /// Execute one mixed batch iteration; returns per-slot logits rows
+    /// and the measured compute seconds.
+    fn run_batch(&mut self, items: &[SlotChunk]) -> Result<(Vec<SlotLogits>, f64)>;
 }
 
 /// Batched cloud executor with per-slot KV state.
@@ -61,19 +101,25 @@ impl CloudEngine {
         })
     }
 
-    /// Compile + run both executables once (slot state untouched) so
-    /// first-request latency excludes compilation.
+    /// Compile + run both executables once so first-request latency
+    /// excludes compilation. Runs in a **free** slot (free slots carry
+    /// no committed KV, so the throwaway rows cannot clobber live
+    /// state); bails if every slot is occupied — warm up before
+    /// admitting traffic.
     pub fn warmup(&mut self) -> Result<()> {
-        let save_len = self.slot_len[0];
-        let save_owner = self.slot_owner[0];
-        self.slot_owner[0] = Some(u64::MAX);
-        self.slot_len[0] = 0;
+        let Some(s) = self.slot_owner.iter().position(|o| o.is_none()) else {
+            bail!("warmup requires a free slot (all {} slots busy)", self.slots);
+        };
+        self.slot_owner[s] = Some(u64::MAX);
+        self.slot_len[s] = 0;
         let rows = self.rows_executed;
-        self.run_batch(&[SlotChunk { slot: 0, tokens: vec![1] }])?;
-        self.slot_len[0] = 0;
-        self.run_decode(&[(0, 1)])?;
-        self.slot_len[0] = save_len;
-        self.slot_owner[0] = save_owner;
+        // 2-token chunk exercises `chunk_b4_c32`; the 1-token decode row
+        // below takes the fast path and compiles `step_b4`.
+        self.run_batch(&[SlotChunk { slot: s, tokens: vec![1, 1] }])?;
+        self.slot_len[s] = 0;
+        self.run_decode(&[(s, 1)])?;
+        self.slot_owner[s] = None;
+        self.slot_len[s] = 0;
         self.rows_executed = rows;
         Ok(())
     }
@@ -103,18 +149,18 @@ impl CloudEngine {
         self.slot_len[slot] = len;
     }
 
-    /// Execute one batch iteration. Each item's tokens must fit the chunk
-    /// size and its slot's remaining cache. Returns per-slot logits rows
-    /// and the measured compute time.
+    /// Execute one mixed batch iteration. Each item's tokens must fit
+    /// the chunk size and its slot's remaining cache; slots must be
+    /// in-range and listed at most once. When every item is a single
+    /// token (a pure-decode batch) the cheaper `step_b4` executable is
+    /// used; otherwise `chunk_b4_c32`. Returns per-slot logits rows and
+    /// the measured compute time.
     pub fn run_batch(&mut self, items: &[SlotChunk]) -> Result<(Vec<SlotLogits>, f64)> {
         if items.is_empty() {
             return Ok((Vec::new(), 0.0));
         }
         let (b, c) = (self.slots, self.chunk);
         let v = self.model.meta.vocab;
-        let mut tokens = vec![0i32; b * c];
-        let mut pos = vec![0i32; b];
-        let mut nv = vec![0i32; b];
         let mut seen = vec![false; b];
         for it in items {
             let s = it.slot;
@@ -128,16 +174,23 @@ impl CloudEngine {
                 bail!("slot {s} cache overflow");
             }
             seen[s] = true;
+        }
+        // decode fast path: all rows single-token → `step_b4` (C = 1)
+        let pure_decode = items.iter().all(|it| it.tokens.len() == 1);
+        let (tag, cc) = if pure_decode { ("step_b4", 1) } else { ("chunk_b4_c32", c) };
+        let mut tokens = vec![0i32; b * cc];
+        let mut pos = vec![0i32; b];
+        let mut nv = vec![0i32; b];
+        for it in items {
+            let s = it.slot;
             pos[s] = self.slot_len[s] as i32;
             nv[s] = it.tokens.len() as i32;
             for (i, &t) in it.tokens.iter().enumerate() {
-                tokens[s * c + i] = t as i32;
+                tokens[s * cc + i] = t as i32;
             }
         }
         let t0 = Instant::now();
-        let out = self
-            .model
-            .run_chunk("chunk_b4_c32", &tokens, &pos, &nv, &mut self.kv)?;
+        let out = self.model.run_chunk(tag, &tokens, &pos, &nv, &mut self.kv)?;
         let dt = t0.elapsed().as_secs_f64();
 
         let mut res = Vec::with_capacity(items.len());
@@ -146,7 +199,7 @@ impl CloudEngine {
             let n = it.tokens.len();
             self.slot_len[s] += n;
             self.rows_executed += n as u64;
-            let base = s * c * v;
+            let base = s * cc * v;
             res.push(SlotLogits {
                 slot: s,
                 rows: out.logits[base..base + n * v].to_vec(),
@@ -156,36 +209,61 @@ impl CloudEngine {
         Ok((res, dt))
     }
 
-    /// Single-token decode step across active slots (cloud-centric
-    /// baseline path, `step_b4` executable).
+    /// Single-token decode step across active slots. Thin wrapper over
+    /// the unified [`CloudEngine::run_batch`] path (a decode is a
+    /// 1-token chunk), which also supplies the slot-range/duplicate
+    /// validation that raw indexing used to skip.
     pub fn run_decode(&mut self, toks: &[(usize, u32)]) -> Result<(Vec<SlotLogits>, f64)> {
-        if toks.is_empty() {
-            return Ok((Vec::new(), 0.0));
-        }
-        let b = self.slots;
-        let v = self.model.meta.vocab;
-        let mut tokens = vec![0i32; b];
-        let mut pos = vec![0i32; b];
-        let mut nv = vec![0i32; b];
-        for &(s, t) in toks {
-            if self.slot_len[s] + 1 > self.model.meta.max_len {
-                bail!("slot {s} cache overflow");
-            }
-            tokens[s] = t as i32;
-            pos[s] = self.slot_len[s] as i32;
-            nv[s] = 1;
-        }
-        let t0 = Instant::now();
-        let out = self
-            .model
-            .run_chunk("step_b4", &tokens, &pos, &nv, &mut self.kv)?;
-        let dt = t0.elapsed().as_secs_f64();
-        let mut res = Vec::with_capacity(toks.len());
-        for &(s, _) in toks {
-            self.slot_len[s] += 1;
-            self.rows_executed += 1;
-            res.push(SlotLogits { slot: s, rows: out.logits[s * v..(s + 1) * v].to_vec(), n_rows: 1 });
-        }
-        Ok((res, dt))
+        let items: Vec<SlotChunk> = toks
+            .iter()
+            .map(|&(slot, tok)| SlotChunk { slot, tokens: vec![tok] })
+            .collect();
+        self.run_batch(&items)
+    }
+}
+
+impl BatchEngine for CloudEngine {
+    fn slots(&self) -> usize {
+        self.slots
+    }
+
+    fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    fn vocab(&self) -> usize {
+        self.model.meta.vocab
+    }
+
+    fn max_len(&self) -> usize {
+        self.model.meta.max_len
+    }
+
+    fn slot_len(&self, slot: usize) -> usize {
+        self.slot_len[slot]
+    }
+
+    fn rows_executed(&self) -> u64 {
+        self.rows_executed
+    }
+
+    fn alloc_slot(&mut self, owner: u64) -> Option<usize> {
+        CloudEngine::alloc_slot(self, owner)
+    }
+
+    fn free_slot(&mut self, slot: usize) {
+        CloudEngine::free_slot(self, slot)
+    }
+
+    fn free_slots(&self) -> usize {
+        CloudEngine::free_slots(self)
+    }
+
+    fn rollback(&mut self, slot: usize, len: usize) {
+        CloudEngine::rollback(self, slot, len)
+    }
+
+    fn run_batch(&mut self, items: &[SlotChunk]) -> Result<(Vec<SlotLogits>, f64)> {
+        CloudEngine::run_batch(self, items)
     }
 }

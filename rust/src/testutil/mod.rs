@@ -1,9 +1,153 @@
-//! Property-testing mini-framework (the offline mirror carries no
-//! proptest). Seeded random case generation over splitmix64 with
-//! failing-seed reporting; on failure, re-run with
-//! `SYNERA_PROP_SEED=<seed>` to reproduce the exact case.
+//! Test support: a property-testing mini-framework (the offline mirror
+//! carries no proptest — seeded splitmix64 case generation with
+//! failing-seed reporting; re-run with `SYNERA_PROP_SEED=<seed>` to
+//! reproduce a case) and [`MockBatchEngine`], a deterministic
+//! artifact-free [`BatchEngine`] for scheduler tests.
 
+use anyhow::{bail, Result};
+
+use crate::model::cloud_engine::{BatchEngine, SlotChunk, SlotLogits};
 use crate::util::rng::Rng;
+
+/// Deterministic in-memory [`BatchEngine`] — no PJRT, no artifacts.
+///
+/// Logits are a pure function of (slot, position): the argmax of the
+/// row following position `p` in slot `s` is `8 + (7p + 13s) mod
+/// (V−8)`, so generations are reproducible, never emit control tokens
+/// (EOS = 2 is unreachable) and differ across slots. Slot/chunk
+/// validation mirrors [`crate::model::CloudEngine`]; `free_slot` on an
+/// unowned slot panics, which turns slot double-frees into test
+/// failures. Every `run_batch` item list is recorded in `calls` so
+/// tests can assert the *shape* of scheduling (e.g. that one iteration
+/// co-scheduled decode and prefill rows).
+pub struct MockBatchEngine {
+    pub slots: usize,
+    pub chunk: usize,
+    pub vocab: usize,
+    pub max_len: usize,
+    pub slot_len: Vec<usize>,
+    pub slot_owner: Vec<Option<u64>>,
+    pub rows_executed: u64,
+    /// Item lists of every `run_batch` call, in order.
+    pub calls: Vec<Vec<SlotChunk>>,
+    pub allocs: u64,
+    pub frees: u64,
+}
+
+impl MockBatchEngine {
+    pub fn new(slots: usize, chunk: usize, vocab: usize, max_len: usize) -> MockBatchEngine {
+        assert!(vocab > 16, "mock vocab must clear the control-token range");
+        MockBatchEngine {
+            slots,
+            chunk,
+            vocab,
+            max_len,
+            slot_len: vec![0; slots],
+            slot_owner: vec![None; slots],
+            rows_executed: 0,
+            calls: Vec::new(),
+            allocs: 0,
+            frees: 0,
+        }
+    }
+
+    /// The deterministic argmax of the row following position `pos` in
+    /// `slot` (tests predict generations with this).
+    pub fn peak(&self, slot: usize, pos: usize) -> u32 {
+        (8 + (pos * 7 + slot * 13) % (self.vocab - 8)) as u32
+    }
+}
+
+impl BatchEngine for MockBatchEngine {
+    fn slots(&self) -> usize {
+        self.slots
+    }
+
+    fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn max_len(&self) -> usize {
+        self.max_len
+    }
+
+    fn slot_len(&self, slot: usize) -> usize {
+        self.slot_len[slot]
+    }
+
+    fn rows_executed(&self) -> u64 {
+        self.rows_executed
+    }
+
+    fn alloc_slot(&mut self, owner: u64) -> Option<usize> {
+        let s = self.slot_owner.iter().position(|o| o.is_none())?;
+        self.slot_owner[s] = Some(owner);
+        self.slot_len[s] = 0;
+        self.allocs += 1;
+        Some(s)
+    }
+
+    fn free_slot(&mut self, slot: usize) {
+        assert!(self.slot_owner[slot].is_some(), "double free of slot {slot}");
+        self.slot_owner[slot] = None;
+        self.slot_len[slot] = 0;
+        self.frees += 1;
+    }
+
+    fn free_slots(&self) -> usize {
+        self.slot_owner.iter().filter(|o| o.is_none()).count()
+    }
+
+    fn rollback(&mut self, slot: usize, len: usize) {
+        assert!(len <= self.slot_len[slot], "rollback past committed length");
+        self.slot_len[slot] = len;
+    }
+
+    fn run_batch(&mut self, items: &[SlotChunk]) -> Result<(Vec<SlotLogits>, f64)> {
+        if items.is_empty() {
+            return Ok((Vec::new(), 0.0));
+        }
+        let mut seen = vec![false; self.slots];
+        for it in items {
+            let s = it.slot;
+            if s >= self.slots || seen[s] {
+                bail!("bad/duplicate slot {s} in batch");
+            }
+            // stricter than the real engine: executing rows in an
+            // unowned slot is always a scheduler bug (use-after-free)
+            if self.slot_owner[s].is_none() {
+                bail!("slot {s} is not allocated");
+            }
+            if it.tokens.is_empty() || it.tokens.len() > self.chunk {
+                bail!("chunk size {} out of range 1..={}", it.tokens.len(), self.chunk);
+            }
+            if self.slot_len[s] + it.tokens.len() > self.max_len {
+                bail!("slot {s} cache overflow");
+            }
+            seen[s] = true;
+        }
+        self.calls.push(items.to_vec());
+        let v = self.vocab;
+        let mut res = Vec::with_capacity(items.len());
+        for it in items {
+            let s = it.slot;
+            let n = it.tokens.len();
+            let base = self.slot_len[s];
+            let mut rows = vec![0f32; n * v];
+            for i in 0..n {
+                rows[i * v + self.peak(s, base + i) as usize] = 1.0;
+            }
+            self.slot_len[s] += n;
+            self.rows_executed += n as u64;
+            res.push(SlotLogits { slot: s, rows, n_rows: n });
+        }
+        Ok((res, 1e-5))
+    }
+}
 
 /// Number of cases per property (override with `SYNERA_PROP_CASES`).
 pub fn default_cases() -> u64 {

@@ -164,6 +164,64 @@ fn cloud_rollback_masks_stale_kv() {
 }
 
 #[test]
+fn warmup_runs_in_a_free_slot_and_preserves_committed_kv() {
+    let rt = Runtime::load_default().unwrap();
+    let mut eng = CloudEngine::new(rt.model("l13b").unwrap()).unwrap();
+    let p = prompt();
+    // occupy slot 0 with committed KV, as a live session would
+    let s = eng.alloc_slot(7).unwrap();
+    eng.run_batch(&[SlotChunk { slot: s, tokens: p.clone() }]).unwrap();
+    let len = eng.slot_len[s];
+
+    // regression: warmup used to run throwaway rows at positions 0–1 of
+    // slot 0, silently clobbering the session's KV
+    eng.warmup().unwrap();
+    assert_eq!(eng.slot_len[s], len, "warmup altered a busy slot's length");
+    assert_eq!(eng.slot_owner[s], Some(7), "warmup altered slot ownership");
+
+    // the continuation must match a fresh engine that never warmed up
+    let cont = vec![200u32, 201];
+    let (r_warm, _) = eng.run_batch(&[SlotChunk { slot: s, tokens: cont.clone() }]).unwrap();
+    let mut fresh = CloudEngine::new(rt.model("l13b").unwrap()).unwrap();
+    let s2 = fresh.alloc_slot(1).unwrap();
+    fresh.run_batch(&[SlotChunk { slot: s2, tokens: p }]).unwrap();
+    let (r_fresh, _) = fresh.run_batch(&[SlotChunk { slot: s2, tokens: cont }]).unwrap();
+    let max_d = r_warm[0]
+        .rows
+        .iter()
+        .zip(&r_fresh[0].rows)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(max_d < 1e-4, "warmup corrupted committed KV: {max_d}");
+}
+
+#[test]
+fn warmup_bails_when_every_slot_is_busy() {
+    let rt = Runtime::load_default().unwrap();
+    let mut eng = CloudEngine::new(rt.model("l13b").unwrap()).unwrap();
+    for i in 0..eng.slots {
+        eng.alloc_slot(i as u64).unwrap();
+    }
+    assert!(eng.warmup().is_err(), "warmup must refuse to touch occupied slots");
+}
+
+#[test]
+fn run_decode_rejects_bad_and_duplicate_slots() {
+    let rt = Runtime::load_default().unwrap();
+    let mut eng = CloudEngine::new(rt.model("l13b").unwrap()).unwrap();
+    let s = eng.alloc_slot(1).unwrap();
+    eng.run_batch(&[SlotChunk { slot: s, tokens: vec![1, 5] }]).unwrap();
+    // regression: these used to panic on raw indexing instead of Err-ing
+    assert!(eng.run_decode(&[(eng.slots + 3, 7)]).is_err(), "out-of-range slot");
+    assert!(eng.run_decode(&[(s, 7), (s, 8)]).is_err(), "duplicate slot");
+    // the valid path still works and is one row long
+    let (r, _) = eng.run_decode(&[(s, 7)]).unwrap();
+    assert_eq!(r.len(), 1);
+    assert_eq!(r[0].n_rows, 1);
+    assert_eq!(r[0].rows.len(), eng.model.meta.vocab);
+}
+
+#[test]
 fn quantized_variants_load_and_differ() {
     let rt = Runtime::load_default().unwrap();
     let base = DeviceEngine::new(rt.model("s7b").unwrap(), false).unwrap();
