@@ -8,9 +8,17 @@
 //! continuous-batching scheduler all three classes share iterations, so
 //! verification latency degrades gracefully instead of queueing behind
 //! whole prefill/decode phases.
+//!
+//! The third table sweeps *concurrent logical sessions* past the
+//! compiled B=4 batch width: without paging (`max_sessions = B`)
+//! sessions beyond B queue at admission and their rounds see the
+//! latency knee at B; with paged KV (`max_sessions = sessions`) every
+//! session is admitted and the knee moves out to the host-memory bound,
+//! at the cost of the reported swap traffic.
 
 use synera::bench::Table;
 use synera::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
+use synera::config::BatchPolicy;
 use synera::model::CloudEngine;
 use synera::net::wire::Dist;
 use synera::runtime::Runtime;
@@ -142,6 +150,78 @@ fn simulate(
     Ok((p50, done_frac))
 }
 
+/// Closed-loop sweep for the paged-KV table: `n_sessions` persistent
+/// verify sessions each run `rounds` back-to-back rounds; virtual time
+/// advances by measured tick compute. Returns (p50 round latency s,
+/// completed fraction, swap-ins, swap-outs).
+fn simulate_sessions(
+    rt: &std::rc::Rc<Runtime>,
+    n_sessions: usize,
+    max_sessions: usize,
+    rounds: usize,
+) -> anyhow::Result<(f64, f64, u64, u64)> {
+    let gamma = rt.meta.gamma;
+    let policy = BatchPolicy { max_sessions, ..BatchPolicy::default() };
+    let mut sched =
+        Scheduler::with_policy(CloudEngine::new(rt.model("l13b")?)?, 0x5E55, policy);
+    let mut rng = Rng::new(0xF15C ^ n_sessions as u64);
+    let submit = |sched: &mut Scheduler<CloudEngine>, rng: &mut Rng, id: u64| {
+        let uncached: Vec<u32> = (0..3).map(|_| 200 + rng.below(128) as u32).collect();
+        let draft: Vec<u32> = (0..gamma).map(|_| 200 + rng.below(128) as u32).collect();
+        let dists = vec![Dist::Dense(vec![1.0 / 512.0; 512]); draft.len()];
+        sched.submit(CloudRequest::Verify {
+            request_id: id,
+            device_id: id as u32,
+            uncached,
+            draft,
+            dists,
+            greedy: true,
+        })
+    };
+    let mut now = 0.0f64;
+    let mut submitted_at: std::collections::HashMap<u64, f64> =
+        std::collections::HashMap::new();
+    let mut rounds_done: std::collections::HashMap<u64, usize> =
+        std::collections::HashMap::new();
+    for id in 1..=n_sessions as u64 {
+        submitted_at.insert(id, 0.0);
+        rounds_done.insert(id, 0);
+        submit(&mut sched, &mut rng, id)?;
+    }
+    let total = n_sessions * rounds;
+    let mut lats = Vec::with_capacity(total);
+    let mut completed = 0usize;
+    for _ in 0..50_000 {
+        if completed == total {
+            break;
+        }
+        let (events, dt) = sched.tick()?;
+        now += dt.max(1e-6);
+        for e in events {
+            if let CloudEvent::VerifyDone { request_id, .. } = e {
+                lats.push(now - submitted_at[&request_id]);
+                completed += 1;
+                let done = rounds_done.get_mut(&request_id).expect("known session");
+                *done += 1;
+                if *done < rounds {
+                    submitted_at.insert(request_id, now);
+                    submit(&mut sched, &mut rng, request_id)?;
+                } else {
+                    sched.submit(CloudRequest::Release { request_id })?;
+                }
+            }
+        }
+    }
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = lats.get(lats.len() / 2).copied().unwrap_or(f64::NAN);
+    Ok((
+        p50,
+        completed as f64 / total.max(1) as f64,
+        sched.stats.swap_ins,
+        sched.stats.swap_outs,
+    ))
+}
+
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::load_default()?;
     // warm the engine (compile) before timing-sensitive simulation
@@ -181,5 +261,28 @@ fn main() -> anyhow::Result<()> {
         t2.row(&cells);
     }
     t2.print();
+
+    let mut t3 = Table::new(
+        "Fig 15c: paged KV — verify round p50 (ms) vs concurrent sessions (B=4 slots)",
+        &["sessions", "no paging (cap=B)", "paged (cap=sessions)", "swaps in/out"],
+    );
+    for s in [2usize, 4, 8, 16, 32] {
+        let (p_base, done_base, _, _) = simulate_sessions(&rt, s, 0, 4)?;
+        let (p_paged, done_paged, si, so) = simulate_sessions(&rt, s, s, 4)?;
+        let cell = |p: f64, done: f64| {
+            if done < 1.0 {
+                format!("{:.1} (incomplete)", p * 1e3)
+            } else {
+                format!("{:.1}", p * 1e3)
+            }
+        };
+        t3.row(&[
+            s.to_string(),
+            cell(p_base, done_base),
+            cell(p_paged, done_paged),
+            format!("{si}/{so}"),
+        ]);
+    }
+    t3.print();
     Ok(())
 }

@@ -1,10 +1,14 @@
 //! Cloud runtime (paper §3.4, §4.5): speculative verification and the
 //! mixed continuous-batching scheduler — prefill, verification and
 //! decode rows co-scheduled per iteration under a token budget — over
-//! the slot-based [`crate::model::CloudEngine`].
+//! the slot-based [`crate::model::CloudEngine`], with paged logical
+//! sessions ([`sessions`]) so concurrency is bounded by host memory
+//! rather than the compiled batch width.
 
 pub mod scheduler;
+pub mod sessions;
 pub mod verifier;
 
 pub use scheduler::{CloudEvent, CloudRequest, Scheduler, SchedulerStats};
+pub use sessions::{SessionManager, SwapStats};
 pub use verifier::{verify_chunk, VerifyOutcome};

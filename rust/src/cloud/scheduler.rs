@@ -1,5 +1,6 @@
 //! Mixed continuous-batching scheduler (paper Algorithm 1, evolved to a
-//! Sarathi-style single-queue iteration).
+//! Sarathi-style single-queue iteration) over **paged logical
+//! sessions**.
 //!
 //! Each `tick()` packs **one** engine call from *all* runnable work:
 //!
@@ -21,16 +22,25 @@
 //! chunk executable; pure-decode batches take the engine's `step_b4`
 //! fast path (see [`BatchEngine`]).
 //!
-//! Verification requests keep their slot across rounds (the KV prefix
-//! persists; rejected draft tails are rolled back by position masking).
-//! When all slots are busy, arrivals queue — that queueing is exactly
-//! the latency knee the Fig. 15 scalability experiment measures.
+//! **Admission is decoupled from the compiled batch width**: up to
+//! [`BatchPolicy::max_sessions`] *logical* sessions are admitted, far
+//! beyond the engine's B slots. A [`SessionManager`] pages the KV of
+//! sessions that lose the slot race out to a host block pool
+//! ([`crate::runtime::paging`]) and swaps it back in — LRU victims,
+//! never a session picked by the current iteration — right before the
+//! job's next engine call. Verification sessions keep their committed
+//! KV prefix across rounds whether resident or parked; rejected draft
+//! tails are rolled back by position masking. With paging enabled the
+//! Fig. 15 queueing knee moves from B to `max_sessions`; swap traffic
+//! is charged to [`SchedulerStats`] (and its copy time to the Fig. 18
+//! scheduling-overhead column).
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{HashSet, VecDeque};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::cloud::sessions::SessionManager;
 use crate::cloud::verifier::{verify_chunk, VerifyOutcome};
 use crate::config::BatchPolicy;
 use crate::model::cloud_engine::{BatchEngine, CloudEngine, SlotChunk};
@@ -55,7 +65,7 @@ pub enum CloudRequest {
         dists: Vec<Dist>,
         greedy: bool,
     },
-    /// A device session finished; free its slot.
+    /// A device session finished; free its slot/blocks.
     Release { request_id: u64 },
 }
 
@@ -83,18 +93,23 @@ pub struct SchedulerStats {
     pub rows_executed: u64,
     /// Engine compute inside ticks.
     pub busy_s: f64,
-    /// Scheduling bookkeeping outside engine calls (Fig. 18 overhead).
+    /// Scheduling bookkeeping outside engine calls (Fig. 18 overhead;
+    /// includes paged-KV swap copies).
     pub sched_overhead_s: f64,
     pub verifies_done: u64,
     pub draft_tokens_seen: u64,
     pub draft_tokens_accepted: u64,
+    /// Paged-KV swap traffic (mirrors the session manager's counters).
+    pub swap_ins: u64,
+    pub swap_outs: u64,
+    pub swap_bytes: u64,
+    pub swap_s: f64,
 }
 
 struct GenJob {
     request_id: u64,
     prompt: Vec<u32>,
     consumed: usize,
-    slot: usize,
     max_new: usize,
     generated: Vec<u32>,
     next_token: Option<u32>,
@@ -105,7 +120,6 @@ struct GenJob {
 struct VerifyJob {
     request_id: u64,
     device_id: u32,
-    slot: usize,
     base_len: usize,
     tokens: Vec<u32>,
     u: usize,
@@ -128,6 +142,10 @@ struct Pick {
     class: u8,
     /// Index into the class's job pool.
     idx: usize,
+    /// The session's request id (slot-independent job identity).
+    id: u64,
+    /// Slot the session is resident in *this* iteration.
+    slot: usize,
     /// Token rows granted this iteration.
     n: usize,
     /// Scheduled via the aging promotion.
@@ -144,14 +162,15 @@ pub struct Scheduler<E: BatchEngine = CloudEngine> {
     prefilling: Vec<GenJob>,
     decoding: Vec<GenJob>,
     verifying: Vec<VerifyJob>,
-    /// Persistent slot per Synera session.
-    session_slot: HashMap<u64, usize>,
-    /// Sessions released while a verify round was in flight; their slot
-    /// is freed when that round completes (freeing earlier would hand
-    /// the slot — and its live KV positions — to another job).
+    /// Logical sessions over the engine's slots (paged KV residency).
+    sessions: SessionManager,
+    /// Sessions released while a verify round was in flight; their
+    /// slot/blocks are freed when that round completes (freeing earlier
+    /// would hand the slot — and its live KV positions — to another
+    /// job).
     pending_release: HashSet<u64>,
     /// Round-robin toggle between the generate and verify admission
-    /// queues (free slots are shared; neither queue can starve).
+    /// queues (admission capacity is shared; neither queue can starve).
     admit_verify_first: bool,
     rng: Rng,
     pub stats: SchedulerStats,
@@ -165,6 +184,7 @@ impl<E: BatchEngine> Scheduler<E> {
     /// Build a scheduler with an explicit batching policy (the
     /// `SyneraParams::batch` config block).
     pub fn with_policy(engine: E, seed: u64, policy: BatchPolicy) -> Scheduler<E> {
+        let sessions = SessionManager::for_engine(&engine, &policy);
         Scheduler {
             engine,
             policy,
@@ -173,12 +193,17 @@ impl<E: BatchEngine> Scheduler<E> {
             prefilling: Vec::new(),
             decoding: Vec::new(),
             verifying: Vec::new(),
-            session_slot: HashMap::new(),
+            sessions,
             pending_release: HashSet::new(),
             admit_verify_first: true,
             rng: Rng::new(seed ^ 0xC10D),
             stats: SchedulerStats::default(),
         }
+    }
+
+    /// The session manager (paged-KV residency state; test hooks).
+    pub fn sessions(&self) -> &SessionManager {
+        &self.sessions
     }
 
     pub fn submit(&mut self, req: CloudRequest) -> Result<()> {
@@ -221,11 +246,17 @@ impl<E: BatchEngine> Scheduler<E> {
                     |r| !matches!(r, CloudRequest::Verify { request_id, .. } if *request_id == rid),
                 );
                 if self.verifying.iter().any(|j| j.request_id == rid) {
-                    // the in-flight round still writes this slot's KV;
+                    // the in-flight round still writes this session's KV;
                     // defer the free until it completes
                     self.pending_release.insert(rid);
-                } else if let Some(slot) = self.session_slot.remove(&rid) {
-                    self.engine.free_slot(slot);
+                } else if self.prefilling.iter().any(|j| j.request_id == rid)
+                    || self.decoding.iter().any(|j| j.request_id == rid)
+                {
+                    // generations own their session until they complete;
+                    // a stray release of a generate id stays a no-op
+                    // (pre-paging behavior)
+                } else {
+                    self.sessions.close(rid, &mut self.engine);
                 }
             }
         }
@@ -257,7 +288,8 @@ impl<E: BatchEngine> Scheduler<E> {
 
         // ---- plan: pack one mixed batch under the token budget ------------
         let chunk = self.engine.chunk();
-        let capacity = self.engine.slots() * chunk;
+        let slots = self.engine.slots();
+        let capacity = slots * chunk;
         let budget = if self.policy.token_budget == 0 {
             capacity
         } else {
@@ -265,18 +297,18 @@ impl<E: BatchEngine> Scheduler<E> {
         };
         let age_th = self.policy.age_threshold;
 
-        // candidates: (class, pool index, slot, runnable rows, waited)
-        let mut cands: Vec<(u8, usize, usize, usize, u64)> = Vec::new();
+        // candidates: (class, pool index, session id, runnable rows, waited)
+        let mut cands: Vec<(u8, usize, u64, usize, u64)> = Vec::new();
         for (i, j) in self.decoding.iter().enumerate() {
             if j.next_token.is_some() {
-                cands.push((CLASS_DECODE, i, j.slot, 1, j.wait_iters));
+                cands.push((CLASS_DECODE, i, j.request_id, 1, j.wait_iters));
             }
         }
         for (i, j) in self.verifying.iter().enumerate() {
-            cands.push((CLASS_VERIFY, i, j.slot, j.tokens.len() - j.consumed, j.wait_iters));
+            cands.push((CLASS_VERIFY, i, j.request_id, j.tokens.len() - j.consumed, j.wait_iters));
         }
         for (i, j) in self.prefilling.iter().enumerate() {
-            cands.push((CLASS_PREFILL, i, j.slot, j.prompt.len() - j.consumed, j.wait_iters));
+            cands.push((CLASS_PREFILL, i, j.request_id, j.prompt.len() - j.consumed, j.wait_iters));
         }
         if cands.is_empty() {
             self.stats.sched_overhead_s += t_tick.elapsed().as_secs_f64();
@@ -305,17 +337,13 @@ impl<E: BatchEngine> Scheduler<E> {
 
         let mut remaining = budget;
         let mut prefill_used = 0usize;
-        let mut slot_used = vec![false; self.engine.slots()];
+        // sessions granted a slot this iteration — ineligible as swap
+        // victims, and a hard cap of one chunk per physical slot
+        let mut pinned: HashSet<u64> = HashSet::new();
         let mut picks: Vec<Pick> = Vec::new();
-        for &(class, idx, slot, runnable, waited) in &cands {
-            if remaining == 0 {
+        for &(class, idx, id, runnable, waited) in &cands {
+            if remaining == 0 || picks.len() == slots {
                 break;
-            }
-            // one chunk per slot per engine call (duplicate slots can
-            // only arise from pipelined verify rounds, which admit()
-            // serialises — this guard keeps the invariant local)
-            if slot_used[slot] {
-                continue;
             }
             let mut grant = runnable.min(chunk).min(remaining);
             if class == CLASS_PREFILL {
@@ -324,12 +352,18 @@ impl<E: BatchEngine> Scheduler<E> {
             if grant == 0 {
                 continue;
             }
+            // paged residency: resident sessions keep their slot; parked
+            // ones are swapped in over an LRU victim (never one already
+            // picked). No victim ⇒ the job waits and ages.
+            let Some(slot) = self.sessions.ensure_resident(id, &mut self.engine, &pinned)? else {
+                continue;
+            };
             if class == CLASS_PREFILL {
                 prefill_used += grant;
             }
             remaining -= grant;
-            slot_used[slot] = true;
-            picks.push(Pick { class, idx, n: grant, aged: waited >= age_th });
+            pinned.insert(id);
+            picks.push(Pick { class, idx, id, slot, n: grant, aged: waited >= age_th });
         }
 
         // fairness accounting: scheduled jobs reset their wait; skipped
@@ -370,21 +404,21 @@ impl<E: BatchEngine> Scheduler<E> {
         // ---- execute: one engine call for the whole mixed batch -----------
         let mut items = Vec::with_capacity(picks.len());
         for p in &picks {
-            let (slot, toks) = match p.class {
+            let toks = match p.class {
                 CLASS_DECODE => {
                     let j = &self.decoding[p.idx];
-                    (j.slot, vec![j.next_token.expect("decode has next")])
+                    vec![j.next_token.expect("decode has next")]
                 }
                 CLASS_VERIFY => {
                     let j = &self.verifying[p.idx];
-                    (j.slot, j.tokens[j.consumed..j.consumed + p.n].to_vec())
+                    j.tokens[j.consumed..j.consumed + p.n].to_vec()
                 }
                 _ => {
                     let j = &self.prefilling[p.idx];
-                    (j.slot, j.prompt[j.consumed..j.consumed + p.n].to_vec())
+                    j.prompt[j.consumed..j.consumed + p.n].to_vec()
                 }
             };
-            items.push(SlotChunk { slot, tokens: toks });
+            items.push(SlotChunk { slot: p.slot, tokens: toks });
         }
         let (res, dt) = self.engine.run_batch(&items)?;
         let compute_s = dt;
@@ -392,12 +426,16 @@ impl<E: BatchEngine> Scheduler<E> {
         self.stats.rows_executed = self.engine.rows_executed();
 
         // ---- apply per-slot results to their jobs -------------------------
+        // slot-indexed join (the per-item linear scan was O(picks²))
+        let mut res_by_slot: Vec<Option<usize>> = vec![None; slots];
+        for (i, r) in res.iter().enumerate() {
+            res_by_slot[r.slot] = Some(i);
+        }
         let v = self.engine.vocab();
         for (p, item) in picks.iter().zip(&items) {
-            let r = res
-                .iter()
-                .find(|r| r.slot == item.slot)
-                .expect("engine result for scheduled slot");
+            let ri = res_by_slot[item.slot].expect("engine result for scheduled slot");
+            let r = &res[ri];
+            self.sessions.note_rows(p.id, r.n_rows);
             match p.class {
                 CLASS_DECODE => {
                     let job = &mut self.decoding[p.idx];
@@ -457,15 +495,19 @@ impl<E: BatchEngine> Scheduler<E> {
                 self.stats.draft_tokens_seen += job.draft.len() as u64;
                 self.stats.draft_tokens_accepted += outcome.accepted as u64;
                 if self.pending_release.remove(&job.request_id) {
-                    // the session was released mid-round: free the slot
-                    // now that its last round has committed
-                    if let Some(slot) = self.session_slot.remove(&job.request_id) {
-                        self.engine.free_slot(slot);
-                    }
+                    // the session was released mid-round: free it now
+                    // that its last round has committed
+                    self.sessions.close(job.request_id, &mut self.engine);
                 } else {
-                    // commit prefix + uncached + accepted; mask the rest
-                    self.engine
-                        .rollback(job.slot, job.base_len + job.u + outcome.accepted);
+                    // commit prefix + uncached + accepted; mask the rest.
+                    // The session executed this tick, so it is resident.
+                    let target = job.base_len + job.u + outcome.accepted;
+                    let slot = self
+                        .sessions
+                        .slot_of(job.request_id)
+                        .expect("just-executed session is resident");
+                    self.engine.rollback(slot, target);
+                    self.sessions.set_len(job.request_id, target);
                 }
                 events.push(CloudEvent::VerifyDone {
                     request_id: job.request_id,
@@ -476,12 +518,12 @@ impl<E: BatchEngine> Scheduler<E> {
                 i += 1;
             }
         }
-        // finished generations leave the batch and free their slot
+        // finished generations leave the batch and free their session
         let mut i = 0;
         while i < self.decoding.len() {
             if self.decoding[i].next_token.is_none() {
                 let job = self.decoding.remove(i);
-                self.engine.free_slot(job.slot);
+                self.sessions.close(job.request_id, &mut self.engine);
                 events.push(CloudEvent::Generated {
                     request_id: job.request_id,
                     tokens: job.generated,
@@ -491,15 +533,24 @@ impl<E: BatchEngine> Scheduler<E> {
             }
         }
 
+        // surface swap traffic alongside the batching counters
+        let sw = self.sessions.stats();
+        self.stats.swap_ins = sw.swap_ins;
+        self.stats.swap_outs = sw.swap_outs;
+        self.stats.swap_bytes = sw.bytes_in + sw.bytes_out;
+        self.stats.swap_s = sw.swap_s;
+
         self.stats.sched_overhead_s += t_tick.elapsed().as_secs_f64() - dt;
         Ok((events, compute_s))
     }
 
-    /// Admit waiting requests. Verify rounds whose session already owns
-    /// a slot are admitted unconditionally (they consume no new slot;
+    /// Admit waiting requests. Verify rounds whose session is already
+    /// open are admitted unconditionally (they consume no new session;
     /// rounds of one session stay serialised — a round's `base_len`
-    /// depends on its predecessor's acceptance). Free slots are then
-    /// shared **round-robin** between the generate queue and new verify
+    /// depends on its predecessor's acceptance). Remaining admission
+    /// capacity ([`BatchPolicy::max_sessions`] logical sessions — the
+    /// compiled slot count no longer caps concurrency) is then shared
+    /// **round-robin** between the generate queue and new verify
     /// sessions, so neither admission queue can starve the other. A
     /// request of the wrong variant in either queue is an internal
     /// routing bug and surfaces as an error instead of being silently
@@ -519,14 +570,14 @@ impl<E: BatchEngine> Scheduler<E> {
             if self.verifying.iter().any(|j| j.request_id == request_id) || earlier_round_pending
             {
                 deferred.push_back(req); // serialise rounds of one session
-            } else if self.session_slot.contains_key(&request_id) {
+            } else if self.sessions.contains(request_id) {
                 self.start_verify(req, events);
             } else {
                 new_sessions.push_back(req);
             }
         }
-        // pass 2: hand out free slots alternately
-        while self.engine.free_slots() > 0
+        // pass 2: hand out session capacity alternately
+        while self.sessions.can_open()
             && !(self.waiting_gen.is_empty() && new_sessions.is_empty())
         {
             let take_verify = if new_sessions.is_empty() {
@@ -542,18 +593,16 @@ impl<E: BatchEngine> Scheduler<E> {
                 let CloudRequest::Verify { request_id, .. } = &req else {
                     unreachable!("triaged in pass 1");
                 };
-                let slot = self.engine.alloc_slot(*request_id).expect("free slot");
-                self.session_slot.insert(*request_id, slot);
+                self.sessions.open(*request_id)?;
                 self.start_verify(req, events);
             } else {
                 match self.waiting_gen.pop_front() {
                     Some(CloudRequest::Generate { request_id, prompt, max_new }) => {
-                        let slot = self.engine.alloc_slot(request_id).expect("free slot");
+                        self.sessions.open(request_id)?;
                         self.prefilling.push(GenJob {
                             request_id,
                             prompt,
                             consumed: 0,
-                            slot,
                             max_new,
                             generated: Vec::new(),
                             next_token: None,
@@ -573,18 +622,18 @@ impl<E: BatchEngine> Scheduler<E> {
         Ok(())
     }
 
-    /// Start a verify round on its session's slot (the caller ensures
-    /// the slot exists and no round of the session is in flight). A
-    /// round that would overflow the slot's KV capacity ends the
-    /// session gracefully (EOS correction, zero accepted) instead of
-    /// failing the scheduling loop mid-tick.
+    /// Start a verify round on its (already open) session. The caller
+    /// ensures no round of the session is in flight; the session's
+    /// committed length is tracked by the [`SessionManager`] whether
+    /// the KV is resident or parked. A round that would overflow the
+    /// slot's KV capacity ends the session gracefully (EOS correction,
+    /// zero accepted) instead of failing the scheduling loop mid-tick.
     fn start_verify(&mut self, req: CloudRequest, events: &mut Vec<CloudEvent>) {
         let CloudRequest::Verify { request_id, device_id, uncached, draft, dists, greedy } = req
         else {
             unreachable!("start_verify takes only verify requests");
         };
-        let slot = *self.session_slot.get(&request_id).expect("session slot");
-        let base_len = self.engine.slot_len(slot);
+        let base_len = self.sessions.len_of(request_id);
         if base_len + uncached.len() + draft.len() > self.engine.max_len() {
             events.push(CloudEvent::VerifyDone {
                 request_id,
@@ -599,7 +648,6 @@ impl<E: BatchEngine> Scheduler<E> {
         self.verifying.push(VerifyJob {
             request_id,
             device_id,
-            slot,
             base_len,
             u,
             tokens,

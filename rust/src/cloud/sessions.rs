@@ -1,0 +1,315 @@
+//! Logical-session manager: many sessions over B compute slots.
+//!
+//! The compiled cloud executables fix the batch width (B=4 slots), but
+//! paper-scale serving (§Scalable Cloud Batching, Fig. 15) needs far
+//! more *concurrent device sessions* than that. This module decouples
+//! the two: a [`SessionManager`] tracks every admitted session as
+//!
+//! * **Resident** — owns an engine slot; its KV lives in the engine
+//!   cache and it can be scheduled this iteration;
+//! * **Parked** — its committed KV rows sit in a host-side
+//!   [`BlockPool`] (see [`crate::runtime::paging`]) under a block
+//!   table; it holds no slot;
+//! * **Swapping** — transient marker while rows are mid-copy (never
+//!   observable between manager calls).
+//!
+//! Before each scheduler iteration, sessions picked for execution are
+//! made resident on demand: if no slot is free, the
+//! least-recently-scheduled resident session is *parked* (swap-out via
+//! `BatchEngine::export_slot`), its slot is reassigned, and the target
+//! session's rows are restored (`import_slot`). Sessions **pinned** by
+//! the current iteration's picks are never eviction victims, so a tick
+//! can never swap out work it is about to run. Swap traffic and copy
+//! time are charged to [`SwapStats`] (and surfaced through the
+//! scheduler's Fig. 18 overhead accounting, since swaps happen outside
+//! engine compute).
+//!
+//! Concurrency is therefore bounded by `max_sessions` (host memory),
+//! not by the compiled batch width — the Fig. 15 latency knee moves
+//! from B to `max_sessions`.
+
+use std::collections::{HashMap, HashSet};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::BatchPolicy;
+use crate::model::cloud_engine::{BatchEngine, SlotOwner};
+use crate::runtime::paging::{BlockPool, BlockTable};
+
+/// Token rows per host KV block (vLLM-style fixed granularity).
+pub const BLOCK_TOKENS: usize = 16;
+
+#[derive(Debug)]
+enum SessionState {
+    /// Owns engine slot `slot`; KV lives in the engine cache.
+    Resident { slot: usize },
+    /// KV parked in the host block pool (empty table for new sessions).
+    Parked { table: BlockTable },
+    /// Transient mid-swap marker.
+    Swapping,
+}
+
+#[derive(Debug)]
+struct Session {
+    state: SessionState,
+    /// Committed KV rows (mirrors the engine `slot_len` while resident).
+    len: usize,
+    /// LRU stamp — bumped whenever the session is granted a slot or
+    /// scheduled; the eviction victim is the smallest stamp.
+    last_used: u64,
+}
+
+/// Swap-traffic accounting (paged-KV cost visibility).
+#[derive(Debug, Clone, Default)]
+pub struct SwapStats {
+    pub swap_ins: u64,
+    pub swap_outs: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// Host copy seconds across all swaps.
+    pub swap_s: f64,
+}
+
+/// Tracks logical sessions and pages their KV between engine slots and
+/// the host [`BlockPool`]. Eviction is LRU-with-pinning: the least
+/// recently scheduled resident session is parked, but never one the
+/// current iteration has already picked.
+pub struct SessionManager {
+    pool: BlockPool,
+    sessions: HashMap<u64, Session>,
+    clock: u64,
+    /// Admission cap on concurrent logical sessions.
+    pub max_sessions: usize,
+    stats: SwapStats,
+}
+
+impl SessionManager {
+    pub fn new(max_sessions: usize, pool: BlockPool) -> SessionManager {
+        SessionManager {
+            pool,
+            sessions: HashMap::new(),
+            clock: 0,
+            max_sessions: max_sessions.max(1),
+            stats: SwapStats::default(),
+        }
+    }
+
+    /// Size a manager for `engine` under `policy`: `max_sessions == 0`
+    /// means "the physical slot count" (paging never triggers, pool is
+    /// empty); above the slot count, the pool capacity covers the worst
+    /// case — every non-resident session parked at full length, plus
+    /// one mid-swap victim — so swap-outs cannot fail. The capacity is
+    /// only a cap: block storage materialises lazily as sessions
+    /// actually park, so an oversized pool costs no host memory up
+    /// front.
+    pub fn for_engine<E: BatchEngine>(engine: &E, policy: &BatchPolicy) -> SessionManager {
+        let slots = engine.slots().max(1);
+        let max_sessions =
+            if policy.max_sessions == 0 { slots } else { policy.max_sessions.max(1) };
+        let block_tokens = BLOCK_TOKENS.min(engine.max_len().max(1));
+        let per_session = engine.max_len().div_ceil(block_tokens);
+        let capacity = if max_sessions > slots {
+            (max_sessions - slots + 1) * per_session.max(1)
+        } else {
+            0 // sessions ≤ slots: every session can stay resident
+        };
+        let pool = BlockPool::new(capacity, block_tokens, engine.kv_row_width());
+        SessionManager::new(max_sessions, pool)
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.sessions.contains_key(&id)
+    }
+
+    /// Number of open logical sessions.
+    pub fn active(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Room for another logical session?
+    pub fn can_open(&self) -> bool {
+        self.sessions.len() < self.max_sessions
+    }
+
+    /// Committed KV rows of a session (0 for unknown ids).
+    pub fn len_of(&self, id: u64) -> usize {
+        self.sessions.get(&id).map_or(0, |s| s.len)
+    }
+
+    /// The engine slot of a resident session.
+    pub fn slot_of(&self, id: u64) -> Option<usize> {
+        match self.sessions.get(&id)?.state {
+            SessionState::Resident { slot } => Some(slot),
+            _ => None,
+        }
+    }
+
+    pub fn stats(&self) -> &SwapStats {
+        &self.stats
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.pool.free_blocks()
+    }
+
+    pub fn block_capacity(&self) -> usize {
+        self.pool.capacity()
+    }
+
+    /// Open a logical session (no slot is claimed yet — the first
+    /// `ensure_resident` call does that).
+    pub fn open(&mut self, id: u64) -> Result<()> {
+        if self.sessions.contains_key(&id) {
+            bail!("session {id} already open");
+        }
+        if !self.can_open() {
+            bail!("session table full ({} of {})", self.sessions.len(), self.max_sessions);
+        }
+        self.clock += 1;
+        self.sessions.insert(
+            id,
+            Session {
+                state: SessionState::Parked { table: BlockTable::empty() },
+                len: 0,
+                last_used: self.clock,
+            },
+        );
+        Ok(())
+    }
+
+    /// Close a session, returning its slot or pool blocks. Unknown ids
+    /// are a no-op (a release may race a session that never offloaded).
+    pub fn close<E: BatchEngine>(&mut self, id: u64, engine: &mut E) {
+        let Some(sess) = self.sessions.remove(&id) else { return };
+        match sess.state {
+            SessionState::Resident { slot } => engine.free_slot(slot),
+            SessionState::Parked { table } => self.pool.release(table),
+            SessionState::Swapping => unreachable!("close during an in-flight swap"),
+        }
+    }
+
+    /// Record `n` freshly committed rows (after an engine call).
+    pub fn note_rows(&mut self, id: u64, n: usize) {
+        if let Some(s) = self.sessions.get_mut(&id) {
+            s.len += n;
+        }
+    }
+
+    /// Set the committed length (verification rollback).
+    pub fn set_len(&mut self, id: u64, len: usize) {
+        if let Some(s) = self.sessions.get_mut(&id) {
+            s.len = len;
+        }
+    }
+
+    /// Make `id` resident and return its slot, swapping a parked
+    /// session in over the LRU victim if every slot is claimed.
+    /// Sessions in `pinned` (already picked this iteration) are never
+    /// evicted. Returns `Ok(None)` when no slot can be freed — the
+    /// caller skips the job this iteration and lets it age.
+    pub fn ensure_resident<E: BatchEngine>(
+        &mut self,
+        id: u64,
+        engine: &mut E,
+        pinned: &HashSet<u64>,
+    ) -> Result<Option<usize>> {
+        self.clock += 1;
+        let clock = self.clock;
+        {
+            let Some(sess) = self.sessions.get_mut(&id) else {
+                bail!("ensure_resident of unknown session {id}");
+            };
+            if let SessionState::Resident { slot } = sess.state {
+                sess.last_used = clock;
+                return Ok(Some(slot));
+            }
+        }
+        if engine.free_slots() == 0 {
+            // LRU victim among unpinned resident sessions (stable
+            // id tie-break: HashMap order must not leak into policy)
+            let mut victim: Option<(u64, u64)> = None;
+            for (&vid, s) in self.sessions.iter() {
+                if pinned.contains(&vid) || !matches!(s.state, SessionState::Resident { .. }) {
+                    continue;
+                }
+                let key = (s.last_used, vid);
+                let better = match victim {
+                    None => true,
+                    Some(v) => key < v,
+                };
+                if better {
+                    victim = Some(key);
+                }
+            }
+            let Some((_, vid)) = victim else { return Ok(None) };
+            if !self.park(vid, engine)? {
+                return Ok(None); // host pool exhausted; retry next tick
+            }
+        }
+        let t0 = Instant::now();
+        let sess = self.sessions.get_mut(&id).expect("looked up above");
+        let state = std::mem::replace(&mut sess.state, SessionState::Swapping);
+        let SessionState::Parked { table } = state else {
+            unreachable!("non-resident session must be parked");
+        };
+        let slot = engine.alloc_slot(SlotOwner::Request(id)).expect("slot freed above");
+        if table.len > 0 {
+            let kv = self.pool.load(&table);
+            self.stats.bytes_in += kv.bytes() as u64;
+            self.stats.swap_ins += 1;
+            if let Err(e) = engine.import_slot(slot, &kv) {
+                // roll the half-swap back: return the slot, keep the
+                // parked image authoritative (no stranded Swapping
+                // state, no leaked blocks)
+                engine.free_slot(slot);
+                self.sessions.get_mut(&id).expect("still present").state =
+                    SessionState::Parked { table };
+                return Err(e);
+            }
+        }
+        self.pool.release(table);
+        let sess = self.sessions.get_mut(&id).expect("still present");
+        sess.state = SessionState::Resident { slot };
+        sess.last_used = clock;
+        self.stats.swap_s += t0.elapsed().as_secs_f64();
+        Ok(Some(slot))
+    }
+
+    /// Swap a resident session's KV out to the host pool and free its
+    /// slot. Returns `false` (session left resident) when the pool
+    /// cannot hold the rows.
+    fn park<E: BatchEngine>(&mut self, id: u64, engine: &mut E) -> Result<bool> {
+        let t0 = Instant::now();
+        let Some(sess) = self.sessions.get_mut(&id) else {
+            bail!("park of unknown session {id}");
+        };
+        let SessionState::Resident { slot } = sess.state else {
+            bail!("park of non-resident session {id}");
+        };
+        // capacity check before the (potentially large) export copy —
+        // the committed length is known without touching the engine
+        if self.pool.free_blocks() < self.pool.blocks_for(sess.len) {
+            return Ok(false);
+        }
+        let kv = engine.export_slot(slot);
+        debug_assert_eq!(kv.len, sess.len, "engine/session committed-length divergence");
+        sess.state = SessionState::Swapping;
+        let table = match self.pool.store(&kv) {
+            Ok(table) => table,
+            Err(e) => {
+                // undo the half-swap: the session stays resident
+                self.sessions.get_mut(&id).expect("still present").state =
+                    SessionState::Resident { slot };
+                return Err(e);
+            }
+        };
+        engine.free_slot(slot);
+        self.stats.swap_outs += 1;
+        self.stats.bytes_out += kv.bytes() as u64;
+        self.stats.swap_s += t0.elapsed().as_secs_f64();
+        self.sessions.get_mut(&id).expect("still present").state =
+            SessionState::Parked { table };
+        Ok(true)
+    }
+}

@@ -93,6 +93,12 @@ impl DeviceProfile {
 /// monopolise the iteration. Any job skipped for `age_threshold`
 /// consecutive iterations is promoted ahead of all non-aged work, which
 /// bounds worst-case queueing delay for every class.
+///
+/// `max_sessions` decouples *admission* from the compiled batch width:
+/// the scheduler admits up to that many logical sessions and pages the
+/// KV of slot-less ones through a host block pool
+/// (`runtime::paging` + `cloud::sessions`), so the Fig. 15 queueing
+/// knee sits at `max_sessions` instead of the engine's B.
 #[derive(Debug, Clone)]
 pub struct BatchPolicy {
     /// Max token rows per engine iteration. `0` = auto (slots × chunk,
@@ -104,11 +110,15 @@ pub struct BatchPolicy {
     /// Iterations a runnable job may be skipped before it jumps the
     /// priority order.
     pub age_threshold: u64,
+    /// Max concurrent *logical* sessions. `0` = auto (the engine's
+    /// physical slot count — paged-KV swapping never triggers); values
+    /// above the slot count enable host-side KV paging.
+    pub max_sessions: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { token_budget: 0, prefill_share: 0.5, age_threshold: 4 }
+        BatchPolicy { token_budget: 0, prefill_share: 0.5, age_threshold: 4, max_sessions: 0 }
     }
 }
 
@@ -240,5 +250,6 @@ mod tests {
         assert_eq!(b.token_budget, 0, "default budget is auto (engine capacity)");
         assert!(b.prefill_share > 0.0 && b.prefill_share <= 1.0);
         assert!(b.age_threshold >= 1);
+        assert_eq!(b.max_sessions, 0, "default session cap is auto (slot count, no paging)");
     }
 }

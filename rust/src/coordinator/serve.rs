@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
+use crate::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler, SchedulerStats};
 use crate::config::Scenario;
 use crate::device::codec::compress_dist;
 use crate::device::early_exit::SeqExitPolicy;
@@ -55,6 +55,10 @@ pub struct ServeReport {
     pub verify_rtt: Summary,
     pub quality: f64,
     pub offload_rate: f64,
+    /// Paged-KV swap traffic on the cloud thread (0/0 when
+    /// `max_sessions` keeps every session resident).
+    pub swap_ins: u64,
+    pub swap_outs: u64,
 }
 
 enum ToCloud {
@@ -74,7 +78,7 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
     // ---------------- cloud thread ----------------
     let cloud = std::thread::Builder::new()
         .name("synera-cloud".into())
-        .spawn(move || -> Result<()> {
+        .spawn(move || -> Result<SchedulerStats> {
             let rt = Runtime::load(artifacts)?;
             let mut engine = CloudEngine::new(rt.model(&llm)?)?;
             engine.warmup()?; // compile before accepting traffic
@@ -120,7 +124,7 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
                     }
                 }
             }
-            Ok(())
+            Ok(sched.stats.clone())
         })?;
 
     // ---------------- device threads ----------------
@@ -153,7 +157,7 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
         all.merge(s);
     }
     let wall = t0.elapsed().as_secs_f64();
-    cloud.join().map_err(|_| anyhow!("cloud thread panicked"))??;
+    let cloud_stats = cloud.join().map_err(|_| anyhow!("cloud thread panicked"))??;
 
     Ok(ServeReport {
         completed: all.completed,
@@ -164,6 +168,8 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
         verify_rtt: Summary::of(&all.rtts),
         quality: if all.completed > 0 { all.quality / all.completed as f64 } else { 0.0 },
         offload_rate: if all.chunks > 0 { all.offloads as f64 / all.chunks as f64 } else { 0.0 },
+        swap_ins: cloud_stats.swap_ins,
+        swap_outs: cloud_stats.swap_outs,
     })
 }
 

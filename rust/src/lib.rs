@@ -17,7 +17,10 @@
 //!   prefill, verification and decode rows co-scheduled per iteration
 //!   under a token budget with aging-based fairness) over a slot-based
 //!   batch engine ([`model::cloud_engine`]) with chunked partial
-//!   prefill and speculative verification ([`cloud::verifier`]);
+//!   prefill, speculative verification ([`cloud::verifier`]) and
+//!   paged-KV logical sessions ([`cloud::sessions`] over
+//!   [`runtime::paging`]: concurrency bounded by host memory, not the
+//!   compiled batch width);
 //! * the **substrates** the paper's testbed provided: a bandwidth/RTT
 //!   network simulator ([`net`]), the seven SynthLang datasets
 //!   ([`workload`]), quality/latency/cost/energy metrics ([`metrics`]),

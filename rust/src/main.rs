@@ -3,6 +3,7 @@
 //! ```text
 //! synera generate  --slm s1b --llm l13b --task xsum --index 0 [--budget 0.2]
 //!                  [--token-budget 0] [--prefill-share 0.5] [--age-threshold 4]
+//!                  [--max-sessions 0]   (0 = engine slots; >slots enables KV paging)
 //! synera eval      --method synera --slm s1b --llm l13b --task xsum --n 16
 //! synera profile   [--slm s1b --llm l13b] [--refresh]
 //! synera serve     --devices 4 --requests 8 --task xsum
@@ -52,6 +53,8 @@ fn scenario_from(args: &Args) -> Result<Scenario> {
         args.get_f64("prefill-share", scen.params.batch.prefill_share)?;
     scen.params.batch.age_threshold =
         args.get_usize("age-threshold", scen.params.batch.age_threshold as usize)? as u64;
+    scen.params.batch.max_sessions =
+        args.get_usize("max-sessions", scen.params.batch.max_sessions)?;
     if let Some(w) = args.get("slm-weights") {
         scen.pair.slm_weights = Some(w.to_string());
     }
@@ -242,5 +245,6 @@ fn serve(args: &Args) -> Result<()> {
         rep.quality,
         rep.offload_rate,
     );
+    println!("paged-kv swaps: in={} out={}", rep.swap_ins, rep.swap_outs);
     Ok(())
 }

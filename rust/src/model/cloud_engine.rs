@@ -16,7 +16,25 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::{KvCache, Model};
+use crate::runtime::{KvCache, Model, SlotKv};
+
+/// Identity of a slot's claimant. Engine-internal claims (warmup
+/// probes) get a dedicated variant instead of a magic sentinel id:
+/// `u64::MAX` is a perfectly valid request id, so using it as an
+/// in-band marker could collide with a real session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SlotOwner {
+    /// Engine-internal claim (e.g. warmup) — never a client request.
+    Internal,
+    /// A client request / logical session id.
+    Request(u64),
+}
+
+impl From<u64> for SlotOwner {
+    fn from(id: u64) -> SlotOwner {
+        SlotOwner::Request(id)
+    }
+}
 
 /// Work for one slot within a batch call: append `tokens` to the slot's
 /// sequence (their K/V enter the cache; logits come back per row).
@@ -56,13 +74,23 @@ pub trait BatchEngine {
     /// Cumulative executed token rows (cost accounting).
     fn rows_executed(&self) -> u64;
     /// Claim a free slot for `owner`; starts with an empty cache.
-    fn alloc_slot(&mut self, owner: u64) -> Option<usize>;
+    fn alloc_slot(&mut self, owner: SlotOwner) -> Option<usize>;
     /// Release a slot (stale KV is masked by `slot_len`).
     fn free_slot(&mut self, slot: usize);
     /// Number of currently unclaimed slots.
     fn free_slots(&self) -> usize;
     /// Roll a slot's committed length back (verify rejects a tail).
     fn rollback(&mut self, slot: usize, len: usize);
+    /// Floats per committed token row in each KV plane
+    /// (layers × heads × d_head) — the geometry host-side block pools
+    /// must match to page this engine's slots.
+    fn kv_row_width(&self) -> usize;
+    /// Export a slot's committed KV rows as raw slot-independent row
+    /// data (paged-KV swap-out). The slot's own state is unchanged.
+    fn export_slot(&self, slot: usize) -> SlotKv;
+    /// Overwrite a claimed slot's KV with previously exported rows and
+    /// set its committed length to `kv.len` (paged-KV swap-in).
+    fn import_slot(&mut self, slot: usize, kv: &SlotKv) -> Result<()>;
     /// Execute one mixed batch iteration; returns per-slot logits rows
     /// and the measured compute seconds.
     fn run_batch(&mut self, items: &[SlotChunk]) -> Result<(Vec<SlotLogits>, f64)>;
@@ -74,8 +102,8 @@ pub struct CloudEngine {
     pub kv: KvCache,
     /// Committed sequence length per slot.
     pub slot_len: Vec<usize>,
-    /// Slot occupancy (request id or free).
-    pub slot_owner: Vec<Option<u64>>,
+    /// Slot occupancy (claimant or free).
+    pub slot_owner: Vec<Option<SlotOwner>>,
     pub slots: usize,
     pub chunk: usize,
     /// Cumulative executed token rows (cost accounting).
@@ -110,7 +138,7 @@ impl CloudEngine {
         let Some(s) = self.slot_owner.iter().position(|o| o.is_none()) else {
             bail!("warmup requires a free slot (all {} slots busy)", self.slots);
         };
-        self.slot_owner[s] = Some(u64::MAX);
+        self.slot_owner[s] = Some(SlotOwner::Internal);
         self.slot_len[s] = 0;
         let rows = self.rows_executed;
         // 2-token chunk exercises `chunk_b4_c32`; the 1-token decode row
@@ -124,10 +152,11 @@ impl CloudEngine {
         Ok(())
     }
 
-    /// Claim a free slot for `owner`; the slot starts with an empty cache.
-    pub fn alloc_slot(&mut self, owner: u64) -> Option<usize> {
+    /// Claim a free slot for `owner`; the slot starts with an empty
+    /// cache. Plain `u64` request ids coerce via `Into<SlotOwner>`.
+    pub fn alloc_slot(&mut self, owner: impl Into<SlotOwner>) -> Option<usize> {
         let s = self.slot_owner.iter().position(|o| o.is_none())?;
-        self.slot_owner[s] = Some(owner);
+        self.slot_owner[s] = Some(owner.into());
         self.slot_len[s] = 0;
         Some(s)
     }
@@ -247,7 +276,7 @@ impl BatchEngine for CloudEngine {
         self.rows_executed
     }
 
-    fn alloc_slot(&mut self, owner: u64) -> Option<usize> {
+    fn alloc_slot(&mut self, owner: SlotOwner) -> Option<usize> {
         CloudEngine::alloc_slot(self, owner)
     }
 
@@ -261,6 +290,27 @@ impl BatchEngine for CloudEngine {
 
     fn rollback(&mut self, slot: usize, len: usize) {
         CloudEngine::rollback(self, slot, len)
+    }
+
+    fn kv_row_width(&self) -> usize {
+        let m = &self.model.meta;
+        m.n_layers * m.n_heads * m.d_head
+    }
+
+    fn export_slot(&self, slot: usize) -> SlotKv {
+        self.kv.export_slot_rows(slot, self.slot_len[slot])
+    }
+
+    fn import_slot(&mut self, slot: usize, kv: &SlotKv) -> Result<()> {
+        if slot >= self.slots || self.slot_owner[slot].is_none() {
+            bail!("import into unclaimed slot {slot}");
+        }
+        if kv.len > self.model.meta.max_len {
+            bail!("imported {} rows exceed slot capacity {}", kv.len, self.model.meta.max_len);
+        }
+        self.kv.import_slot_rows(slot, kv);
+        self.slot_len[slot] = kv.len;
+        Ok(())
     }
 
     fn run_batch(&mut self, items: &[SlotChunk]) -> Result<(Vec<SlotLogits>, f64)> {

@@ -167,7 +167,10 @@ impl DeviceEngine {
         let compute_s = t0.elapsed().as_secs_f64();
 
         let (kv_full, kv1, kv2) = if self.split {
-            let (a, b) = kv.split_at_layer(split);
+            // consuming split: the prefill cache is dead after the
+            // handoff, so only the upper layer range is copied (halves
+            // peak KV memory vs cloning both halves)
+            let (a, b) = kv.split_into_at_layer(split);
             (None, Some(a), Some(b))
         } else {
             (Some(kv), None, None)

@@ -6,6 +6,6 @@ pub mod cloud_engine;
 pub mod device_engine;
 pub mod logits;
 
-pub use cloud_engine::{BatchEngine, CloudEngine, SlotChunk, SlotLogits};
+pub use cloud_engine::{BatchEngine, CloudEngine, SlotChunk, SlotLogits, SlotOwner};
 pub use device_engine::{DeviceEngine, DeviceSession, StepOut};
 pub use logits::{argmax, margin_top12, softmax, top_k};

@@ -6,6 +6,8 @@
 //! length — stale slots beyond it are never attended to. Splitting at the
 //! early-exit layer is a contiguous copy (layer-major layout).
 
+use crate::runtime::paging::SlotKv;
+
 /// Mutable KV state for one executable family (a layer range).
 #[derive(Debug, Clone)]
 pub struct KvCache {
@@ -49,6 +51,65 @@ impl KvCache {
             mk(&self.k[..cut], &self.v[..cut], at),
             mk(&self.k[cut..], &self.v[cut..], l - at),
         )
+    }
+
+    /// Consuming variant of [`KvCache::split_at_layer`]: the lower range
+    /// reuses the original allocation in place and only the upper range
+    /// is copied out, so peak memory during the early-exit handoff is
+    /// ~1.5× the cache instead of 2× (the borrowing variant clones both
+    /// halves while the original is still alive).
+    pub fn split_into_at_layer(self, at: usize) -> (KvCache, KvCache) {
+        let [l, b, m, h, dh] = self.shape;
+        assert!(at <= l, "split {at} > layers {l}");
+        let cut = at * b * m * h * dh;
+        let mut k = self.k;
+        let mut v = self.v;
+        let k_hi = k.split_off(cut);
+        let v_hi = v.split_off(cut);
+        (
+            KvCache { k, v, shape: [at, b, m, h, dh] },
+            KvCache { k: k_hi, v: v_hi, shape: [l - at, b, m, h, dh] },
+        )
+    }
+
+    /// Export the first `len` committed rows of `slot` as contiguous
+    /// slot-independent row data (paged-KV swap-out): row `p` is the
+    /// concatenation over layers of that position's `H×Dh` block.
+    pub fn export_slot_rows(&self, slot: usize, len: usize) -> SlotKv {
+        let [l, b, m, h, dh] = self.shape;
+        assert!(slot < b && len <= m, "export out of range");
+        let row = h * dh;
+        let width = l * row;
+        let mut k = vec![0f32; len * width];
+        let mut v = vec![0f32; len * width];
+        for layer in 0..l {
+            for p in 0..len {
+                let src = ((layer * b + slot) * m + p) * row;
+                let dst = p * width + layer * row;
+                k[dst..dst + row].copy_from_slice(&self.k[src..src + row]);
+                v[dst..dst + row].copy_from_slice(&self.v[src..src + row]);
+            }
+        }
+        SlotKv { len, row: width, k, v }
+    }
+
+    /// Overwrite the leading rows of `slot` from exported data
+    /// (paged-KV swap-in). Rows beyond `kv.len` keep their stale
+    /// content — callers mask them by committed length, as everywhere
+    /// else in the runtime.
+    pub fn import_slot_rows(&mut self, slot: usize, kv: &SlotKv) {
+        let [l, b, m, h, dh] = self.shape;
+        assert!(slot < b && kv.len <= m, "import out of range");
+        let row = h * dh;
+        assert_eq!(kv.row, l * row, "kv row width mismatch");
+        for layer in 0..l {
+            for p in 0..kv.len {
+                let dst = ((layer * b + slot) * m + p) * row;
+                let src = p * kv.row + layer * row;
+                self.k[dst..dst + row].copy_from_slice(&kv.k[src..src + row]);
+                self.v[dst..dst + row].copy_from_slice(&kv.v[src..src + row]);
+            }
+        }
     }
 
     /// Zero the whole cache (slot reuse). Lengths are tracked by callers.
@@ -110,6 +171,38 @@ mod tests {
         let mut rejoined = a.k.clone();
         rejoined.extend_from_slice(&b.k);
         assert_eq!(rejoined, kv.k);
+    }
+
+    #[test]
+    fn consuming_split_matches_borrowing_split() {
+        let kv = filled(4, 2);
+        let (a, b) = kv.split_at_layer(3);
+        let (ca, cb) = filled(4, 2).split_into_at_layer(3);
+        assert_eq!(ca.shape, a.shape);
+        assert_eq!(cb.shape, b.shape);
+        assert_eq!(ca.k, a.k);
+        assert_eq!(ca.v, a.v);
+        assert_eq!(cb.k, b.k);
+        assert_eq!(cb.v, b.v);
+    }
+
+    #[test]
+    fn export_import_slot_rows_round_trip() {
+        let src = filled(3, 2);
+        let snap = src.export_slot_rows(1, 4);
+        assert_eq!(snap.len, 4);
+        assert_eq!(snap.row, 3 * 2 * 3);
+        // restore into a different slot of a fresh cache
+        let mut dst = KvCache::new(3, 4, 4, 2, 3);
+        dst.import_slot_rows(2, &snap);
+        assert_eq!(dst.export_slot_rows(2, 4), snap, "round trip not bit-identical");
+        // spot-check one row against the layer-major source layout
+        let row = 2 * 3; // heads × d_head
+        let (m, b) = (4, 2);
+        let (layer, pos, slot) = (1usize, 2usize, 1usize);
+        let src_off = ((layer * b + slot) * m + pos) * row;
+        let snap_off = pos * snap.row + layer * row;
+        assert_eq!(&snap.k[snap_off..snap_off + row], &src.k[src_off..src_off + row]);
     }
 
     #[test]

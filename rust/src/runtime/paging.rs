@@ -1,0 +1,277 @@
+//! Host-side paged KV storage: a [`BlockPool`] of fixed-size KV blocks
+//! with a free-list allocator, plus the [`SlotKv`] interchange format
+//! for raw committed rows of one engine slot.
+//!
+//! This is the storage half of the vLLM-style session paging that lets
+//! the cloud serve far more *logical* sessions than the compiled batch
+//! width B: a session that loses its compute slot has its committed KV
+//! rows copied out into pool blocks (swap-out) and copied back into
+//! whichever slot it is granted next (swap-in). Blocks are fixed-size
+//! (`block_tokens` rows each) so allocation is O(1) pops off a free
+//! list and there is no fragmentation; a session's blocks need not be
+//! contiguous — its [`BlockTable`] records the ordering.
+//!
+//! The pool is engine-agnostic: it stores whatever
+//! `BatchEngine::export_slot` produced and hands it back verbatim, so
+//! a swapped-out-then-in session's KV is bit-identical by construction
+//! (asserted by `tests/paging_invariants.rs`). Eviction *policy* (who
+//! gets parked) lives in [`crate::cloud::sessions::SessionManager`];
+//! this module is mechanism only.
+
+use anyhow::{bail, Result};
+
+/// Raw committed KV rows of one engine slot, in slot-independent
+/// row-major layout: row `p` holds the concatenation over layers of
+/// that position's `heads × d_head` keys (resp. values).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotKv {
+    /// Committed token rows.
+    pub len: usize,
+    /// Floats per row in each of `k`/`v` (layers × heads × d_head).
+    pub row: usize,
+    /// `len × row` keys.
+    pub k: Vec<f32>,
+    /// `len × row` values.
+    pub v: Vec<f32>,
+}
+
+impl SlotKv {
+    pub fn empty(row: usize) -> SlotKv {
+        SlotKv { len: 0, row, k: Vec::new(), v: Vec::new() }
+    }
+
+    /// Payload size in bytes (both planes, f32) — swap-traffic accounting.
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// Block table of one parked session: ordered block ids plus the row
+/// count (the last block may be partially filled).
+#[derive(Debug, Default)]
+pub struct BlockTable {
+    pub blocks: Vec<usize>,
+    /// Committed token rows stored across `blocks`.
+    pub len: usize,
+}
+
+impl BlockTable {
+    /// Table of a brand-new session: no rows, no blocks.
+    pub fn empty() -> BlockTable {
+        BlockTable::default()
+    }
+}
+
+/// Fixed-size host KV block pool with a free-list allocator.
+///
+/// Backing storage grows **lazily**: `capacity` is a hard cap on live
+/// blocks, but bytes are only committed when a block is first handed
+/// out, so a pool sized for the worst case (every parkable session at
+/// full length) costs nothing until sessions actually park.
+pub struct BlockPool {
+    /// Token rows per block.
+    block_tokens: usize,
+    /// Floats per token row (per K/V plane).
+    row: usize,
+    /// Storage for the blocks materialised so far (`used.len()` blocks).
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Free ids among materialised blocks (LIFO).
+    free: Vec<usize>,
+    /// Allocation bitmap over materialised blocks — turns double frees
+    /// into panics instead of silent aliasing.
+    used: Vec<bool>,
+    capacity: usize,
+}
+
+impl BlockPool {
+    pub fn new(capacity: usize, block_tokens: usize, row: usize) -> BlockPool {
+        assert!(block_tokens > 0 && row > 0, "degenerate block geometry");
+        BlockPool {
+            block_tokens,
+            row,
+            k: Vec::new(),
+            v: Vec::new(),
+            free: Vec::new(),
+            used: Vec::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Blocks still available: recycled ones plus never-materialised
+    /// headroom under the capacity cap.
+    pub fn free_blocks(&self) -> usize {
+        self.free.len() + (self.capacity - self.used.len())
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn row_width(&self) -> usize {
+        self.row
+    }
+
+    /// Blocks needed to park `len` committed rows.
+    pub fn blocks_for(&self, len: usize) -> usize {
+        len.div_ceil(self.block_tokens)
+    }
+
+    /// Copy `kv` into freshly allocated blocks (swap-out).
+    pub fn store(&mut self, kv: &SlotKv) -> Result<BlockTable> {
+        if kv.row != self.row {
+            bail!("kv row width {} != pool row width {}", kv.row, self.row);
+        }
+        let need = self.blocks_for(kv.len);
+        if self.free_blocks() < need {
+            bail!("block pool exhausted: need {need}, free {}", self.free_blocks());
+        }
+        let mut blocks = Vec::with_capacity(need);
+        for b in 0..need {
+            let blk = match self.free.pop() {
+                Some(blk) => blk,
+                None => {
+                    // materialise a fresh block under the capacity cap
+                    let blk = self.used.len();
+                    let n = self.block_tokens * self.row;
+                    self.k.resize(self.k.len() + n, 0.0);
+                    self.v.resize(self.v.len() + n, 0.0);
+                    self.used.push(false);
+                    blk
+                }
+            };
+            debug_assert!(!self.used[blk], "free list handed out a live block");
+            self.used[blk] = true;
+            let rows_here = (kv.len - b * self.block_tokens).min(self.block_tokens);
+            let n = rows_here * self.row;
+            let src = b * self.block_tokens * self.row;
+            let dst = blk * self.block_tokens * self.row;
+            self.k[dst..dst + n].copy_from_slice(&kv.k[src..src + n]);
+            self.v[dst..dst + n].copy_from_slice(&kv.v[src..src + n]);
+            blocks.push(blk);
+        }
+        Ok(BlockTable { blocks, len: kv.len })
+    }
+
+    /// Materialise a parked session's rows (swap-in).
+    pub fn load(&self, table: &BlockTable) -> SlotKv {
+        let mut kv = SlotKv {
+            len: table.len,
+            row: self.row,
+            k: vec![0.0; table.len * self.row],
+            v: vec![0.0; table.len * self.row],
+        };
+        for (b, &blk) in table.blocks.iter().enumerate() {
+            assert!(self.used[blk], "load from a freed block");
+            let rows_here = (table.len - b * self.block_tokens).min(self.block_tokens);
+            let n = rows_here * self.row;
+            let src = blk * self.block_tokens * self.row;
+            let dst = b * self.block_tokens * self.row;
+            kv.k[dst..dst + n].copy_from_slice(&self.k[src..src + n]);
+            kv.v[dst..dst + n].copy_from_slice(&self.v[src..src + n]);
+        }
+        kv
+    }
+
+    /// Return a table's blocks to the free list. Freeing a block twice
+    /// panics (accounting bugs surface as test failures, not aliasing).
+    pub fn release(&mut self, table: BlockTable) {
+        for blk in table.blocks {
+            assert!(self.used[blk], "double free of block {blk}");
+            self.used[blk] = false;
+            self.free.push(blk);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_kv(len: usize, row: usize, salt: f32) -> SlotKv {
+        SlotKv {
+            len,
+            row,
+            k: (0..len * row).map(|i| i as f32 + salt).collect(),
+            v: (0..len * row).map(|i| -(i as f32) - salt).collect(),
+        }
+    }
+
+    #[test]
+    fn store_load_round_trip_is_bit_identical() {
+        let mut pool = BlockPool::new(8, 4, 6);
+        let kv = sample_kv(10, 6, 0.5); // 2.5 blocks → 3
+        let t = pool.store(&kv).unwrap();
+        assert_eq!(t.blocks.len(), 3);
+        assert_eq!(pool.free_blocks(), 5);
+        assert_eq!(pool.load(&t), kv);
+        pool.release(t);
+        assert_eq!(pool.free_blocks(), 8);
+    }
+
+    #[test]
+    fn interleaved_sessions_do_not_alias() {
+        let mut pool = BlockPool::new(6, 2, 3);
+        let a = sample_kv(3, 3, 1.0);
+        let b = sample_kv(4, 3, 100.0);
+        let ta = pool.store(&a).unwrap();
+        let tb = pool.store(&b).unwrap();
+        assert_eq!(pool.load(&ta), a);
+        assert_eq!(pool.load(&tb), b);
+        pool.release(ta);
+        // releasing a must not disturb b
+        assert_eq!(pool.load(&tb), b);
+        pool.release(tb);
+        assert_eq!(pool.free_blocks(), 6);
+    }
+
+    #[test]
+    fn pool_storage_is_lazy() {
+        // a worst-case-sized pool costs nothing until blocks are used
+        let mut pool = BlockPool::new(1 << 40, 16, 4096);
+        assert_eq!(pool.free_blocks(), 1 << 40);
+        let t = pool.store(&sample_kv(3, 4096, 0.0)).unwrap();
+        assert_eq!(pool.free_blocks(), (1 << 40) - 1);
+        pool.release(t);
+        assert_eq!(pool.free_blocks(), 1 << 40);
+    }
+
+    #[test]
+    fn exhaustion_is_an_error_not_a_panic() {
+        let mut pool = BlockPool::new(2, 4, 2);
+        let t = pool.store(&sample_kv(8, 2, 0.0)).unwrap();
+        assert!(pool.store(&sample_kv(1, 2, 0.0)).is_err());
+        pool.release(t);
+        assert!(pool.store(&sample_kv(1, 2, 0.0)).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut pool = BlockPool::new(4, 2, 2);
+        let t = pool.store(&sample_kv(3, 2, 0.0)).unwrap();
+        let alias = BlockTable { blocks: t.blocks.clone(), len: t.len };
+        pool.release(t);
+        pool.release(alias);
+    }
+
+    #[test]
+    fn row_width_mismatch_rejected() {
+        let mut pool = BlockPool::new(4, 2, 2);
+        assert!(pool.store(&sample_kv(2, 3, 0.0)).is_err());
+    }
+
+    #[test]
+    fn empty_session_needs_no_blocks() {
+        let mut pool = BlockPool::new(2, 4, 2);
+        let t = pool.store(&SlotKv::empty(2)).unwrap();
+        assert!(t.blocks.is_empty());
+        assert_eq!(pool.free_blocks(), 2);
+        assert_eq!(pool.load(&t), SlotKv::empty(2));
+        pool.release(t);
+    }
+}

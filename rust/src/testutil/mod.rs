@@ -6,7 +6,8 @@
 
 use anyhow::{bail, Result};
 
-use crate::model::cloud_engine::{BatchEngine, SlotChunk, SlotLogits};
+use crate::model::cloud_engine::{BatchEngine, SlotChunk, SlotLogits, SlotOwner};
+use crate::runtime::SlotKv;
 use crate::util::rng::Rng;
 
 /// Deterministic in-memory [`BatchEngine`] — no PJRT, no artifacts.
@@ -26,13 +27,21 @@ pub struct MockBatchEngine {
     pub vocab: usize,
     pub max_len: usize,
     pub slot_len: Vec<usize>,
-    pub slot_owner: Vec<Option<u64>>,
+    pub slot_owner: Vec<Option<SlotOwner>>,
+    /// Synthetic committed KV rows per slot ([`MOCK_KV_ROW`] floats per
+    /// token, content a pure function of (token, position)) so paging
+    /// swap-out/swap-in round trips can be asserted bit-identical.
+    pub slot_k: Vec<Vec<f32>>,
+    pub slot_v: Vec<Vec<f32>>,
     pub rows_executed: u64,
     /// Item lists of every `run_batch` call, in order.
     pub calls: Vec<Vec<SlotChunk>>,
     pub allocs: u64,
     pub frees: u64,
 }
+
+/// Floats per synthetic mock KV row (per K/V plane).
+pub const MOCK_KV_ROW: usize = 4;
 
 impl MockBatchEngine {
     pub fn new(slots: usize, chunk: usize, vocab: usize, max_len: usize) -> MockBatchEngine {
@@ -44,6 +53,8 @@ impl MockBatchEngine {
             max_len,
             slot_len: vec![0; slots],
             slot_owner: vec![None; slots],
+            slot_k: vec![Vec::new(); slots],
+            slot_v: vec![Vec::new(); slots],
             rows_executed: 0,
             calls: Vec::new(),
             allocs: 0,
@@ -83,10 +94,12 @@ impl BatchEngine for MockBatchEngine {
         self.rows_executed
     }
 
-    fn alloc_slot(&mut self, owner: u64) -> Option<usize> {
+    fn alloc_slot(&mut self, owner: SlotOwner) -> Option<usize> {
         let s = self.slot_owner.iter().position(|o| o.is_none())?;
         self.slot_owner[s] = Some(owner);
         self.slot_len[s] = 0;
+        self.slot_k[s].clear();
+        self.slot_v[s].clear();
         self.allocs += 1;
         Some(s)
     }
@@ -95,6 +108,8 @@ impl BatchEngine for MockBatchEngine {
         assert!(self.slot_owner[slot].is_some(), "double free of slot {slot}");
         self.slot_owner[slot] = None;
         self.slot_len[slot] = 0;
+        self.slot_k[slot].clear();
+        self.slot_v[slot].clear();
         self.frees += 1;
     }
 
@@ -105,6 +120,37 @@ impl BatchEngine for MockBatchEngine {
     fn rollback(&mut self, slot: usize, len: usize) {
         assert!(len <= self.slot_len[slot], "rollback past committed length");
         self.slot_len[slot] = len;
+        self.slot_k[slot].truncate(len * MOCK_KV_ROW);
+        self.slot_v[slot].truncate(len * MOCK_KV_ROW);
+    }
+
+    fn kv_row_width(&self) -> usize {
+        MOCK_KV_ROW
+    }
+
+    fn export_slot(&self, slot: usize) -> SlotKv {
+        SlotKv {
+            len: self.slot_len[slot],
+            row: MOCK_KV_ROW,
+            k: self.slot_k[slot].clone(),
+            v: self.slot_v[slot].clone(),
+        }
+    }
+
+    fn import_slot(&mut self, slot: usize, kv: &SlotKv) -> Result<()> {
+        if slot >= self.slots || self.slot_owner[slot].is_none() {
+            bail!("import into unclaimed slot {slot}");
+        }
+        if kv.len > self.max_len {
+            bail!("imported {} rows exceed slot capacity {}", kv.len, self.max_len);
+        }
+        if kv.row != MOCK_KV_ROW || kv.k.len() != kv.len * MOCK_KV_ROW {
+            bail!("malformed mock kv import");
+        }
+        self.slot_len[slot] = kv.len;
+        self.slot_k[slot] = kv.k.clone();
+        self.slot_v[slot] = kv.v.clone();
+        Ok(())
     }
 
     fn run_batch(&mut self, items: &[SlotChunk]) -> Result<(Vec<SlotLogits>, f64)> {
@@ -140,6 +186,13 @@ impl BatchEngine for MockBatchEngine {
             let mut rows = vec![0f32; n * v];
             for i in 0..n {
                 rows[i * v + self.peak(s, base + i) as usize] = 1.0;
+                // synthetic KV: a pure function of (token, position), so
+                // paged swap round trips are checkable bit-for-bit
+                let (pos, tok) = (base + i, it.tokens[i] as usize);
+                for d in 0..MOCK_KV_ROW {
+                    self.slot_k[s].push((tok * 31 + pos * 7 + d) as f32);
+                    self.slot_v[s].push(-((tok * 17 + pos * 3 + d) as f32));
+                }
             }
             self.slot_len[s] += n;
             self.rows_executed += n as u64;

@@ -1,0 +1,271 @@
+//! Paged-KV subsystem invariants — artifact-free. Exercises the
+//! [`BlockPool`] free-list, the [`SessionManager`] residency/eviction
+//! state machine over the deterministic [`MockBatchEngine`], and
+//! scheduler-level paging (more concurrent logical sessions than
+//! physical slots), asserting block conservation (no leak, no double
+//! free) and bit-identical KV round trips across swap-out/swap-in.
+
+use std::collections::{HashMap, HashSet};
+
+use synera::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
+use synera::cloud::sessions::SessionManager;
+use synera::config::BatchPolicy;
+use synera::model::cloud_engine::{BatchEngine, SlotChunk, SlotOwner};
+use synera::net::wire::Dist;
+use synera::runtime::SlotKv;
+use synera::testutil::{check, usize_in, MockBatchEngine, MOCK_KV_ROW};
+
+fn dense_dists(n: usize, vocab: usize) -> Vec<Dist> {
+    vec![Dist::Dense(vec![1.0 / vocab as f32; vocab]); n]
+}
+
+fn paged_policy(max_sessions: usize) -> BatchPolicy {
+    BatchPolicy { max_sessions, ..BatchPolicy::default() }
+}
+
+/// Swap-out → swap-in through the engine trait keeps the committed KV
+/// rows bit-identical, even when the session lands in a different slot.
+#[test]
+fn mock_engine_kv_round_trip_is_bit_identical() {
+    let mut eng = MockBatchEngine::new(4, 8, 64, 64);
+    let a = eng.alloc_slot(SlotOwner::Request(1)).unwrap();
+    eng.run_batch(&[SlotChunk { slot: a, tokens: vec![9, 10, 11] }]).unwrap();
+    eng.run_batch(&[SlotChunk { slot: a, tokens: vec![12] }]).unwrap();
+    let snap = eng.export_slot(a);
+    assert_eq!(snap.len, 4);
+    assert_eq!(snap.row, MOCK_KV_ROW);
+    assert_eq!(snap.k.len(), 4 * MOCK_KV_ROW);
+    eng.free_slot(a);
+
+    let b = eng.alloc_slot(SlotOwner::Request(2)).unwrap();
+    eng.import_slot(b, &snap).unwrap();
+    assert_eq!(eng.slot_len[b], 4);
+    assert_eq!(eng.export_slot(b), snap, "round trip not bit-identical");
+}
+
+/// Rollback before export keeps only the committed prefix in the
+/// swapped image (rejected verify tails must not be resurrected).
+#[test]
+fn export_respects_rolled_back_length() {
+    let mut eng = MockBatchEngine::new(2, 8, 64, 64);
+    let s = eng.alloc_slot(SlotOwner::Request(1)).unwrap();
+    eng.run_batch(&[SlotChunk { slot: s, tokens: vec![9, 10, 11, 12] }]).unwrap();
+    let full = eng.export_slot(s);
+    eng.rollback(s, 2);
+    let rolled = eng.export_slot(s);
+    assert_eq!(rolled.len, 2);
+    assert_eq!(rolled.k[..], full.k[..2 * MOCK_KV_ROW]);
+}
+
+/// Property: any interleaving of open / run+swap / close conserves
+/// blocks (no leak, no double free — the pool and mock panic on double
+/// frees) and a swapped-out-then-in session's KV is bit-identical to
+/// what it held when it lost its slot.
+#[test]
+fn prop_session_paging_conserves_blocks_and_preserves_kv() {
+    check("session paging conserves blocks; KV round trips", |rng| {
+        let slots = usize_in(rng, 2, 4);
+        let max_sessions = slots + usize_in(rng, 1, 8);
+        let mut eng = MockBatchEngine::new(slots, 4, 64, 64);
+        let mut mgr = SessionManager::for_engine(&eng, &paged_policy(max_sessions));
+        let pool_cap = mgr.block_capacity();
+        let pinned: HashSet<u64> = HashSet::new();
+        let mut shadow: HashMap<u64, SlotKv> = HashMap::new();
+        let mut open: Vec<u64> = Vec::new();
+        let mut next_id = 1u64;
+        for _ in 0..usize_in(rng, 10, 60) {
+            match rng.below(4) {
+                0 => {
+                    if mgr.can_open() {
+                        mgr.open(next_id).map_err(|e| e.to_string())?;
+                        shadow.insert(next_id, SlotKv::empty(MOCK_KV_ROW));
+                        open.push(next_id);
+                        next_id += 1;
+                    }
+                }
+                1 | 2 => {
+                    if open.is_empty() {
+                        continue;
+                    }
+                    let id = open[usize_in(rng, 0, open.len() - 1)];
+                    let slot = mgr
+                        .ensure_resident(id, &mut eng, &pinned)
+                        .map_err(|e| e.to_string())?
+                        .expect("an unpinned victim always exists");
+                    if eng.export_slot(slot) != shadow[&id] {
+                        return Err(format!("session {id} KV changed across swaps"));
+                    }
+                    if eng.slot_len[slot] + 2 <= 64 {
+                        let t = 9 + (id % 20) as u32;
+                        eng.run_batch(&[SlotChunk { slot, tokens: vec![t, t + 1] }])
+                            .map_err(|e| e.to_string())?;
+                        mgr.note_rows(id, 2);
+                        shadow.insert(id, eng.export_slot(slot));
+                    }
+                }
+                _ => {
+                    if open.is_empty() {
+                        continue;
+                    }
+                    let i = usize_in(rng, 0, open.len() - 1);
+                    let id = open.swap_remove(i);
+                    mgr.close(id, &mut eng);
+                    shadow.remove(&id);
+                }
+            }
+        }
+        for id in open {
+            mgr.close(id, &mut eng);
+        }
+        if eng.free_slots() != slots {
+            return Err(format!("slot leak: {} free of {slots}", eng.free_slots()));
+        }
+        if mgr.free_blocks() != pool_cap {
+            return Err(format!("block leak: {} free of {pool_cap}", mgr.free_blocks()));
+        }
+        if eng.allocs != eng.frees {
+            return Err(format!("alloc/free imbalance: {} vs {}", eng.allocs, eng.frees));
+        }
+        Ok(())
+    });
+}
+
+/// Acceptance workload: 4× more concurrent verify sessions than
+/// physical slots, several rounds each, all submitted up front. Every
+/// round must complete (the compiled width no longer caps admission),
+/// swapping must actually occur, and slots/blocks must be conserved.
+#[test]
+fn four_x_oversubscribed_verify_sessions_all_complete() {
+    let slots = 4usize;
+    let n_sessions = 16u64; // 4× the physical width
+    let rounds = 3usize;
+    let mut sched = Scheduler::with_policy(
+        MockBatchEngine::new(slots, 8, 64, 4096),
+        0x9A6E,
+        paged_policy(n_sessions as usize),
+    );
+    let submit_round = |sched: &mut Scheduler<MockBatchEngine>, id: u64| {
+        sched
+            .submit(CloudRequest::Verify {
+                request_id: id,
+                device_id: id as u32,
+                uncached: vec![12 + (id % 5) as u32; 4],
+                draft: vec![9, 9],
+                dists: dense_dists(2, 64),
+                greedy: true,
+            })
+            .unwrap();
+    };
+    let mut rounds_done: HashMap<u64, usize> = HashMap::new();
+    for id in 0..n_sessions {
+        rounds_done.insert(id, 0);
+        submit_round(&mut sched, id);
+    }
+    let total = n_sessions as usize * rounds;
+    let mut completed = 0usize;
+    for _ in 0..5_000 {
+        let (events, _) = sched.tick().unwrap();
+        for e in events {
+            if let CloudEvent::VerifyDone { request_id, .. } = e {
+                completed += 1;
+                let done = rounds_done.get_mut(&request_id).unwrap();
+                *done += 1;
+                if *done < rounds {
+                    submit_round(&mut sched, request_id);
+                } else {
+                    sched.submit(CloudRequest::Release { request_id }).unwrap();
+                }
+            }
+        }
+        if completed == total {
+            break;
+        }
+    }
+    assert_eq!(completed, total, "oversubscribed verify rounds must all finish");
+    assert!(rounds_done.values().all(|&d| d == rounds), "every session ran every round");
+    assert!(sched.is_idle());
+    assert!(sched.stats.swap_outs > 0, "16 sessions over 4 slots must page");
+    assert_eq!(sched.engine.free_slots(), slots, "all slots returned");
+    assert_eq!(sched.engine.allocs, sched.engine.frees, "slot conservation");
+    assert_eq!(
+        sched.sessions().free_blocks(),
+        sched.sessions().block_capacity(),
+        "block conservation"
+    );
+}
+
+/// Cloud-centric generations also page: 4× oversubscription over two
+/// slots drains to completion with swapping, and nothing leaks.
+#[test]
+fn paged_generates_beyond_slots_all_complete() {
+    let mut sched = Scheduler::with_policy(
+        MockBatchEngine::new(2, 8, 64, 4096),
+        0x6E4E,
+        paged_policy(8),
+    );
+    for i in 0..8u64 {
+        sched
+            .submit(CloudRequest::Generate {
+                request_id: i,
+                prompt: vec![9; 5 + (i as usize % 7)],
+                max_new: 4,
+            })
+            .unwrap();
+    }
+    let mut done = 0usize;
+    for _ in 0..3_000 {
+        let (events, _) = sched.tick().unwrap();
+        for e in events {
+            if let CloudEvent::Generated { tokens, .. } = e {
+                assert_eq!(tokens.len(), 4, "mock never emits EOS: budget-bound");
+                done += 1;
+            }
+        }
+        if done == 8 {
+            break;
+        }
+    }
+    assert_eq!(done, 8, "all oversubscribed generations finish");
+    assert!(sched.is_idle());
+    assert!(sched.stats.swap_outs > 0, "8 sessions over 2 slots must page");
+    assert_eq!(sched.engine.free_slots(), 2);
+    assert_eq!(sched.engine.allocs, sched.engine.frees);
+    assert_eq!(sched.sessions().free_blocks(), sched.sessions().block_capacity());
+}
+
+/// A released-while-parked session returns its blocks to the pool.
+#[test]
+fn releasing_a_parked_session_frees_its_blocks() {
+    // 1 slot, 3 sessions: at least two sessions sit parked at any time
+    let mut sched =
+        Scheduler::with_policy(MockBatchEngine::new(1, 8, 64, 4096), 0x10CB, paged_policy(3));
+    for id in 0..3u64 {
+        sched
+            .submit(CloudRequest::Verify {
+                request_id: id,
+                device_id: id as u32,
+                uncached: vec![12; 4],
+                draft: vec![9, 9],
+                dists: dense_dists(2, 64),
+                greedy: true,
+            })
+            .unwrap();
+    }
+    let mut seen = 0usize;
+    for _ in 0..200 {
+        let (events, _) = sched.tick().unwrap();
+        seen += events.len();
+        if seen == 3 {
+            break;
+        }
+    }
+    assert_eq!(seen, 3, "all first rounds complete");
+    // sessions keep their KV (resident or parked) until released
+    assert!(sched.sessions().free_blocks() < sched.sessions().block_capacity());
+    for id in 0..3u64 {
+        sched.submit(CloudRequest::Release { request_id: id }).unwrap();
+    }
+    assert_eq!(sched.sessions().free_blocks(), sched.sessions().block_capacity());
+    assert_eq!(sched.engine.free_slots(), 1);
+    assert_eq!(sched.engine.allocs, sched.engine.frees);
+}

@@ -5,7 +5,7 @@
 //! check replayed through the rust runtime), batch-slot isolation on the
 //! cloud engine, and the fused importance invariant.
 
-use synera::model::{CloudEngine, DeviceEngine, SlotChunk};
+use synera::model::{BatchEngine, CloudEngine, DeviceEngine, SlotChunk, SlotOwner};
 use synera::runtime::Runtime;
 use synera::workload::{generate, Task};
 
@@ -177,7 +177,11 @@ fn warmup_runs_in_a_free_slot_and_preserves_committed_kv() {
     // slot 0, silently clobbering the session's KV
     eng.warmup().unwrap();
     assert_eq!(eng.slot_len[s], len, "warmup altered a busy slot's length");
-    assert_eq!(eng.slot_owner[s], Some(7), "warmup altered slot ownership");
+    assert_eq!(
+        eng.slot_owner[s],
+        Some(SlotOwner::Request(7)),
+        "warmup altered slot ownership"
+    );
 
     // the continuation must match a fresh engine that never warmed up
     let cont = vec![200u32, 201];
@@ -203,6 +207,34 @@ fn warmup_bails_when_every_slot_is_busy() {
         eng.alloc_slot(i as u64).unwrap();
     }
     assert!(eng.warmup().is_err(), "warmup must refuse to touch occupied slots");
+}
+
+#[test]
+fn export_import_slot_round_trips_committed_kv() {
+    let rt = Runtime::load_default().unwrap();
+    let mut eng = CloudEngine::new(rt.model("l13b").unwrap()).unwrap();
+    let p = prompt();
+    let a = eng.alloc_slot(1).unwrap();
+    eng.run_batch(&[SlotChunk { slot: a, tokens: p.clone() }]).unwrap();
+    let snap = eng.export_slot(a);
+    assert_eq!(snap.len, eng.slot_len[a]);
+    assert_eq!(snap.row, eng.kv_row_width());
+
+    // restore into a different slot: continuations must match exactly
+    // (paged swap-in is a verbatim copy) and re-export bit-identically
+    let b = eng.alloc_slot(2).unwrap();
+    eng.import_slot(b, &snap).unwrap();
+    assert_eq!(eng.export_slot(b), snap, "swap round trip not bit-identical");
+    let cont = vec![200u32, 201];
+    let (ra, _) = eng.run_batch(&[SlotChunk { slot: a, tokens: cont.clone() }]).unwrap();
+    let (rb, _) = eng.run_batch(&[SlotChunk { slot: b, tokens: cont }]).unwrap();
+    let max_d = ra[0]
+        .rows
+        .iter()
+        .zip(&rb[0].rows)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(max_d < 1e-4, "imported KV diverged from source: {max_d}");
 }
 
 #[test]
