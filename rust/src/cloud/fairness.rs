@@ -1,0 +1,353 @@
+//! Weighted fair queueing across device tenants (ROADMAP "Cloud
+//! batching" open item; cf. the edge-inference survey's multi-tenant
+//! queueing analyses in PAPERS.md).
+//!
+//! A [`WfqQueue`] is a self-clocked fair-queueing (SCFQ) frontend over
+//! per-tenant FIFO queues: every submission carries a *cost* in token
+//! rows, and is stamped with a **virtual finish time**
+//!
+//! ```text
+//! F = max(V, F_tenant) + cost / weight
+//! ```
+//!
+//! where `V` is the queue's virtual clock (the finish time of the last
+//! dequeued item) and `F_tenant` the tenant's last stamped finish.
+//! Dequeueing always takes the globally smallest `F`, so over any busy
+//! interval each backlogged tenant receives service proportional to its
+//! weight. Because a returning tenant restarts from `max(V, F_tenant)`,
+//! idle periods earn **no credit**: a tenant that slept for an hour
+//! cannot burst ahead of tenants that kept the queue busy, and its own
+//! future service is not penalised by the sleep either.
+//!
+//! Traffic that must bypass the queue (follow-up verification rounds of
+//! an already-admitted session — holding those back could deadlock a
+//! session against its own slot) is still accounted via
+//! [`WfqQueue::charge`], which advances the tenant's finish stamp
+//! without enqueueing, so bypass volume counts against the tenant's
+//! share of *future* admissions.
+//!
+//! The scheduler wires this in **ahead** of its per-iteration machinery
+//! (see `cloud::scheduler`): WFQ decides which waiting request is next
+//! granted a logical session, then the existing aging/packing fairness
+//! takes over inside the batch.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+/// Per-tenant service counters (admission-frontend visibility).
+#[derive(Debug, Clone, Default)]
+pub struct TenantStats {
+    /// Requests submitted through the tenant frontend.
+    pub submitted: u64,
+    /// Engine token rows executed on behalf of this tenant.
+    pub rows_executed: u64,
+    /// Verification rounds completed.
+    pub verifies_done: u64,
+    /// Draft tokens accepted across those rounds.
+    pub draft_tokens_accepted: u64,
+}
+
+/// One queued item with its virtual-time stamps.
+#[derive(Debug, Clone)]
+struct Queued<T> {
+    /// Virtual finish time.
+    finish: f64,
+    /// Credit charged when stamped (`cost / weight`) — refunded if the
+    /// item is purged before it runs.
+    credit: f64,
+    item: T,
+}
+
+/// A self-clocked weighted-fair queue over `T`-typed items.
+#[derive(Debug, Clone)]
+pub struct WfqQueue<T> {
+    weights: Vec<f64>,
+    /// Virtual clock: finish time of the most recently dequeued item.
+    vtime: f64,
+    /// Last stamped finish time per tenant.
+    last_finish: Vec<f64>,
+    /// Per-tenant FIFO in stamp order.
+    queues: Vec<VecDeque<Queued<T>>>,
+    len: usize,
+}
+
+impl<T> WfqQueue<T> {
+    /// Build a queue for `weights.len()` tenants. Every weight must be
+    /// finite and positive.
+    pub fn new(weights: &[f64]) -> Result<WfqQueue<T>> {
+        if weights.is_empty() {
+            bail!("weighted fair queueing needs at least one tenant");
+        }
+        if let Some(w) = weights.iter().find(|w| !w.is_finite() || **w <= 0.0) {
+            bail!("tenant weights must be finite and positive (got {w})");
+        }
+        Ok(WfqQueue {
+            weights: weights.to_vec(),
+            vtime: 0.0,
+            last_finish: vec![0.0; weights.len()],
+            queues: weights.iter().map(|_| VecDeque::new()).collect(),
+            len: 0,
+        })
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn weight(&self, tenant: usize) -> f64 {
+        self.weights[tenant]
+    }
+
+    /// Queued items across all tenants.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Stamp the tenant's next virtual finish time for `cost` rows,
+    /// returning `(finish, credit charged)`.
+    fn stamp(&mut self, tenant: usize, cost: f64) -> (f64, f64) {
+        let start = self.vtime.max(self.last_finish[tenant]);
+        let credit = cost.max(1.0) / self.weights[tenant];
+        let f = start + credit;
+        self.last_finish[tenant] = f;
+        (f, credit)
+    }
+
+    /// Enqueue `item` for `tenant` at a cost of `cost` token rows.
+    pub fn push(&mut self, tenant: usize, cost: f64, item: T) -> Result<()> {
+        if tenant >= self.weights.len() {
+            bail!("tenant {tenant} out of range ({} tenants)", self.weights.len());
+        }
+        let (finish, credit) = self.stamp(tenant, cost);
+        self.queues[tenant].push_back(Queued { finish, credit, item });
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Account `cost` rows of bypass traffic against `tenant`'s share
+    /// without enqueueing anything (follow-up rounds of open sessions).
+    pub fn charge(&mut self, tenant: usize, cost: f64) {
+        if tenant < self.weights.len() {
+            self.stamp(tenant, cost);
+        }
+    }
+
+    /// The tenant whose head item has the smallest virtual finish time
+    /// (smaller tenant index breaks exact ties — deterministic).
+    fn head_tenant(&self) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for (t, q) in self.queues.iter().enumerate() {
+            if let Some(e) = q.front() {
+                let better = match best {
+                    None => true,
+                    Some((bf, _)) => e.finish < bf,
+                };
+                if better {
+                    best = Some((e.finish, t));
+                }
+            }
+        }
+        best.map(|(_, t)| t)
+    }
+
+    /// The next item in weighted-fair order, without dequeueing it.
+    pub fn peek(&self) -> Option<(usize, &T)> {
+        let t = self.head_tenant()?;
+        self.queues[t].front().map(|e| (t, &e.item))
+    }
+
+    /// Drop queued items rejected by `f` (e.g. rounds of a released
+    /// session) and **refund their stamped credit**: cancelled work
+    /// that never ran must not count against the tenant's future
+    /// share. Surviving items keep their stamps, so the refunded
+    /// finish floor is the tenant's remaining tail stamp.
+    pub fn retain<F: FnMut(&T) -> bool>(&mut self, mut f: F) {
+        for (t, q) in self.queues.iter_mut().enumerate() {
+            let mut refund = 0.0;
+            q.retain(|e| {
+                let keep = f(&e.item);
+                if !keep {
+                    refund += e.credit;
+                }
+                keep
+            });
+            if refund > 0.0 {
+                let tail = q.back().map_or(f64::MIN, |e| e.finish);
+                self.last_finish[t] = (self.last_finish[t] - refund).max(tail);
+            }
+        }
+        self.len = self.queues.iter().map(|q| q.len()).sum();
+    }
+
+    /// Dequeue the earliest-stamped item satisfying `pred`, regardless
+    /// of its position behind other tenants' heads. For bypass traffic
+    /// that must not wait on admission capacity (e.g. a follow-up
+    /// round of an already-open session stuck behind a capacity-blocked
+    /// head — holding it would deadlock the session against its own
+    /// admission). The virtual clock is left untouched: the item keeps
+    /// its charge, but an out-of-order extraction must not leapfrog the
+    /// clock past still-waiting smaller stamps.
+    pub fn pop_matching<F: FnMut(&T) -> bool>(&mut self, mut pred: F) -> Option<(usize, T)> {
+        let mut best: Option<(f64, usize, usize)> = None;
+        for (t, q) in self.queues.iter().enumerate() {
+            // within a tenant stamps are FIFO, so the first match is
+            // that tenant's earliest match
+            if let Some((i, e)) = q.iter().enumerate().find(|(_, e)| pred(&e.item)) {
+                let better = match best {
+                    None => true,
+                    Some((bf, _, _)) => e.finish < bf,
+                };
+                if better {
+                    best = Some((e.finish, t, i));
+                }
+            }
+        }
+        let (_, t, i) = best?;
+        let e = self.queues[t].remove(i).expect("indexed above");
+        self.len -= 1;
+        Some((t, e.item))
+    }
+
+    /// Dequeue the next item in weighted-fair order, advancing the
+    /// virtual clock to its finish time.
+    pub fn pop(&mut self) -> Option<(usize, T)> {
+        let t = self.head_tenant()?;
+        let e = self.queues[t].pop_front().expect("head tenant has an item");
+        self.vtime = self.vtime.max(e.finish);
+        self.len -= 1;
+        Some((t, e.item))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_bad_weights() {
+        assert!(WfqQueue::<u32>::new(&[]).is_err());
+        assert!(WfqQueue::<u32>::new(&[1.0, 0.0]).is_err());
+        assert!(WfqQueue::<u32>::new(&[1.0, -2.0]).is_err());
+        assert!(WfqQueue::<u32>::new(&[f64::NAN]).is_err());
+        assert!(WfqQueue::<u32>::new(&[1.0, 2.0]).is_ok());
+    }
+
+    #[test]
+    fn single_tenant_is_fifo() {
+        let mut q = WfqQueue::new(&[1.0]).unwrap();
+        for i in 0..10u32 {
+            q.push(0, 4.0, i).unwrap();
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, x)| x)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    /// Backlogged tenants drain in proportion to their weights: over any
+    /// prefix of the dequeue order, a weight-2 tenant appears ~2× as
+    /// often as a weight-1 tenant with the same per-item cost.
+    #[test]
+    fn weighted_shares_over_a_busy_period() {
+        let mut q = WfqQueue::new(&[1.0, 2.0]).unwrap();
+        for i in 0..60u32 {
+            q.push(0, 4.0, i).unwrap();
+            q.push(1, 4.0, 1000 + i).unwrap();
+        }
+        let mut counts = [0usize; 2];
+        for _ in 0..30 {
+            let (t, _) = q.pop().unwrap();
+            counts[t] += 1;
+        }
+        // 30 pops with weights 1:2 → ideal split 10:20
+        assert!(counts[1] >= 18 && counts[1] <= 22, "{counts:?}");
+        assert_eq!(counts[0] + counts[1], 30);
+    }
+
+    /// An idle tenant accrues no credit: after tenant 0 kept the queue
+    /// busy alone, a late-arriving tenant 1 shares from *now* instead of
+    /// monopolising the queue to "catch up".
+    #[test]
+    fn idle_tenant_earns_no_credit() {
+        let mut q = WfqQueue::new(&[1.0, 1.0]).unwrap();
+        for i in 0..50u32 {
+            q.push(0, 4.0, i).unwrap();
+        }
+        for _ in 0..50 {
+            q.pop().unwrap();
+        }
+        // tenant 1 wakes up; both tenants now push equal work
+        for i in 0..20u32 {
+            q.push(0, 4.0, i).unwrap();
+            q.push(1, 4.0, 100 + i).unwrap();
+        }
+        let mut counts = [0usize; 2];
+        for _ in 0..20 {
+            let (t, _) = q.pop().unwrap();
+            counts[t] += 1;
+        }
+        // an equal split (±2 for stamp interleaving), NOT 0:20
+        assert!(counts[0] >= 8 && counts[0] <= 12, "{counts:?}");
+    }
+
+    /// `charge` makes bypass traffic count against future admissions.
+    #[test]
+    fn charged_bypass_traffic_defers_the_tenant() {
+        let mut q = WfqQueue::new(&[1.0, 1.0]).unwrap();
+        q.charge(0, 400.0); // tenant 0 consumed a lot out of band
+        q.push(0, 4.0, 0u32).unwrap();
+        q.push(1, 4.0, 1u32).unwrap();
+        let (first, _) = q.pop().unwrap();
+        assert_eq!(first, 1, "the uncharged tenant goes first");
+    }
+
+    /// Purged (cancelled-before-running) items refund their credit:
+    /// the tenant is not deferred behind phantom debt.
+    #[test]
+    fn retain_refunds_cancelled_credit() {
+        let mut q = WfqQueue::new(&[1.0, 1.0]).unwrap();
+        for i in 0..50u32 {
+            q.push(0, 8.0, i).unwrap();
+        }
+        q.retain(|&x| x >= 50); // cancel the whole burst
+        assert!(q.is_empty());
+        q.push(0, 4.0, 100u32).unwrap();
+        q.push(1, 4.0, 200).unwrap();
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, x)| x)).collect();
+        assert_eq!(order, vec![100, 200], "refunded tenant competes from scratch");
+    }
+
+    #[test]
+    fn cost_scales_service_share() {
+        // equal weights, tenant 0 sends 4× costlier items → tenant 1
+        // should dequeue ~4 items per tenant-0 item
+        let mut q = WfqQueue::new(&[1.0, 1.0]).unwrap();
+        for i in 0..10u32 {
+            q.push(0, 16.0, i).unwrap();
+        }
+        for i in 0..40u32 {
+            q.push(1, 4.0, 100 + i).unwrap();
+        }
+        let mut counts = [0usize; 2];
+        for _ in 0..25 {
+            let (t, _) = q.pop().unwrap();
+            counts[t] += 1;
+        }
+        assert!(counts[0] >= 3 && counts[0] <= 7, "{counts:?}");
+    }
+
+    #[test]
+    fn deterministic_order() {
+        let run = || {
+            let mut q = WfqQueue::new(&[1.0, 3.0, 2.0]).unwrap();
+            for i in 0..30u32 {
+                q.push((i % 3) as usize, 2.0 + (i % 5) as f64, i).unwrap();
+            }
+            std::iter::from_fn(|| q.pop().map(|(_, x)| x)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -5,10 +5,12 @@
 //! sessions ([`sessions`]) so concurrency is bounded by host memory
 //! rather than the compiled batch width.
 
+pub mod fairness;
 pub mod scheduler;
 pub mod sessions;
 pub mod verifier;
 
+pub use fairness::{TenantStats, WfqQueue};
 pub use scheduler::{CloudEvent, CloudRequest, Scheduler, SchedulerStats};
 pub use sessions::{SessionManager, SwapStats};
 pub use verifier::{verify_chunk, VerifyOutcome};

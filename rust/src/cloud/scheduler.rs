@@ -22,6 +22,13 @@
 //! chunk executable; pure-decode batches take the engine's `step_b4`
 //! fast path (see [`BatchEngine`]).
 //!
+//! **Admission can be tenant-fair**: with a non-empty
+//! [`BatchPolicy::tenant_weights`], tenant-tagged submissions
+//! ([`Scheduler::submit_tenant`]) first pass a weighted-fair frontend
+//! ([`crate::cloud::fairness::WfqQueue`]) that grants logical sessions
+//! in virtual-finish-time order over per-tenant token credits — ahead
+//! of, and composing with, the per-iteration aging fairness below.
+//!
 //! **Admission is decoupled from the compiled batch width**: up to
 //! [`BatchPolicy::max_sessions`] *logical* sessions are admitted, far
 //! beyond the engine's B slots. A [`SessionManager`] pages the KV of
@@ -35,11 +42,12 @@
 //! is charged to [`SchedulerStats`] (and its copy time to the Fig. 18
 //! scheduling-overhead column).
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::cloud::fairness::{TenantStats, WfqQueue};
 use crate::cloud::sessions::SessionManager;
 use crate::cloud::verifier::{verify_chunk, VerifyOutcome};
 use crate::config::BatchPolicy;
@@ -172,8 +180,27 @@ pub struct Scheduler<E: BatchEngine = CloudEngine> {
     /// Round-robin toggle between the generate and verify admission
     /// queues (admission capacity is shared; neither queue can starve).
     admit_verify_first: bool,
+    /// Weighted-fair admission frontend across device tenants
+    /// ([`BatchPolicy::tenant_weights`]; `None` = single-queue FIFO).
+    /// Session-opening requests wait here in virtual-finish-time order;
+    /// follow-up rounds of open sessions bypass it but are charged.
+    wfq: Option<WfqQueue<CloudRequest>>,
+    /// Tenant of each tenant-tagged request id (per-tenant accounting).
+    tenant_of: HashMap<u64, usize>,
+    /// Per-tenant service counters (empty when WFQ is off).
+    pub tenant_stats: Vec<TenantStats>,
     rng: Rng,
     pub stats: SchedulerStats,
+}
+
+/// Admission cost of a request in engine token rows (the WFQ credit
+/// currency: what the engine will have to execute for it).
+fn request_cost(req: &CloudRequest) -> f64 {
+    match req {
+        CloudRequest::Generate { prompt, max_new, .. } => (prompt.len() + *max_new) as f64,
+        CloudRequest::Verify { uncached, draft, .. } => (uncached.len() + draft.len()) as f64,
+        CloudRequest::Release { .. } => 0.0,
+    }
 }
 
 impl<E: BatchEngine> Scheduler<E> {
@@ -182,9 +209,21 @@ impl<E: BatchEngine> Scheduler<E> {
     }
 
     /// Build a scheduler with an explicit batching policy (the
-    /// `SyneraParams::batch` config block).
+    /// `SyneraParams::batch` config block). A non-empty
+    /// [`BatchPolicy::tenant_weights`] enables the weighted-fair
+    /// admission frontend; weights must be finite and positive
+    /// (validate them at the config boundary — bad weights panic here).
     pub fn with_policy(engine: E, seed: u64, policy: BatchPolicy) -> Scheduler<E> {
         let sessions = SessionManager::for_engine(&engine, &policy);
+        let wfq = if policy.tenant_weights.is_empty() {
+            None
+        } else {
+            Some(
+                WfqQueue::new(&policy.tenant_weights)
+                    .expect("tenant weights must be finite and positive"),
+            )
+        };
+        let tenant_stats = vec![TenantStats::default(); policy.tenant_weights.len()];
         Scheduler {
             engine,
             policy,
@@ -196,6 +235,9 @@ impl<E: BatchEngine> Scheduler<E> {
             sessions,
             pending_release: HashSet::new(),
             admit_verify_first: true,
+            wfq,
+            tenant_of: HashMap::new(),
+            tenant_stats,
             rng: Rng::new(seed ^ 0xC10D),
             stats: SchedulerStats::default(),
         }
@@ -207,6 +249,21 @@ impl<E: BatchEngine> Scheduler<E> {
     }
 
     pub fn submit(&mut self, req: CloudRequest) -> Result<()> {
+        self.submit_from(None, req)
+    }
+
+    /// Submit on behalf of a device tenant: session-opening requests
+    /// queue in the weighted-fair frontend; follow-up verify rounds of
+    /// an already-open session bypass it (holding them back could
+    /// deadlock a session against its own admission) but their row cost
+    /// is still charged to the tenant. With no frontend configured
+    /// (empty [`BatchPolicy::tenant_weights`]) this degrades to
+    /// [`Scheduler::submit`].
+    pub fn submit_tenant(&mut self, tenant: usize, req: CloudRequest) -> Result<()> {
+        self.submit_from(Some(tenant), req)
+    }
+
+    fn submit_from(&mut self, tenant: Option<usize>, req: CloudRequest) -> Result<()> {
         match &req {
             CloudRequest::Generate { prompt, max_new, .. } => {
                 if prompt.is_empty() {
@@ -224,7 +281,6 @@ impl<E: BatchEngine> Scheduler<E> {
                         self.engine.max_len()
                     );
                 }
-                self.waiting_gen.push_back(req);
             }
             CloudRequest::Verify { uncached, draft, .. } => {
                 if uncached.is_empty() {
@@ -237,14 +293,17 @@ impl<E: BatchEngine> Scheduler<E> {
                         self.engine.max_len()
                     );
                 }
-                self.waiting_verify.push_back(req);
             }
             CloudRequest::Release { request_id } => {
                 let rid = *request_id;
                 // queued rounds of a released session will never be read
-                self.waiting_verify.retain(
-                    |r| !matches!(r, CloudRequest::Verify { request_id, .. } if *request_id == rid),
-                );
+                let keep = |r: &CloudRequest| {
+                    !matches!(r, CloudRequest::Verify { request_id, .. } if *request_id == rid)
+                };
+                self.waiting_verify.retain(keep);
+                if let Some(wfq) = &mut self.wfq {
+                    wfq.retain(keep);
+                }
                 if self.verifying.iter().any(|j| j.request_id == rid) {
                     // the in-flight round still writes this session's KV;
                     // defer the free until it completes
@@ -256,24 +315,67 @@ impl<E: BatchEngine> Scheduler<E> {
                     // a stray release of a generate id stays a no-op
                     // (pre-paging behavior)
                 } else {
-                    self.sessions.close(rid, &mut self.engine);
+                    self.close_session(rid);
                 }
+                return Ok(());
             }
+        }
+        // ---- routing: weighted-fair frontend or direct FIFO ---------------
+        let request_id = match &req {
+            CloudRequest::Generate { request_id, .. }
+            | CloudRequest::Verify { request_id, .. } => *request_id,
+            CloudRequest::Release { .. } => unreachable!("handled above"),
+        };
+        if let Some(t) = tenant {
+            if let Some(wfq) = self.wfq.as_ref() {
+                if t >= wfq.n_tenants() {
+                    bail!("tenant {t} out of range ({} tenants)", wfq.n_tenants());
+                }
+                let cost = request_cost(&req);
+                let follow_up = matches!(&req, CloudRequest::Verify { .. })
+                    && self.sessions.contains(request_id);
+                self.tenant_of.insert(request_id, t);
+                self.tenant_stats[t].submitted += 1;
+                let wfq = self.wfq.as_mut().expect("checked above");
+                if follow_up {
+                    wfq.charge(t, cost);
+                    self.waiting_verify.push_back(req);
+                } else {
+                    wfq.push(t, cost, req)?;
+                }
+                return Ok(());
+            }
+            // no frontend configured: tenant-tagged traffic degrades to
+            // the single-queue FIFO path below
+        }
+        if matches!(req, CloudRequest::Generate { .. }) {
+            self.waiting_gen.push_back(req);
+        } else {
+            self.waiting_verify.push_back(req);
         }
         Ok(())
     }
 
-    /// Anything in flight or queued?
+    /// Close a session and drop its tenant attribution.
+    fn close_session(&mut self, id: u64) {
+        self.sessions.close(id, &mut self.engine);
+        self.tenant_of.remove(&id);
+    }
+
+    /// Anything in flight or queued (including the tenant frontend)?
     pub fn is_idle(&self) -> bool {
         self.waiting_gen.is_empty()
             && self.waiting_verify.is_empty()
             && self.prefilling.is_empty()
             && self.decoding.is_empty()
             && self.verifying.is_empty()
+            && self.wfq.as_ref().is_none_or(|w| w.is_empty())
     }
 
     pub fn queue_depth(&self) -> usize {
-        self.waiting_gen.len() + self.waiting_verify.len()
+        self.waiting_gen.len()
+            + self.waiting_verify.len()
+            + self.wfq.as_ref().map_or(0, |w| w.len())
     }
 
     /// One mixed continuous-batching iteration. Returns surfaced events
@@ -436,6 +538,9 @@ impl<E: BatchEngine> Scheduler<E> {
             let ri = res_by_slot[item.slot].expect("engine result for scheduled slot");
             let r = &res[ri];
             self.sessions.note_rows(p.id, r.n_rows);
+            if let Some(&t) = self.tenant_of.get(&p.id) {
+                self.tenant_stats[t].rows_executed += r.n_rows as u64;
+            }
             match p.class {
                 CLASS_DECODE => {
                     let job = &mut self.decoding[p.idx];
@@ -494,10 +599,14 @@ impl<E: BatchEngine> Scheduler<E> {
                 self.stats.verifies_done += 1;
                 self.stats.draft_tokens_seen += job.draft.len() as u64;
                 self.stats.draft_tokens_accepted += outcome.accepted as u64;
+                if let Some(&t) = self.tenant_of.get(&job.request_id) {
+                    self.tenant_stats[t].verifies_done += 1;
+                    self.tenant_stats[t].draft_tokens_accepted += outcome.accepted as u64;
+                }
                 if self.pending_release.remove(&job.request_id) {
                     // the session was released mid-round: free it now
                     // that its last round has committed
-                    self.sessions.close(job.request_id, &mut self.engine);
+                    self.close_session(job.request_id);
                 } else {
                     // commit prefix + uncached + accepted; mask the rest.
                     // The session executed this tick, so it is resident.
@@ -523,7 +632,7 @@ impl<E: BatchEngine> Scheduler<E> {
         while i < self.decoding.len() {
             if self.decoding[i].next_token.is_none() {
                 let job = self.decoding.remove(i);
-                self.sessions.close(job.request_id, &mut self.engine);
+                self.close_session(job.request_id);
                 events.push(CloudEvent::Generated {
                     request_id: job.request_id,
                     tokens: job.generated,
@@ -556,6 +665,7 @@ impl<E: BatchEngine> Scheduler<E> {
     /// routing bug and surfaces as an error instead of being silently
     /// dropped.
     fn admit(&mut self, events: &mut Vec<CloudEvent>) -> Result<()> {
+        self.drain_wfq();
         // pass 1: triage the verify queue
         let mut deferred: VecDeque<CloudRequest> = VecDeque::new();
         let mut new_sessions: VecDeque<CloudRequest> = VecDeque::new();
@@ -620,6 +730,84 @@ impl<E: BatchEngine> Scheduler<E> {
         deferred.append(&mut new_sessions);
         self.waiting_verify = deferred;
         Ok(())
+    }
+
+    /// Move requests from the weighted-fair frontend into the admission
+    /// queues, in virtual-finish-time order, but only as many
+    /// session-opening requests as there is session capacity for —
+    /// popping more would collapse WFQ ordering into FIFO arrival order
+    /// inside the staging queues. Verify rounds whose session is
+    /// already open never wait on capacity (they consume none).
+    fn drain_wfq(&mut self) {
+        if self.wfq.is_none() {
+            return;
+        }
+        // sessions that staged-but-unadmitted requests will open —
+        // distinct ids, since several rounds of one unopened session
+        // still open only one session
+        let mut pending_new: HashSet<u64> = HashSet::new();
+        for r in self.waiting_gen.iter().chain(self.waiting_verify.iter()) {
+            match r {
+                CloudRequest::Generate { request_id, .. } => {
+                    pending_new.insert(*request_id);
+                }
+                CloudRequest::Verify { request_id, .. }
+                    if !self.sessions.contains(*request_id) =>
+                {
+                    pending_new.insert(*request_id);
+                }
+                _ => {}
+            }
+        }
+        loop {
+            let head_open = {
+                let Some(wfq) = self.wfq.as_ref() else { break };
+                match wfq.peek() {
+                    None => break,
+                    Some((_, CloudRequest::Verify { request_id, .. })) => {
+                        self.sessions.contains(*request_id)
+                    }
+                    Some(_) => false,
+                }
+            };
+            if !head_open
+                && self.sessions.active() + pending_new.len() >= self.sessions.max_sessions
+            {
+                // capacity exhausted — but open-session follow-up
+                // rounds queued *behind* the blocked head consume no
+                // capacity and may be exactly what a capacity-holding
+                // session is waiting on; leaving them would deadlock
+                while let Some((_, req)) =
+                    self.wfq.as_mut().expect("checked above").pop_matching(|r| match r {
+                        CloudRequest::Verify { request_id, .. } => {
+                            self.sessions.contains(*request_id)
+                        }
+                        _ => false,
+                    })
+                {
+                    self.waiting_verify.push_back(req);
+                }
+                break;
+            }
+            let (_, req) =
+                self.wfq.as_mut().expect("checked above").pop().expect("peeked non-empty");
+            let rid = match &req {
+                CloudRequest::Generate { request_id, .. }
+                | CloudRequest::Verify { request_id, .. } => *request_id,
+                CloudRequest::Release { .. } => {
+                    unreachable!("releases bypass the tenant frontend")
+                }
+            };
+            if matches!(req, CloudRequest::Generate { .. }) {
+                pending_new.insert(rid);
+                self.waiting_gen.push_back(req);
+            } else {
+                if !head_open {
+                    pending_new.insert(rid);
+                }
+                self.waiting_verify.push_back(req);
+            }
+        }
     }
 
     /// Start a verify round on its (already open) session. The caller

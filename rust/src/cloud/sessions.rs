@@ -14,10 +14,14 @@
 //!   observable between manager calls).
 //!
 //! Before each scheduler iteration, sessions picked for execution are
-//! made resident on demand: if no slot is free, the
-//! least-recently-scheduled resident session is *parked* (swap-out via
-//! `BatchEngine::export_slot`), its slot is reassigned, and the target
-//! session's rows are restored (`import_slot`). Sessions **pinned** by
+//! made resident on demand: if no slot is free, a resident session is
+//! *parked* (swap-out via `BatchEngine::export_slot`), its slot is
+//! reassigned, and the target session's rows are restored
+//! (`import_slot`). The victim is **swap-cost-aware LRU**: among the
+//! least-recently-scheduled resident sessions (a window capped at
+//! [`EVICT_CANDIDATES`] and at half the resident set), the one with
+//! the fewest committed KV rows is parked — it costs the least to
+//! copy out now and back in later. Sessions **pinned** by
 //! the current iteration's picks are never eviction victims, so a tick
 //! can never swap out work it is about to run. Swap traffic and copy
 //! time are charged to [`SwapStats`] (and surfaced through the
@@ -39,6 +43,18 @@ use crate::runtime::paging::{BlockPool, BlockTable};
 
 /// Token rows per host KV block (vLLM-style fixed granularity).
 pub const BLOCK_TOKENS: usize = 16;
+
+/// Eviction candidate window cap: the victim is the **cheapest to
+/// swap** (fewest committed KV rows) among the least-recently-scheduled
+/// resident sessions. The effective window is
+/// `min(EVICT_CANDIDATES, ⌈residents/2⌉)` — `1` would be pure LRU, and
+/// bounding by half the resident set guarantees the most recently
+/// scheduled half is always recency-protected (otherwise, on a B=4
+/// engine, a short hot session could be swap-thrashed on alternating
+/// ticks while large idle sessions stay resident). A small window
+/// trades a little recency precision for much smaller swap copies
+/// (ROADMAP "swap-cost-aware eviction").
+pub const EVICT_CANDIDATES: usize = 4;
 
 #[derive(Debug)]
 enum SessionState {
@@ -72,9 +88,11 @@ pub struct SwapStats {
 }
 
 /// Tracks logical sessions and pages their KV between engine slots and
-/// the host [`BlockPool`]. Eviction is LRU-with-pinning: the least
-/// recently scheduled resident session is parked, but never one the
-/// current iteration has already picked.
+/// the host [`BlockPool`]. Eviction is swap-cost-aware
+/// LRU-with-pinning: the fewest-rows session among the least recently
+/// scheduled residents (window capped at [`EVICT_CANDIDATES`] and at
+/// half the resident set) is parked, but never one the current
+/// iteration has already picked.
 pub struct SessionManager {
     pool: BlockPool,
     sessions: HashMap<u64, Session>,
@@ -226,23 +244,28 @@ impl SessionManager {
             }
         }
         if engine.free_slots() == 0 {
-            // LRU victim among unpinned resident sessions (stable
-            // id tie-break: HashMap order must not leak into policy)
-            let mut victim: Option<(u64, u64)> = None;
-            for (&vid, s) in self.sessions.iter() {
-                if pinned.contains(&vid) || !matches!(s.state, SessionState::Resident { .. }) {
-                    continue;
-                }
-                let key = (s.last_used, vid);
-                let better = match victim {
-                    None => true,
-                    Some(v) => key < v,
-                };
-                if better {
-                    victim = Some(key);
-                }
-            }
-            let Some((_, vid)) = victim else { return Ok(None) };
+            // Swap-cost-aware LRU: gather the EVICT_CANDIDATES least
+            // recently scheduled unpinned resident sessions, then park
+            // the one with the fewest committed KV rows — it is the
+            // cheapest to swap back in when its next round arrives.
+            // (Stable (last_used, id) ordering: HashMap iteration order
+            // must not leak into policy.)
+            let mut cands: Vec<(u64, u64, usize)> = self
+                .sessions
+                .iter()
+                .filter(|(vid, s)| {
+                    !pinned.contains(vid) && matches!(s.state, SessionState::Resident { .. })
+                })
+                .map(|(&vid, s)| (s.last_used, vid, s.len))
+                .collect();
+            cands.sort_unstable_by_key(|&(used, vid, _)| (used, vid));
+            let window = EVICT_CANDIDATES.min(cands.len().div_ceil(2)).max(1);
+            cands.truncate(window);
+            let victim = cands
+                .iter()
+                .min_by_key(|&&(used, vid, len)| (len, used, vid))
+                .map(|&(_, vid, _)| vid);
+            let Some(vid) = victim else { return Ok(None) };
             if !self.park(vid, engine)? {
                 return Ok(None); // host pool exhausted; retry next tick
             }

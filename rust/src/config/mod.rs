@@ -114,11 +114,51 @@ pub struct BatchPolicy {
     /// physical slot count — paged-KV swapping never triggers); values
     /// above the slot count enable host-side KV paging.
     pub max_sessions: usize,
+    /// Per-tenant weights for the weighted-fair admission frontend
+    /// (`cloud::fairness`). Empty = frontend off (single-queue FIFO
+    /// admission); entries must be finite and positive.
+    pub tenant_weights: Vec<f64>,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { token_budget: 0, prefill_share: 0.5, age_threshold: 4, max_sessions: 0 }
+        BatchPolicy {
+            token_budget: 0,
+            prefill_share: 0.5,
+            age_threshold: 4,
+            max_sessions: 0,
+            tenant_weights: Vec::new(),
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// Parse `--tenants` / `--tenant-weights` style CLI input into the
+    /// weight vector: an explicit comma-separated list wins; otherwise
+    /// `n_tenants > 1` yields equal weights; otherwise the frontend
+    /// stays off.
+    pub fn tenant_weights_from(
+        n_tenants: usize,
+        weights_csv: Option<&str>,
+    ) -> anyhow::Result<Vec<f64>> {
+        let weights = match weights_csv {
+            Some(csv) => csv
+                .split(',')
+                .map(|s| s.trim().parse::<f64>().map_err(anyhow::Error::from))
+                .collect::<anyhow::Result<Vec<f64>>>()?,
+            None if n_tenants > 1 => vec![1.0; n_tenants],
+            None => Vec::new(),
+        };
+        if weights.iter().any(|w| !w.is_finite() || *w <= 0.0) {
+            anyhow::bail!("tenant weights must be finite and positive: {weights:?}");
+        }
+        if n_tenants > 0 && !weights.is_empty() && weights.len() != n_tenants {
+            anyhow::bail!(
+                "--tenant-weights lists {} weights but --tenants is {n_tenants}",
+                weights.len()
+            );
+        }
+        Ok(weights)
     }
 }
 
@@ -251,5 +291,20 @@ mod tests {
         assert!(b.prefill_share > 0.0 && b.prefill_share <= 1.0);
         assert!(b.age_threshold >= 1);
         assert_eq!(b.max_sessions, 0, "default session cap is auto (slot count, no paging)");
+        assert!(b.tenant_weights.is_empty(), "tenant frontend defaults off");
+    }
+
+    #[test]
+    fn tenant_weight_parsing() {
+        assert_eq!(BatchPolicy::tenant_weights_from(0, None).unwrap(), Vec::<f64>::new());
+        assert_eq!(BatchPolicy::tenant_weights_from(1, None).unwrap(), Vec::<f64>::new());
+        assert_eq!(BatchPolicy::tenant_weights_from(3, None).unwrap(), vec![1.0; 3]);
+        assert_eq!(
+            BatchPolicy::tenant_weights_from(3, Some("1, 2,4")).unwrap(),
+            vec![1.0, 2.0, 4.0]
+        );
+        assert!(BatchPolicy::tenant_weights_from(2, Some("1,2,3")).is_err(), "count mismatch");
+        assert!(BatchPolicy::tenant_weights_from(2, Some("1,-2")).is_err(), "negative");
+        assert!(BatchPolicy::tenant_weights_from(2, Some("1,zero")).is_err(), "non-numeric");
     }
 }

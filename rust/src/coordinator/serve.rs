@@ -82,6 +82,7 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
             let rt = Runtime::load(artifacts)?;
             let mut engine = CloudEngine::new(rt.model(&llm)?)?;
             engine.warmup()?; // compile before accepting traffic
+            let n_tenants = batch.tenant_weights.len();
             let mut sched = Scheduler::with_policy(engine, 0xC10D, batch);
             let mut replies: HashMap<u64, Sender<DownlinkMsg>> = HashMap::new();
             let mut open = true;
@@ -91,14 +92,20 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
                     match rx_cloud.recv_timeout(Duration::from_micros(200)) {
                         Ok(ToCloud::Up(msg, reply)) => {
                             replies.insert(msg.request_id, reply);
-                            sched.submit(CloudRequest::Verify {
+                            let req = CloudRequest::Verify {
                                 request_id: msg.request_id,
                                 device_id: msg.device_id,
                                 uncached: msg.uncached,
                                 draft: msg.draft,
                                 dists: msg.dists,
                                 greedy,
-                            })?;
+                            };
+                            if n_tenants > 0 {
+                                // devices map onto tenants round-robin
+                                sched.submit_tenant(msg.device_id as usize % n_tenants, req)?;
+                            } else {
+                                sched.submit(req)?;
+                            }
                         }
                         Ok(ToCloud::Release(id)) => {
                             sched.submit(CloudRequest::Release { request_id: id })?;

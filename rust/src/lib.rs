@@ -25,7 +25,12 @@
 //!   network simulator ([`net`]), the seven SynthLang datasets
 //!   ([`workload`]), quality/latency/cost/energy metrics ([`metrics`]),
 //!   the offline profiler ([`profiling`], paper §5) and all four
-//!   baselines ([`baselines`]).
+//!   baselines ([`baselines`]);
+//! * the **fleet simulator** ([`sim`]) — a deterministic virtual-clock
+//!   discrete-event harness that serves thousands of simulated devices
+//!   through the real scheduler/session/offload code (with per-tenant
+//!   weighted fair queueing, [`cloud::fairness`]) in seconds of wall
+//!   time (`synera fleet`, `benches/fig19_fleet.rs`).
 //!
 //! Entry points: the `synera` binary (`serve`, `generate`, `eval`,
 //! `profile`), `examples/`, and one bench target per paper table/figure.
@@ -41,6 +46,7 @@ pub mod model;
 pub mod net;
 pub mod profiling;
 pub mod runtime;
+pub mod sim;
 pub mod testutil;
 pub mod util;
 pub mod workload;

@@ -7,19 +7,27 @@
 //! synera eval      --method synera --slm s1b --llm l13b --task xsum --n 16
 //! synera profile   [--slm s1b --llm l13b] [--refresh]
 //! synera serve     --devices 4 --requests 8 --task xsum
+//!                  [--tenants 2 --tenant-weights 1,2]
+//! synera fleet     --devices 1024 --duration 60 [--rate 256]
+//!                  [--tenants 4] [--tenant-weights 1,1,2,4]
+//!                  [--max-sessions 64] [--burst] [--seed N]
+//!                  [--real-engine]   (virtual-clock sim; artifact-free
+//!                                     over the mock engine by default)
 //! synera info
 //! ```
 
 use anyhow::{bail, Context, Result};
 use synera::baselines::ALL_METHODS;
-use synera::config::Scenario;
+use synera::config::{BatchPolicy, Scenario};
 use synera::coordinator::eval::{eval_method, EvalOptions};
 use synera::coordinator::pipeline::Method;
 use synera::coordinator::serve::{run_threaded, ServeConfig};
 use synera::profiling;
 use synera::runtime::{artifacts_dir, Runtime};
+use synera::sim::{run_fleet, run_fleet_on, FleetConfig};
 use synera::util::cli::Args;
 use synera::workload::synthlang::Task;
+use synera::workload::trace::BurstProfile;
 
 fn main() {
     if let Err(e) = run() {
@@ -55,6 +63,10 @@ fn scenario_from(args: &Args) -> Result<Scenario> {
         args.get_usize("age-threshold", scen.params.batch.age_threshold as usize)? as u64;
     scen.params.batch.max_sessions =
         args.get_usize("max-sessions", scen.params.batch.max_sessions)?;
+    scen.params.batch.tenant_weights = synera::config::BatchPolicy::tenant_weights_from(
+        args.get_usize("tenants", 0)?,
+        args.get("tenant-weights"),
+    )?;
     if let Some(w) = args.get("slm-weights") {
         scen.pair.slm_weights = Some(w.to_string());
     }
@@ -69,9 +81,10 @@ fn run() -> Result<()> {
         Some("eval") => eval(&args),
         Some("profile") => profile(&args),
         Some("serve") => serve(&args),
+        Some("fleet") => fleet(&args),
         _ => {
             eprintln!(
-                "usage: synera <info|generate|eval|profile|serve> [--opts]\n\
+                "usage: synera <info|generate|eval|profile|serve|fleet> [--opts]\n\
                  see rust/src/main.rs header for examples"
             );
             Ok(())
@@ -246,5 +259,106 @@ fn serve(args: &Args) -> Result<()> {
         rep.offload_rate,
     );
     println!("paged-kv swaps: in={} out={}", rep.swap_ins, rep.swap_outs);
+    Ok(())
+}
+
+/// Virtual-clock fleet simulation (`sim::fleet`): thousands of devices
+/// through the real scheduler in seconds of wall time.
+fn fleet(args: &Args) -> Result<()> {
+    let base = FleetConfig::default();
+    let n_devices = args.get_usize("devices", 1024)?;
+    let rate_rps = args.get_f64("rate", (n_devices as f64 * 0.25).max(1.0))?;
+    let tenants = args.get_usize("tenants", 4)?;
+    let mut params = base.params.clone();
+    params.budget = args.get_f64("budget", params.budget)?;
+    params.max_new_tokens = args.get_usize("max-new", params.max_new_tokens)?;
+    params.batch.max_sessions = args.get_usize("max-sessions", 64)?;
+    params.batch.token_budget = args.get_usize("token-budget", 0)?;
+    let cfg = FleetConfig {
+        n_devices,
+        duration_s: args.get_f64("duration", 60.0)?,
+        rate_rps,
+        burst: if args.has_flag("burst") {
+            Some(BurstProfile::flash_crowd(rate_rps))
+        } else {
+            None
+        },
+        tenants,
+        tenant_weights: BatchPolicy::tenant_weights_from(tenants, args.get("tenant-weights"))?,
+        params,
+        seed: args.get_usize("seed", base.seed as usize)? as u64,
+        slo_ttft_s: args.get_f64("slo-ttft", base.slo_ttft_s)?,
+        slo_tbt_s: args.get_f64("slo-tbt", base.slo_tbt_s)?,
+        // keep the cost model's packing factor in step with the engine
+        // actually selected on the --real-engine path
+        cloud_model: args.get_or("llm", &base.cloud_model),
+        ..base
+    };
+    println!(
+        "fleet: {} devices, {:.0} virtual s at {:.1} req/s ({}), {} tenants, max_sessions={}",
+        cfg.n_devices,
+        cfg.duration_s,
+        cfg.rate_rps,
+        if cfg.burst.is_some() { "bursty" } else { "poisson" },
+        cfg.tenants,
+        cfg.params.batch.max_sessions,
+    );
+    let rep = if args.has_flag("real-engine") {
+        // artifact path: measured engine compute drives the clock
+        let rt = Runtime::load_default()?;
+        let llm = args.get_or("llm", "l13b");
+        let profile =
+            profiling::load_or_profile(&rt, &args.get_or("slm", "s1b"), None, &llm)?;
+        let mut engine = synera::model::CloudEngine::new(rt.model(&llm)?)?;
+        engine.warmup()?;
+        run_fleet_on(&cfg, engine, &profile, true)?
+    } else {
+        run_fleet(&cfg)?
+    };
+    println!(
+        "completed {}/{} requests ({} tokens) in {:.1} virtual s / {:.2} wall s",
+        rep.completed,
+        rep.offered,
+        rep.generated_tokens,
+        rep.virtual_s,
+        rep.wall_s,
+    );
+    println!(
+        "cloud: {} iterations, {} draft rows verified, cost={:.5}, swaps in/out={}/{} ({} B), pi hit/miss={}/{}",
+        rep.cloud_iterations,
+        rep.cloud_draft_rows,
+        rep.cost * 1e3,
+        rep.swap_ins,
+        rep.swap_outs,
+        rep.swap_bytes,
+        rep.pi_hits,
+        rep.pi_misses,
+    );
+    println!(
+        "traffic: {} offload rounds / {} local chunks, {} B up / {} B down",
+        rep.offload_rounds, rep.local_chunks, rep.bytes_up, rep.bytes_down
+    );
+    println!(
+        "{:<7} {:>6} {:>5} {:>5} | {:>9} {:>9} {:>9} | {:>9} {:>9} | {:>7} {:>7} | {:>10}",
+        "tenant", "weight", "req", "done", "ttft p50", "ttft p95", "ttft p99", "tbt p50",
+        "tbt p95", "slo-ttft", "slo-tbt", "rows",
+    );
+    for t in &rep.tenants {
+        println!(
+            "{:<7} {:>6.1} {:>5} {:>5} | {:>8.0}ms {:>8.0}ms {:>8.0}ms | {:>8.1}ms {:>8.1}ms | {:>6.1}% {:>6.1}% | {:>10}",
+            t.tenant,
+            t.weight,
+            t.requests,
+            t.completed,
+            t.ttft.p50 * 1e3,
+            t.ttft.p95 * 1e3,
+            t.ttft.p99 * 1e3,
+            t.tbt.p50 * 1e3,
+            t.tbt.p95 * 1e3,
+            t.slo_ttft_frac * 100.0,
+            t.slo_tbt_frac * 100.0,
+            t.rows_executed,
+        );
+    }
     Ok(())
 }

@@ -1,6 +1,14 @@
 //! Latency recording and summary statistics (mean / p50 / p95 / p99).
+//!
+//! [`LatencyRecorder`] retains every sample by default; for
+//! million-request simulation runs (`crate::sim`) a **bounded seeded
+//! reservoir** mode (Vitter's Algorithm R) keeps a uniform sample of
+//! fixed size, so [`Summary::of`] over the reservoir tracks the exact
+//! percentiles within sampling tolerance at O(capacity) memory.
 
 use std::time::Duration;
+
+use crate::util::rng::Rng;
 
 /// Summary statistics over a set of f64 observations.
 #[derive(Debug, Clone, Default)]
@@ -39,10 +47,22 @@ impl Summary {
     }
 }
 
-/// Accumulates per-token / per-request latencies (in seconds).
-#[derive(Debug, Clone, Default)]
+/// Accumulates per-token / per-request latencies (in seconds), either
+/// exactly (default) or into a bounded seeded reservoir.
+#[derive(Debug, Clone)]
 pub struct LatencyRecorder {
     values: Vec<f64>,
+    /// Reservoir capacity; `None` retains every sample.
+    cap: Option<usize>,
+    /// Samples offered (≥ `values.len()` in reservoir mode).
+    seen: u64,
+    rng: Rng,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        LatencyRecorder { values: Vec::new(), cap: None, seen: 0, rng: Rng::new(0) }
+    }
 }
 
 impl LatencyRecorder {
@@ -50,16 +70,44 @@ impl LatencyRecorder {
         Self::default()
     }
 
+    /// Bounded recorder: keeps a uniform random sample of at most
+    /// `capacity` observations (Algorithm R over the deterministic
+    /// seeded stream — same seed and record order ⇒ same reservoir).
+    pub fn with_reservoir(capacity: usize, seed: u64) -> Self {
+        LatencyRecorder {
+            values: Vec::with_capacity(capacity.min(1 << 20)),
+            cap: Some(capacity.max(1)),
+            seen: 0,
+            rng: Rng::new(seed ^ 0x5EED_4E5E),
+        }
+    }
+
     pub fn record(&mut self, seconds: f64) {
-        self.values.push(seconds);
+        self.seen += 1;
+        match self.cap {
+            Some(cap) if self.values.len() >= cap => {
+                // each of the `seen` offers survives w.p. cap/seen
+                let j = self.rng.below(self.seen);
+                if (j as usize) < cap {
+                    self.values[j as usize] = seconds;
+                }
+            }
+            _ => self.values.push(seconds),
+        }
     }
 
     pub fn record_duration(&mut self, d: Duration) {
-        self.values.push(d.as_secs_f64());
+        self.record(d.as_secs_f64());
     }
 
+    /// Fold `other`'s retained samples into this recorder. In reservoir
+    /// mode the result is an approximation (the merged stream is
+    /// re-sampled, so `other`'s discarded samples stay lost); exact
+    /// recorders concatenate losslessly as before.
     pub fn merge(&mut self, other: &LatencyRecorder) {
-        self.values.extend_from_slice(&other.values);
+        for &v in &other.values {
+            self.record(v);
+        }
     }
 
     pub fn summary(&self) -> Summary {
@@ -68,6 +116,11 @@ impl LatencyRecorder {
 
     pub fn values(&self) -> &[f64] {
         &self.values
+    }
+
+    /// Total observations offered (not capped by the reservoir).
+    pub fn seen(&self) -> u64 {
+        self.seen
     }
 
     pub fn is_empty(&self) -> bool {
@@ -103,6 +156,47 @@ mod tests {
         assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
         assert!((s.p50 - 500.0).abs() < 2.0);
         assert!((s.p95 - 949.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn reservoir_tracks_exact_percentiles() {
+        // heavy-tailed stream: latency = u² (most samples small, rare
+        // large ones) — the regime where naive truncation would shear
+        // off exactly the tail percentiles that matter
+        let mut rng = crate::util::rng::Rng::new(0xA11);
+        let mut exact = LatencyRecorder::new();
+        let mut res = LatencyRecorder::with_reservoir(4096, 7);
+        for _ in 0..200_000 {
+            let u = rng.f64();
+            let v = u * u;
+            exact.record(v);
+            res.record(v);
+        }
+        assert_eq!(res.values().len(), 4096, "reservoir is bounded");
+        assert_eq!(res.seen(), 200_000);
+        let (e, r) = (exact.summary(), res.summary());
+        for (pe, pr, name, tol) in [
+            (e.p50, r.p50, "p50", 0.15),
+            (e.p95, r.p95, "p95", 0.10),
+            (e.p99, r.p99, "p99", 0.15),
+            (e.mean, r.mean, "mean", 0.10),
+        ] {
+            let rel = (pe - pr).abs() / pe.max(1e-12);
+            assert!(rel < tol, "{name}: exact {pe} vs reservoir {pr} (rel {rel:.3})");
+        }
+    }
+
+    #[test]
+    fn reservoir_is_deterministic_per_seed() {
+        let fill = |seed| {
+            let mut r = LatencyRecorder::with_reservoir(64, seed);
+            for i in 0..10_000 {
+                r.record((i % 997) as f64);
+            }
+            r.values().to_vec()
+        };
+        assert_eq!(fill(3), fill(3));
+        assert_ne!(fill(3), fill(4), "different seeds sample differently");
     }
 
     #[test]

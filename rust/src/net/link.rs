@@ -27,6 +27,18 @@ impl LinkProfile {
     pub fn constrained(mbps: f64) -> Self {
         LinkProfile::new(mbps, 40.0)
     }
+
+    /// Deterministic heterogeneous-population link for fleet device
+    /// `idx`: ~70% Wi-Fi, ~20% LTE, ~10% constrained stragglers. Keeps
+    /// large simulated fleets from all sharing one idealised link
+    /// without introducing another RNG stream.
+    pub fn fleet_mix(idx: usize) -> Self {
+        match idx % 10 {
+            0..=6 => LinkProfile::wifi(),
+            7 | 8 => LinkProfile::lte(),
+            _ => LinkProfile::constrained(1.0),
+        }
+    }
 }
 
 /// A simulated half-duplex link; returns *delays* so callers can either
@@ -89,6 +101,14 @@ mod tests {
         let mut slow = SimLink::new(LinkProfile::constrained(0.1), 1);
         let mut fast = SimLink::new(LinkProfile::constrained(100.0), 1);
         assert!(slow.uplink_s(5000) > 15.0 * fast.uplink_s(5000)); // RTT floors the fast link
+    }
+
+    #[test]
+    fn fleet_mix_is_heterogeneous_and_deterministic() {
+        let n_wifi = (0..100).filter(|&i| LinkProfile::fleet_mix(i).bandwidth_mbps == 10.0).count();
+        let n_slow = (0..100).filter(|&i| LinkProfile::fleet_mix(i).bandwidth_mbps == 1.0).count();
+        assert_eq!(n_wifi, 70);
+        assert_eq!(n_slow, 10);
     }
 
     #[test]

@@ -104,11 +104,19 @@ impl UplinkMsg {
     /// materialising the encoding — this runs on every offload round
     /// (see EXPERIMENTS.md §Perf).
     pub fn wire_bytes(&self) -> usize {
+        Self::wire_bytes_for(self.uncached.len(), self.draft.len(), &self.dists)
+    }
+
+    /// [`UplinkMsg::wire_bytes`] from the message's components, for
+    /// callers that account link bytes without building (and cloning
+    /// into) a throwaway message — e.g. the fleet simulator's offload
+    /// hot path.
+    pub fn wire_bytes_for(n_uncached: usize, n_draft: usize, dists: &[Dist]) -> usize {
         let mut n = 8 + 4 + 1; // request_id, device_id, is_first
-        n += 4 + 2 * self.uncached.len();
-        n += 4 + 2 * self.draft.len();
+        n += 4 + 2 * n_uncached;
+        n += 4 + 2 * n_draft;
         n += 4;
-        for d in &self.dists {
+        for d in dists {
             n += 1 + 4
                 + match d {
                     Dist::Dense(p) => 4 * p.len(),

@@ -1,0 +1,138 @@
+//! Deterministic virtual clock: a discrete-event queue keyed by
+//! `(time, sequence)`.
+//!
+//! Events fire in non-decreasing virtual time; exact time ties resolve
+//! by insertion order (the monotone `seq` counter), so a run is a pure
+//! function of its inputs — no wall clock, no thread interleaving.
+//! Pushing an event in the past is a logic error and panics rather
+//! than silently reordering history.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<T> {
+    at: f64,
+    seq: u64,
+    ev: T,
+}
+
+// Ordering ignores the payload: (at, seq) ascending. BinaryHeap is a
+// max-heap, so comparisons are reversed here instead of wrapping every
+// entry in `Reverse`.
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq && self.at.to_bits() == other.at.to_bits()
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.at.total_cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event queue + virtual clock of one simulation run.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+    now: f64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current virtual time (the firing time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `ev` at absolute virtual time `at` (≥ now).
+    pub fn push(&mut self, at: f64, ev: T) {
+        assert!(at.is_finite(), "event time must be finite (got {at})");
+        assert!(at >= self.now, "event scheduled in the past: {at} < now {}", self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { at, seq, ev });
+    }
+
+    /// Schedule `ev` after a non-negative delay from now.
+    pub fn push_after(&mut self, delay: f64, ev: T) {
+        self.push(self.now + delay.max(0.0), ev);
+    }
+
+    /// Pop the next event, advancing the clock to its firing time.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        let e = self.heap.pop()?;
+        self.now = e.at;
+        Some((e.at, e.ev))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_in_time_order_with_seq_tiebreak() {
+        let mut q = EventQueue::new();
+        q.push(2.0, "late");
+        q.push(1.0, "early-a");
+        q.push(1.0, "early-b"); // same instant: insertion order wins
+        q.push(1.5, "mid");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, ["early-a", "early-b", "mid", "late"]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push(0.5, 1u32);
+        q.push(0.25, 2);
+        let mut last = 0.0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            assert_eq!(q.now(), t);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn push_after_is_relative_to_now() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 0u32);
+        q.pop();
+        q.push_after(0.5, 1);
+        let (t, _) = q.pop().unwrap();
+        assert!((t - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduled in the past")]
+    fn rejects_past_events() {
+        let mut q = EventQueue::new();
+        q.push(1.0, ());
+        q.pop();
+        q.push(0.5, ());
+    }
+}

@@ -1,0 +1,797 @@
+//! The fleet driver: N simulated devices × one simulated cloud, in
+//! virtual time (see the module docs in [`crate::sim`]).
+//!
+//! Each device runs the genuine Synera loop — synthetic draft streams
+//! scored by the real [`Selector`], rejection-position prediction and
+//! alternative substitution from [`crate::device::parallel`], real
+//! top-k compression ([`compress_dist`]) priced by the real wire
+//! format — against a cloud that is the real
+//! [`Scheduler`] with the weighted-fair tenant frontend
+//! ([`crate::cloud::fairness`]). Only the *model forward passes* are
+//! synthetic: draft tokens/confidences/importances come from each
+//! device's seeded stream, and verification runs over the engine's own
+//! logits (exact speculative acceptance semantics, including
+//! corrections and bonus tokens).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
+use crate::config::SyneraParams;
+use crate::device::codec::compress_dist;
+use crate::device::early_exit::SeqExitPolicy;
+use crate::device::offload::Selector;
+use crate::device::parallel::{alternative_token, predict_rejection};
+use crate::metrics::cost::{CostModel, PackingFactors};
+use crate::metrics::stats::{LatencyRecorder, Summary};
+use crate::model::cloud_engine::BatchEngine;
+use crate::net::link::{LinkProfile, SimLink};
+use crate::net::wire::{DownlinkMsg, UplinkMsg};
+use crate::profiling::OffloadProfile;
+use crate::sim::clock::EventQueue;
+use crate::testutil::MockBatchEngine;
+use crate::util::rng::Rng;
+use crate::workload::synthlang::TASKS;
+use crate::workload::trace::{mmpp_trace, poisson_trace, BurstProfile};
+use crate::workload::vocab::{EOS, N_VALS, VAL0, VOCAB};
+
+/// Fleet simulation configuration.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub n_devices: usize,
+    /// Arrival horizon in virtual seconds (requests in flight at the
+    /// horizon still drain to completion).
+    pub duration_s: f64,
+    /// Aggregate offered load across the fleet (req/s).
+    pub rate_rps: f64,
+    /// Hard virtual-time stop: events past this instant are discarded
+    /// and in-flight requests stay uncounted (`0` = run to full drain).
+    /// Use it to take *windowed* measurements of an overloaded fleet,
+    /// where a full drain would hide the backlog.
+    pub stop_s: f64,
+    /// Bursty (MMPP) arrivals instead of homogeneous Poisson.
+    pub burst: Option<BurstProfile>,
+    /// Number of tenants; devices map onto tenants round-robin.
+    pub tenants: usize,
+    /// Per-tenant WFQ weights (empty = equal weights).
+    pub tenant_weights: Vec<f64>,
+    /// Device/runtime parameters; `params.batch` configures the cloud
+    /// (token budget, `max_sessions` paging cap, …).
+    pub params: SyneraParams,
+    /// Uniform link for every device; `None` = heterogeneous
+    /// [`LinkProfile::fleet_mix`].
+    pub link: Option<LinkProfile>,
+    /// Device decode seconds per draft token.
+    pub device_step_s: f64,
+    /// Device prefill seconds per prompt token.
+    pub device_prefill_s: f64,
+    /// Modelled cloud service time per scheduler iteration (fixed part).
+    pub cloud_iter_s: f64,
+    /// Modelled cloud service time per executed token row.
+    pub cloud_row_s: f64,
+    /// TTFT service-level objective (s).
+    pub slo_ttft_s: f64,
+    /// Per-request mean TBT service-level objective (s).
+    pub slo_tbt_s: f64,
+    /// Latency-sample reservoir per tenant recorder (0 = retain all).
+    pub reservoir: usize,
+    pub seed: u64,
+    /// Cloud model label for the cost model's packing factor.
+    pub cloud_model: String,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            n_devices: 64,
+            duration_s: 10.0,
+            rate_rps: 32.0,
+            stop_s: 0.0,
+            burst: None,
+            tenants: 1,
+            tenant_weights: Vec::new(),
+            params: SyneraParams::default(),
+            link: None,
+            device_step_s: 8e-3,
+            device_prefill_s: 1e-3,
+            cloud_iter_s: 2e-3,
+            cloud_row_s: 4e-4,
+            slo_ttft_s: 2.0,
+            slo_tbt_s: 0.25,
+            reservoir: 1 << 16,
+            seed: 0xF1EE7,
+            cloud_model: "l13b".into(),
+        }
+    }
+}
+
+/// One tenant's slice of a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub tenant: usize,
+    pub weight: f64,
+    pub requests: usize,
+    pub completed: usize,
+    /// Time to first committed token, from request arrival.
+    pub ttft: Summary,
+    /// Per-request mean time between tokens.
+    pub tbt: Summary,
+    /// Fraction of completed requests with TTFT ≤ the SLO.
+    pub slo_ttft_frac: f64,
+    /// Fraction of TBT-eligible (≥2 token) completed requests with
+    /// mean TBT ≤ the SLO.
+    pub slo_tbt_frac: f64,
+    /// Engine token rows executed for this tenant (WFQ share evidence).
+    pub rows_executed: u64,
+    pub verifies_done: u64,
+    pub draft_tokens_accepted: u64,
+}
+
+/// Aggregate results of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub tenants: Vec<TenantReport>,
+    /// Requests offered by the arrival trace.
+    pub offered: usize,
+    pub completed: usize,
+    /// Virtual time covered by the run: the last event's firing time,
+    /// clamped to `stop_s` in windowed runs.
+    pub virtual_s: f64,
+    /// Wall-clock seconds the simulation itself took.
+    pub wall_s: f64,
+    pub generated_tokens: u64,
+    pub offload_rounds: u64,
+    pub local_chunks: u64,
+    pub pi_hits: u64,
+    pub pi_misses: u64,
+    /// Draft token rows verified by the cloud (cost numerator).
+    pub cloud_draft_rows: u64,
+    /// Estimated serving cost (`CostModel`, arbitrary units).
+    pub cost: f64,
+    pub cloud_iterations: u64,
+    pub swap_ins: u64,
+    pub swap_outs: u64,
+    pub swap_bytes: u64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+}
+
+impl FleetReport {
+    /// Completed fraction of offered requests.
+    pub fn completion(&self) -> f64 {
+        if self.offered == 0 {
+            return 1.0;
+        }
+        self.completed as f64 / self.offered as f64
+    }
+
+    /// Requests-weighted mean TBT across tenants (cost model `T`).
+    /// Weighted by *completed requests*, not retained samples — a
+    /// reservoir recorder caps `tbt.n` at its capacity, which would
+    /// equalise tenants of very different sizes.
+    pub fn mean_tbt_s(&self) -> f64 {
+        let (mut num, mut den) = (0.0, 0usize);
+        for t in &self.tenants {
+            num += t.tbt.mean * t.completed as f64;
+            den += t.completed;
+        }
+        if den == 0 { 0.0 } else { num / den as f64 }
+    }
+}
+
+/// A drafted γ-token chunk from a device's synthetic model.
+#[derive(Debug, Clone)]
+pub struct DraftedChunk {
+    pub tokens: Vec<u32>,
+    pub confs: Vec<f32>,
+    pub imps: Vec<f32>,
+}
+
+/// The simulated device model: a seeded synthetic draft stream feeding
+/// the *real* offload selector, sequence-exit policy and
+/// rejection-position predictor. Exposed so the sim-vs-threaded
+/// cross-check in `tests/fleet_sim.rs` can drive the identical device
+/// logic from OS threads.
+pub struct SimDevice {
+    pub id: u32,
+    pub tenant: usize,
+    rng: Rng,
+    selector: Selector,
+    seq_exit: SeqExitPolicy,
+    alpha: f64,
+}
+
+impl SimDevice {
+    pub fn new(
+        id: u32,
+        tenant: usize,
+        profile: &OffloadProfile,
+        params: &SyneraParams,
+        seed: u64,
+    ) -> SimDevice {
+        let mut p = params.clone();
+        // distinct, reproducible dispatch stream per device
+        p.seed = seed ^ ((id as u64) << 20) ^ 0xD1CE;
+        let selector = Selector::new(profile.c_th, profile.i_th_for_budget(p.budget), p.clone());
+        let seq_exit = SeqExitPolicy::new(p.seq_exit_frac, p.max_new_tokens, p.early_exit);
+        SimDevice {
+            id,
+            tenant,
+            rng: Rng::new(seed ^ 0xDEC0DE ^ (id as u64).wrapping_mul(0x9E37_79B9)),
+            selector,
+            seq_exit,
+            alpha: profile.alpha,
+        }
+    }
+
+    /// Draft `n` tokens: content-range token ids with confidence and
+    /// importance signals shaped to exercise both selector stages.
+    pub fn draft_chunk(&mut self, n: usize) -> DraftedChunk {
+        let mut ch = DraftedChunk {
+            tokens: Vec::with_capacity(n),
+            confs: Vec::with_capacity(n),
+            imps: Vec::with_capacity(n),
+        };
+        for _ in 0..n {
+            ch.tokens.push(VAL0 + self.rng.below(N_VALS) as u32);
+            ch.confs.push((0.35 + 0.65 * self.rng.f64()) as f32);
+            ch.imps.push((4.0 * self.rng.f64()) as f32);
+        }
+        ch
+    }
+
+    /// The real two-stage offload decision plus the sequence-exit gate
+    /// (`generated` = tokens generated so far in this request).
+    pub fn decide_offload(&mut self, ch: &DraftedChunk, generated: usize) -> bool {
+        let d = self.selector.decide(&ch.confs, &ch.imps);
+        d.offload && self.seq_exit.offload_allowed(generated)
+    }
+
+    /// The device's parallel-inference bet for an in-flight chunk:
+    /// `(predicted rejection position, substituted alternative token)`.
+    pub fn pi_bet(&mut self, ch: &DraftedChunk) -> Option<(usize, u32)> {
+        let r_star = predict_rejection(self.alpha, &ch.confs, &mut self.rng)?;
+        let probs = Self::dense_probs(ch.tokens[r_star], ch.confs[r_star]);
+        Some((r_star, alternative_token(&probs, ch.tokens[r_star])))
+    }
+
+    /// Dense probability row consistent with `(token, conf)`: `conf` on
+    /// the drafted token, the rest split over two deterministic rivals
+    /// (enough structure for top-k compression and PI alternatives).
+    pub fn dense_probs(token: u32, conf: f32) -> Vec<f32> {
+        let mut p = vec![0f32; VOCAB];
+        let i = (token - VAL0) as u64;
+        let r1 = VAL0 + ((i + 1) % N_VALS) as u32;
+        let r2 = VAL0 + ((i + 2) % N_VALS) as u32;
+        p[token as usize] = conf;
+        p[r1 as usize] = (1.0 - conf) * 0.7;
+        p[r2 as usize] = (1.0 - conf) * 0.3;
+        p
+    }
+
+    /// Deterministic continuation token `j` of a PI speculation seeded
+    /// at `alt` (no RNG: the draw count must not depend on reply
+    /// timing, or determinism across schedules would break).
+    pub fn pi_token(alt: u32, j: usize) -> u32 {
+        VAL0 + (((alt - VAL0) as u64 + 5 * (j as u64 + 1)) % N_VALS) as u32
+    }
+}
+
+// ---------------------------------------------------------------------------
+// driver internals
+// ---------------------------------------------------------------------------
+
+enum Ev {
+    /// A request from the arrival trace lands on its device.
+    Arrive { device: u32, prompt: Vec<u32> },
+    /// The device finished local compute; materialise the drafted chunk
+    /// and act on it.
+    Wake { device: u32 },
+    /// An uplink message reaches the cloud.
+    Uplink { device: u32, req: CloudRequest },
+    /// One scheduler iteration completes.
+    CloudTick,
+    /// A verification reply reaches its device.
+    Reply { device: u32, accepted: usize, next_token: u32 },
+}
+
+struct Inflight {
+    start_len: usize,
+    draft: Vec<u32>,
+    t_sent: f64,
+    /// `(r_star, alt)` parallel-inference bet, if one was placed.
+    pi: Option<(usize, u32)>,
+}
+
+struct Active {
+    req_id: u64,
+    t_arrival: f64,
+    /// Prompt followed by committed tokens.
+    seq: Vec<u32>,
+    /// Prefix of `seq` already in the cloud's KV.
+    cloud_len: usize,
+    generated: usize,
+    t_first: Option<f64>,
+    t_last: f64,
+    inflight: Option<Inflight>,
+}
+
+struct Dev {
+    model: SimDevice,
+    link: SimLink,
+    pending: VecDeque<(f64, Vec<u32>)>,
+    active: Option<Active>,
+    next_req: u64,
+}
+
+#[derive(Default)]
+struct TenantAcc {
+    ttft: LatencyRecorder,
+    tbt: LatencyRecorder,
+    requests: usize,
+    completed: usize,
+    slo_ok_ttft: usize,
+    /// Completed requests with ≥2 tokens (a defined inter-token gap).
+    tbt_eligible: usize,
+    slo_ok_tbt: usize,
+}
+
+struct FleetRun<'a, E: BatchEngine> {
+    cfg: &'a FleetConfig,
+    sched: Scheduler<E>,
+    q: EventQueue<Ev>,
+    devs: Vec<Dev>,
+    acc: Vec<TenantAcc>,
+    cloud_active: bool,
+    /// End of the last scheduled service period — the single simulated
+    /// cloud can never run two ticks concurrently.
+    cloud_busy_until: f64,
+    measured_compute: bool,
+    offered: usize,
+    completed: usize,
+    generated_tokens: u64,
+    offload_rounds: u64,
+    local_chunks: u64,
+    pi_hits: u64,
+    pi_misses: u64,
+    bytes_up: u64,
+    bytes_down: u64,
+}
+
+impl<E: BatchEngine> FleetRun<'_, E> {
+    fn on_arrive(&mut self, t: f64, device: usize, prompt: Vec<u32>) {
+        self.offered += 1;
+        let tenant = self.devs[device].model.tenant;
+        self.acc[tenant].requests += 1;
+        self.devs[device].pending.push_back((t, prompt));
+        if self.devs[device].active.is_none() {
+            self.start_next(t, device);
+        }
+    }
+
+    /// Begin the device's next queued request: prefill, then draft the
+    /// first chunk (the wake event materialises it).
+    fn start_next(&mut self, t: f64, device: usize) {
+        let dev = &mut self.devs[device];
+        let Some((t_arrival, prompt)) = dev.pending.pop_front() else { return };
+        let req_id = ((device as u64) << 32) | dev.next_req;
+        dev.next_req += 1;
+        let prompt_len = prompt.len();
+        dev.active = Some(Active {
+            req_id,
+            t_arrival,
+            seq: prompt,
+            cloud_len: 0,
+            generated: 0,
+            t_first: None,
+            t_last: 0.0,
+            inflight: None,
+        });
+        let gamma = self.chunk_len(device);
+        let delay = prompt_len as f64 * self.cfg.device_prefill_s
+            + gamma as f64 * self.cfg.device_step_s;
+        self.q.push(t + delay, Ev::Wake { device: device as u32 });
+    }
+
+    /// Draft tokens the next chunk will hold (γ capped by the budget).
+    fn chunk_len(&self, device: usize) -> usize {
+        let a = self.devs[device].active.as_ref().expect("active request");
+        self.cfg.params.gamma.min(self.cfg.params.max_new_tokens - a.generated).max(1)
+    }
+
+    fn on_wake(&mut self, t: f64, device: usize) -> Result<()> {
+        let gamma = self.chunk_len(device);
+        let step_s = self.cfg.device_step_s;
+        let dev = &mut self.devs[device];
+        let a = dev.active.as_mut().expect("wake without an active request");
+        debug_assert!(a.inflight.is_none(), "wake while a round is in flight");
+        let chunk = dev.model.draft_chunk(gamma);
+        let offload = dev.model.decide_offload(&chunk, a.generated);
+
+        if !offload {
+            // commit locally; token 0 of the chunk finished drafting at
+            // t − (γ−1)·step
+            self.local_chunks += 1;
+            let t0 = t - (gamma - 1) as f64 * step_s;
+            if a.t_first.is_none() {
+                a.t_first = Some(t0);
+            }
+            a.t_last = t;
+            a.seq.extend_from_slice(&chunk.tokens);
+            a.generated += chunk.tokens.len();
+            if a.generated >= self.cfg.params.max_new_tokens {
+                self.finish_request(t, device);
+            } else {
+                let next = self.chunk_len(device);
+                self.q.push(t + next as f64 * step_s, Ev::Wake { device: device as u32 });
+            }
+            return Ok(());
+        }
+
+        // ---- offload round ----
+        self.offload_rounds += 1;
+        let uncached: Vec<u32> = a.seq[a.cloud_len..].to_vec();
+        let dists: Vec<_> = chunk
+            .tokens
+            .iter()
+            .zip(&chunk.confs)
+            .map(|(&tok, &c)| compress_dist(&SimDevice::dense_probs(tok, c), 8))
+            .collect();
+        // charge the real wire size without materialising a message
+        // just to drop it (hot path at fleet scale)
+        let up_bytes = UplinkMsg::wire_bytes_for(uncached.len(), chunk.tokens.len(), &dists);
+        self.bytes_up += up_bytes as u64;
+        let up_delay = dev.link.uplink_s(up_bytes);
+        let pi = if self.cfg.params.parallel_inference && chunk.tokens.len() > 1 {
+            dev.model.pi_bet(&chunk)
+        } else {
+            None
+        };
+        a.inflight = Some(Inflight {
+            start_len: a.seq.len(),
+            draft: chunk.tokens.clone(),
+            t_sent: t,
+            pi,
+        });
+        let req = CloudRequest::Verify {
+            request_id: a.req_id,
+            device_id: device as u32,
+            uncached,
+            draft: chunk.tokens,
+            dists,
+            greedy: self.cfg.params.greedy,
+        };
+        self.q.push(t + up_delay, Ev::Uplink { device: device as u32, req });
+        Ok(())
+    }
+
+    fn on_uplink(&mut self, t: f64, device: usize, req: CloudRequest) -> Result<()> {
+        let tenant = self.devs[device].model.tenant;
+        self.sched.submit_tenant(tenant, req)?;
+        self.wake_cloud(t);
+        Ok(())
+    }
+
+    fn wake_cloud(&mut self, t: f64) {
+        if !self.cloud_active && !self.sched.is_idle() {
+            self.cloud_active = true;
+            // a wake landing inside the previous tick's service period
+            // waits it out: one cloud, one service interval at a time
+            self.q.push(t.max(self.cloud_busy_until), Ev::CloudTick);
+        }
+    }
+
+    fn on_cloud_tick(&mut self, t: f64) -> Result<()> {
+        let rows0 = self.sched.stats.rows_executed;
+        let (events, dt) = self.sched.tick()?;
+        let rows = self.sched.stats.rows_executed - rows0;
+        let service = if self.measured_compute {
+            dt.max(1e-6)
+        } else {
+            self.cfg.cloud_iter_s + rows as f64 * self.cfg.cloud_row_s
+        };
+        let t_done = t + service;
+        self.cloud_busy_until = t_done;
+        for e in events {
+            if let CloudEvent::VerifyDone { request_id, device_id, outcome } = e {
+                let device = device_id as usize;
+                let reply = DownlinkMsg {
+                    request_id,
+                    accepted: outcome.accepted as u32,
+                    next_token: outcome.next_token,
+                };
+                let bytes = reply.wire_bytes();
+                self.bytes_down += bytes as u64;
+                let dl = self.devs[device].link.downlink_s(bytes);
+                self.q.push(
+                    t_done + dl,
+                    Ev::Reply {
+                        device: device_id,
+                        accepted: outcome.accepted,
+                        next_token: outcome.next_token,
+                    },
+                );
+            }
+        }
+        if self.sched.is_idle() {
+            self.cloud_active = false;
+        } else {
+            self.q.push(t_done, Ev::CloudTick);
+        }
+        Ok(())
+    }
+
+    fn on_reply(&mut self, t: f64, device: usize, accepted: usize, next_token: u32) {
+        let max_new = self.cfg.params.max_new_tokens;
+        let (delta, step_s) = (self.cfg.params.delta, self.cfg.device_step_s);
+        let dev = &mut self.devs[device];
+        let a = dev.active.as_mut().expect("reply without an active request");
+        let inf = a.inflight.take().expect("reply without an in-flight round");
+        let accepted = accepted.min(inf.draft.len());
+        a.cloud_len = inf.start_len + accepted;
+
+        // tokens the PI speculation managed to draft while waiting
+        let mut t_now = t;
+        let mut commit: Vec<u32> = Vec::new();
+        let mut adopted = false;
+        if let Some((r_star, alt)) = inf.pi {
+            let elapsed = (t - inf.t_sent).max(0.0);
+            let n_pi = ((elapsed / step_s) as usize).clamp(1, 1 + delta);
+            t_now = t.max(inf.t_sent + n_pi as f64 * step_s);
+            if accepted == r_star && accepted < inf.draft.len() && next_token == alt {
+                self.pi_hits += 1;
+                adopted = true;
+                commit.extend_from_slice(&inf.draft[..r_star]);
+                commit.push(alt);
+                for j in 0..n_pi - 1 {
+                    commit.push(SimDevice::pi_token(alt, j));
+                }
+            } else {
+                self.pi_misses += 1;
+            }
+        }
+        let mut ended = false;
+        if !adopted {
+            commit.extend_from_slice(&inf.draft[..accepted]);
+            if next_token == EOS {
+                ended = true; // verifier ended the sequence
+            } else {
+                commit.push(next_token);
+                // the correction must be stepped through the device
+                // before drafting resumes
+                t_now += step_s;
+            }
+        }
+        let room = max_new - a.generated;
+        commit.truncate(room);
+        if !commit.is_empty() {
+            if a.t_first.is_none() {
+                a.t_first = Some(t_now);
+            }
+            a.t_last = t_now;
+            a.seq.extend_from_slice(&commit);
+            a.generated += commit.len();
+        }
+        if ended || a.generated >= max_new {
+            self.finish_request(t_now, device);
+        } else {
+            let next = self.chunk_len(device);
+            self.q.push(t_now + next as f64 * step_s, Ev::Wake { device: device as u32 });
+        }
+    }
+
+    fn finish_request(&mut self, t: f64, device: usize) {
+        let a = self.devs[device].active.take().expect("finishing an active request");
+        if a.cloud_len > 0 {
+            // the cloud holds state for this session; free it
+            let _ = self.sched.submit(CloudRequest::Release { request_id: a.req_id });
+            self.wake_cloud(t);
+        }
+        let tenant = self.devs[device].model.tenant;
+        let acc = &mut self.acc[tenant];
+        acc.completed += 1;
+        self.completed += 1;
+        self.generated_tokens += a.generated as u64;
+        let ttft = a.t_first.unwrap_or(t) - a.t_arrival;
+        acc.ttft.record(ttft);
+        if ttft <= self.cfg.slo_ttft_s {
+            acc.slo_ok_ttft += 1;
+        }
+        // requests with <2 tokens have no inter-token gap: they carry
+        // no TBT sample and sit outside the TBT-SLO denominator
+        // (recording 0.0 would drag percentiles down and inflate SLO
+        // attainment exactly when requests die early)
+        if let (Some(t0), n) = (a.t_first, a.generated) {
+            if n >= 2 {
+                let tbt = (a.t_last - t0) / (n - 1) as f64;
+                acc.tbt.record(tbt);
+                acc.tbt_eligible += 1;
+                if tbt <= self.cfg.slo_tbt_s {
+                    acc.slo_ok_tbt += 1;
+                }
+            }
+        }
+        self.start_next(t, device);
+    }
+}
+
+/// Run the fleet over the artifact-free [`MockBatchEngine`] with the
+/// synthetic offload profile (the default, CI-friendly configuration).
+pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
+    let engine = MockBatchEngine::new(4, 32, VOCAB, 4096);
+    run_fleet_on(cfg, engine, &OffloadProfile::synthetic(), false)
+}
+
+/// Run the fleet over an arbitrary [`BatchEngine`]. With
+/// `measured_compute` the virtual clock advances by the engine's
+/// *measured* per-tick compute (for the real PJRT engine on artifact
+/// machines); otherwise by the modelled
+/// `cloud_iter_s + rows × cloud_row_s`.
+pub fn run_fleet_on<E: BatchEngine>(
+    cfg: &FleetConfig,
+    engine: E,
+    profile: &OffloadProfile,
+    measured_compute: bool,
+) -> Result<FleetReport> {
+    if cfg.n_devices == 0 || cfg.tenants == 0 {
+        bail!("fleet needs ≥1 device and ≥1 tenant");
+    }
+    let positive = |x: f64| x.is_finite() && x > 0.0;
+    if !positive(cfg.duration_s) || !positive(cfg.rate_rps) {
+        bail!("fleet needs a positive duration and arrival rate");
+    }
+    if cfg.params.max_new_tokens == 0 || cfg.params.gamma == 0 {
+        bail!("fleet needs max_new_tokens ≥ 1 and gamma ≥ 1");
+    }
+    let weights = if cfg.tenant_weights.is_empty() {
+        vec![1.0; cfg.tenants]
+    } else {
+        cfg.tenant_weights.clone()
+    };
+    if weights.len() != cfg.tenants {
+        bail!("{} tenant weights for {} tenants", weights.len(), cfg.tenants);
+    }
+    if weights.iter().any(|w| !w.is_finite() || *w <= 0.0) {
+        bail!("tenant weights must be finite and positive: {weights:?}");
+    }
+
+    let t_wall = Instant::now();
+    let mut policy = cfg.params.batch.clone();
+    policy.tenant_weights = weights.clone();
+    let mut run = FleetRun {
+        cfg,
+        sched: Scheduler::with_policy(engine, cfg.seed ^ 0xF1EE7, policy),
+        q: EventQueue::new(),
+        devs: (0..cfg.n_devices)
+            .map(|d| Dev {
+                model: SimDevice::new(d as u32, d % cfg.tenants, profile, &cfg.params, cfg.seed),
+                link: SimLink::new(
+                    cfg.link.unwrap_or_else(|| LinkProfile::fleet_mix(d)),
+                    cfg.seed ^ 0x99 ^ ((d as u64) << 8),
+                ),
+                pending: VecDeque::new(),
+                active: None,
+                next_req: 0,
+            })
+            .collect(),
+        acc: (0..cfg.tenants)
+            .map(|t| TenantAcc {
+                ttft: if cfg.reservoir == 0 {
+                    LatencyRecorder::new()
+                } else {
+                    LatencyRecorder::with_reservoir(cfg.reservoir, cfg.seed ^ t as u64)
+                },
+                tbt: if cfg.reservoir == 0 {
+                    LatencyRecorder::new()
+                } else {
+                    LatencyRecorder::with_reservoir(cfg.reservoir, cfg.seed ^ 0x7B7 ^ t as u64)
+                },
+                ..TenantAcc::default()
+            })
+            .collect(),
+        cloud_active: false,
+        cloud_busy_until: 0.0,
+        measured_compute,
+        offered: 0,
+        completed: 0,
+        generated_tokens: 0,
+        offload_rounds: 0,
+        local_chunks: 0,
+        pi_hits: 0,
+        pi_misses: 0,
+        bytes_up: 0,
+        bytes_down: 0,
+    };
+
+    // arrival trace (real SynthLang prompts over the task mix)
+    let trace = match &cfg.burst {
+        Some(p) => mmpp_trace(cfg.seed ^ 0x7ACE, cfg.n_devices, p, cfg.duration_s, &TASKS),
+        None => {
+            poisson_trace(cfg.seed ^ 0x7ACE, cfg.n_devices, cfg.rate_rps, cfg.duration_s, &TASKS)
+        }
+    };
+    for ev in trace {
+        run.q.push(ev.at_s, Ev::Arrive { device: ev.device as u32, prompt: ev.sample.prompt });
+    }
+
+    // drain the event heap; the cap is a runaway-loop backstop, far
+    // above anything a legitimate configuration generates
+    let max_events: u64 = 100_000_000;
+    let mut n_events = 0u64;
+    while let Some((t, ev)) = run.q.pop() {
+        if cfg.stop_s > 0.0 && t > cfg.stop_s {
+            break; // windowed measurement: drop the residual backlog
+        }
+        n_events += 1;
+        if n_events > max_events {
+            bail!("fleet sim exceeded {max_events} events (runaway configuration?)");
+        }
+        match ev {
+            Ev::Arrive { device, prompt } => run.on_arrive(t, device as usize, prompt),
+            Ev::Wake { device } => run.on_wake(t, device as usize)?,
+            Ev::Uplink { device, req } => run.on_uplink(t, device as usize, req)?,
+            Ev::CloudTick => run.on_cloud_tick(t)?,
+            Ev::Reply { device, accepted, next_token } => {
+                run.on_reply(t, device as usize, accepted, next_token)
+            }
+        }
+    }
+
+    // ---- assemble the report ----
+    // in a windowed run the clock has already advanced onto the first
+    // discarded post-window event; clamp to the measurement window
+    let virtual_s = if cfg.stop_s > 0.0 {
+        run.q.now().min(cfg.stop_s)
+    } else {
+        run.q.now()
+    };
+    let stats = run.sched.stats.clone();
+    let tstats = run.sched.tenant_stats.clone();
+    let mut tenants = Vec::with_capacity(cfg.tenants);
+    for (t, acc) in run.acc.iter().enumerate() {
+        let done = acc.completed.max(1);
+        tenants.push(TenantReport {
+            tenant: t,
+            weight: weights[t],
+            requests: acc.requests,
+            completed: acc.completed,
+            ttft: acc.ttft.summary(),
+            tbt: acc.tbt.summary(),
+            slo_ttft_frac: acc.slo_ok_ttft as f64 / done as f64,
+            slo_tbt_frac: acc.slo_ok_tbt as f64 / acc.tbt_eligible.max(1) as f64,
+            rows_executed: tstats[t].rows_executed,
+            verifies_done: tstats[t].verifies_done,
+            draft_tokens_accepted: tstats[t].draft_tokens_accepted,
+        });
+    }
+    let mut report = FleetReport {
+        tenants,
+        offered: run.offered,
+        completed: run.completed,
+        virtual_s,
+        wall_s: t_wall.elapsed().as_secs_f64(),
+        generated_tokens: run.generated_tokens,
+        offload_rounds: run.offload_rounds,
+        local_chunks: run.local_chunks,
+        pi_hits: run.pi_hits,
+        pi_misses: run.pi_misses,
+        cloud_draft_rows: stats.draft_tokens_seen,
+        cost: 0.0,
+        cloud_iterations: stats.iterations,
+        swap_ins: stats.swap_ins,
+        swap_outs: stats.swap_outs,
+        swap_bytes: stats.swap_bytes,
+        bytes_up: run.bytes_up,
+        bytes_down: run.bytes_down,
+    };
+    let cost_model = CostModel {
+        cloud_tokens: report.cloud_draft_rows,
+        generated_tokens: report.generated_tokens,
+        mean_tbt_s: report.mean_tbt_s(),
+        cloud_model: cfg.cloud_model.clone(),
+    };
+    report.cost = cost_model.cost(&PackingFactors::default());
+    Ok(report)
+}

@@ -1,0 +1,42 @@
+//! Fleet simulator: virtual-time serving of thousands of devices.
+//!
+//! The threaded driver (`crate::coordinator::serve`) spawns a real OS
+//! thread per device, which tops out at a handful of devices — nowhere
+//! near the paper's "at scale" regime. This module replaces threads
+//! and sleeps with a **deterministic discrete-event simulation** in
+//! which N simulated devices each run the *genuine* Synera device loop
+//! (draft → [`crate::device::offload::Selector`] → parallel inference
+//! via [`crate::device::parallel`] → verify) and a single simulated
+//! cloud advances the *real* [`crate::cloud::scheduler::Scheduler`] —
+//! over [`crate::testutil::MockBatchEngine`] by default, or the PJRT
+//! [`crate::model::CloudEngine`] on artifact machines. Thousands of
+//! devices simulate per wall-second, so the queueing/fairness regime
+//! of Fig. 15 can finally be explored at population scale
+//! (`benches/fig19_fleet.rs`).
+//!
+//! ## The virtual-clock contract
+//!
+//! Nothing in the simulation sleeps or reads the wall clock. Every
+//! latency source *returns a delay* which the driver adds to the
+//! virtual clock instead of waiting it out:
+//!
+//! * [`crate::net::SimLink`] already returns uplink/downlink seconds —
+//!   the threaded server sleeps them, the simulator schedules events
+//!   at `now + delay`;
+//! * device compute is priced per draft/prefill token
+//!   ([`fleet::FleetConfig::device_step_s`]);
+//! * a cloud scheduler iteration costs its modelled (or, with a real
+//!   engine, measured) service time, during which completed rounds'
+//!   downlinks are scheduled.
+//!
+//! Events fire from a heap keyed by `(time, seq)`
+//! ([`clock::EventQueue`]), so ties resolve by insertion order and a
+//! run is bit-reproducible from its seed — `tests/fleet_sim.rs` gates
+//! this, along with the weighted-fair-queueing share property of
+//! [`crate::cloud::fairness`].
+
+pub mod clock;
+pub mod fleet;
+
+pub use clock::EventQueue;
+pub use fleet::{run_fleet, run_fleet_on, FleetConfig, FleetReport, SimDevice, TenantReport};

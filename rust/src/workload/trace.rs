@@ -1,7 +1,10 @@
-//! Multi-user request traces for the scalability experiments (Fig. 15).
+//! Multi-user request traces for the scalability experiments (Fig. 15)
+//! and the fleet simulator (`crate::sim`).
 //!
-//! Poisson arrivals of evaluation samples from a task mix, attributed to
-//! a population of simulated devices.
+//! Arrivals of evaluation samples from a task mix, attributed to a
+//! population of simulated devices: homogeneous Poisson
+//! ([`poisson_trace`]) or a two-state Markov-modulated Poisson process
+//! ([`mmpp_trace`]) for flash-crowd scenarios.
 
 use crate::util::rng::Rng;
 use crate::workload::synthlang::{generate, Sample, Task, TASKS};
@@ -37,6 +40,88 @@ pub fn poisson_trace(
         let task = tasks[rng.below(tasks.len() as u64) as usize];
         let device = rng.below(n_devices as u64) as usize;
         out.push(TraceEvent { at_s: t, device, sample: generate(task, 1, 1000 + idx) });
+        idx += 1;
+    }
+    out
+}
+
+/// Two-state Markov-modulated Poisson arrival profile: the trace
+/// alternates between a *quiet* and a *burst* regime, each holding for
+/// an exponentially distributed dwell time, with Poisson arrivals at
+/// the regime's rate while it holds. The long-run offered rate is
+/// `(quiet_rps·mean_quiet_s + burst_rps·mean_burst_s) /
+/// (mean_quiet_s + mean_burst_s)`.
+#[derive(Debug, Clone, Copy)]
+pub struct BurstProfile {
+    /// Arrival rate in the quiet regime (req/s; may be 0).
+    pub quiet_rps: f64,
+    /// Arrival rate in the burst regime (req/s).
+    pub burst_rps: f64,
+    /// Mean dwell time of the quiet regime (s).
+    pub mean_quiet_s: f64,
+    /// Mean dwell time of the burst regime (s).
+    pub mean_burst_s: f64,
+}
+
+impl BurstProfile {
+    /// Long-run average offered rate (req/s).
+    pub fn mean_rps(&self) -> f64 {
+        (self.quiet_rps * self.mean_quiet_s + self.burst_rps * self.mean_burst_s)
+            / (self.mean_quiet_s + self.mean_burst_s)
+    }
+
+    /// A flash-crowd profile averaging `rate_rps`: quiet at 40% of the
+    /// mean for 8 s spells, bursting to ~4× the mean for 2 s spells.
+    pub fn flash_crowd(rate_rps: f64) -> BurstProfile {
+        let (mq, mb) = (8.0, 2.0);
+        let quiet = 0.4 * rate_rps;
+        // solve burst_rps so mean_rps() == rate_rps
+        let burst = (rate_rps * (mq + mb) - quiet * mq) / mb;
+        BurstProfile { quiet_rps: quiet, burst_rps: burst, mean_quiet_s: mq, mean_burst_s: mb }
+    }
+}
+
+/// Open-loop bursty trace (two-state MMPP, starting in the quiet
+/// regime). Deterministic given the seed; arrivals are sorted. Regime
+/// switches exploit the memorylessness of the exponential: a candidate
+/// arrival falling past the regime boundary is discarded and redrawn
+/// under the next regime, which leaves the process exact.
+pub fn mmpp_trace(
+    seed: u64,
+    n_devices: usize,
+    profile: &BurstProfile,
+    duration_s: f64,
+    tasks: &[Task],
+) -> Vec<TraceEvent> {
+    assert!(!tasks.is_empty() && n_devices > 0);
+    assert!(
+        profile.quiet_rps >= 0.0 && profile.burst_rps > 0.0,
+        "burst regime must have a positive rate"
+    );
+    assert!(profile.mean_quiet_s > 0.0 && profile.mean_burst_s > 0.0);
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    let mut burst = false;
+    let mut regime_end = rng.exp(1.0 / profile.mean_quiet_s);
+    let mut idx = 0u64;
+    while t < duration_s {
+        let rate = if burst { profile.burst_rps } else { profile.quiet_rps };
+        let cand = if rate > 0.0 { t + rng.exp(rate) } else { f64::INFINITY };
+        if cand >= regime_end {
+            t = regime_end;
+            burst = !burst;
+            let dwell = if burst { profile.mean_burst_s } else { profile.mean_quiet_s };
+            regime_end = t + rng.exp(1.0 / dwell);
+            continue;
+        }
+        t = cand;
+        if t >= duration_s {
+            break;
+        }
+        let task = tasks[rng.below(tasks.len() as u64) as usize];
+        let device = rng.below(n_devices as u64) as usize;
+        out.push(TraceEvent { at_s: t, device, sample: generate(task, 1, 5000 + idx) });
         idx += 1;
     }
     out
@@ -80,6 +165,59 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.device, y.device);
             assert_eq!(x.sample.prompt, y.sample.prompt);
+        }
+    }
+
+    #[test]
+    fn mmpp_trace_is_deterministic() {
+        let p = BurstProfile::flash_crowd(20.0);
+        let a = mmpp_trace(11, 8, &p, 30.0, &TASKS);
+        let b = mmpp_trace(11, 8, &p, 30.0, &TASKS);
+        assert_eq!(a.len(), b.len());
+        assert!(!a.is_empty());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_s.to_bits(), y.at_s.to_bits());
+            assert_eq!(x.device, y.device);
+            assert_eq!(x.sample.prompt, y.sample.prompt);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s, "arrivals sorted");
+        }
+        assert!(a.iter().all(|e| e.device < 8 && e.at_s < 30.0));
+    }
+
+    #[test]
+    fn mmpp_rate_is_calibrated_and_bursty() {
+        let p = BurstProfile {
+            quiet_rps: 2.0,
+            burst_rps: 50.0,
+            mean_quiet_s: 5.0,
+            mean_burst_s: 1.0,
+        };
+        // expected long-run rate: (2·5 + 50·1)/6 = 10 req/s
+        assert!((p.mean_rps() - 10.0).abs() < 1e-12);
+        let dur = 3000.0;
+        let tr = mmpp_trace(5, 4, &p, dur, &[Task::Xsum]);
+        let rate = tr.len() as f64 / dur;
+        assert!((rate - 10.0).abs() < 1.5, "long-run rate {rate}");
+        // burstiness: per-second arrival counts must be overdispersed
+        // relative to Poisson (index of dispersion ≫ 1)
+        let mut counts = vec![0usize; dur as usize];
+        for e in &tr {
+            counts[e.at_s as usize] += 1;
+        }
+        let n = counts.len() as f64;
+        let mean = counts.iter().sum::<usize>() as f64 / n;
+        let var = counts.iter().map(|&c| (c as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(var / mean > 2.0, "dispersion {:.2} not bursty", var / mean);
+    }
+
+    #[test]
+    fn flash_crowd_profile_hits_target_mean() {
+        for r in [1.0, 16.0, 250.0] {
+            let p = BurstProfile::flash_crowd(r);
+            assert!((p.mean_rps() - r).abs() < 1e-9, "rate {r}");
+            assert!(p.burst_rps > p.quiet_rps);
         }
     }
 

@@ -233,6 +233,64 @@ fn paged_generates_beyond_slots_all_complete() {
     assert_eq!(sched.sessions().free_blocks(), sched.sessions().block_capacity());
 }
 
+/// Swap-cost-aware eviction: among the LRU candidate window the victim
+/// is the session with the fewest committed KV rows (cheapest to swap
+/// back), not simply the least recently used one.
+#[test]
+fn eviction_prefers_fewest_rows_among_lru_candidates() {
+    let mut eng = MockBatchEngine::new(3, 8, 64, 64);
+    let mut mgr = SessionManager::for_engine(&eng, &paged_policy(8));
+    let pinned: HashSet<u64> = HashSet::new();
+    // residency (= LRU) order 1, 2, 3 with committed rows 8, 2, 6
+    for (id, rows) in [(1u64, 8usize), (2, 2), (3, 6)] {
+        mgr.open(id).unwrap();
+        let slot = mgr.ensure_resident(id, &mut eng, &pinned).unwrap().unwrap();
+        let toks: Vec<u32> = (0..rows as u32).map(|i| 9 + i).collect();
+        eng.run_batch(&[SlotChunk { slot, tokens: toks }]).unwrap();
+        mgr.note_rows(id, rows);
+    }
+    // the window over 3 residents spans the 2 oldest (⌈3/2⌉); pure LRU
+    // would park session 1 (oldest), cost-aware parks 2
+    mgr.open(4).unwrap();
+    mgr.ensure_resident(4, &mut eng, &pinned).unwrap().unwrap();
+    assert!(mgr.slot_of(2).is_none(), "fewest-rows session is the victim");
+    assert!(mgr.slot_of(1).is_some(), "older but larger session survives");
+    assert!(mgr.slot_of(3).is_some());
+    assert_eq!(mgr.stats().swap_outs, 1);
+}
+
+/// ...but the cost preference only applies *within* the LRU window: a
+/// cheap session that was scheduled recently enough to sit outside the
+/// `EVICT_CANDIDATES` oldest residents is never chosen over them.
+#[test]
+fn eviction_cost_preference_is_bounded_by_the_lru_window() {
+    assert!(
+        synera::cloud::sessions::EVICT_CANDIDATES >= 3,
+        "test layout assumes a window of 3 over 5 residents (cap ≥ ⌈5/2⌉)"
+    );
+    let mut eng = MockBatchEngine::new(5, 8, 64, 64);
+    let mut mgr = SessionManager::for_engine(&eng, &paged_policy(12));
+    let pinned: HashSet<u64> = HashSet::new();
+    // LRU order 1..5; session 5 (most recent) is empty — the cheapest
+    // possible swap — but sits outside the ⌈5/2⌉ = 3-oldest window
+    for (id, rows) in [(1u64, 8usize), (2, 6), (3, 4), (4, 6), (5, 0)] {
+        mgr.open(id).unwrap();
+        let slot = mgr.ensure_resident(id, &mut eng, &pinned).unwrap().unwrap();
+        if rows > 0 {
+            let toks: Vec<u32> = (0..rows as u32).map(|i| 9 + i).collect();
+            eng.run_batch(&[SlotChunk { slot, tokens: toks }]).unwrap();
+            mgr.note_rows(id, rows);
+        }
+    }
+    mgr.open(6).unwrap();
+    mgr.ensure_resident(6, &mut eng, &pinned).unwrap().unwrap();
+    assert!(mgr.slot_of(5).is_some(), "recent empty session is outside the window");
+    assert!(mgr.slot_of(3).is_none(), "cheapest of the 3 oldest is the victim");
+    for survivor in [1u64, 2, 4] {
+        assert!(mgr.slot_of(survivor).is_some());
+    }
+}
+
 /// A released-while-parked session returns its blocks to the pool.
 #[test]
 fn releasing_a_parked_session_frees_its_blocks() {
