@@ -6,13 +6,29 @@
 //! Sweeps devices 16 → 4096 at three per-device request rates and
 //! reports worst-tenant p95 TTFT with the fleet's TTFT-SLO attainment
 //! fraction, locating the saturation knee of one simulated cloud.
-//! Artifact-free: the cloud is the deterministic mock engine with a
-//! modelled per-row service time, so this bench runs anywhere
-//! `cargo bench` does.
+//! A second table holds the fleet at 4096 devices past that knee and
+//! sweeps router replicas R ∈ {1, 2, 4, 8}: scaling out recovers
+//! completions and SLO attainment, with migration traffic reported
+//! alongside. Artifact-free: the cloud is the deterministic mock
+//! engine with a modelled per-row service time, so this bench runs
+//! anywhere `cargo bench` does.
 
 use synera::bench::Table;
 use synera::config::{BatchPolicy, SyneraParams};
-use synera::sim::{run_fleet, FleetConfig};
+use synera::sim::{run_fleet, FleetConfig, FleetReport};
+
+/// Worst-tenant p95 TTFT and completions-weighted TTFT-SLO fraction.
+fn fleet_slo(rep: &FleetReport) -> (f64, f64) {
+    let mut slo = 0.0;
+    let mut done = 0usize;
+    let mut p95: f64 = 0.0;
+    for tn in &rep.tenants {
+        p95 = p95.max(tn.ttft.p95);
+        slo += tn.slo_ttft_frac * tn.completed as f64;
+        done += tn.completed;
+    }
+    (p95, if done == 0 { 0.0 } else { slo / done as f64 })
+}
 
 fn main() -> anyhow::Result<()> {
     let rates = [0.125f64, 0.25, 0.5];
@@ -41,15 +57,7 @@ fn main() -> anyhow::Result<()> {
             };
             let rep = run_fleet(&cfg)?;
             wall += rep.wall_s;
-            let mut slo = 0.0;
-            let mut done = 0usize;
-            let mut p95: f64 = 0.0;
-            for tn in &rep.tenants {
-                p95 = p95.max(tn.ttft.p95);
-                slo += tn.slo_ttft_frac * tn.completed as f64;
-                done += tn.completed;
-            }
-            let slo_frac = if done == 0 { 0.0 } else { slo / done as f64 };
+            let (p95, slo_frac) = fleet_slo(&rep);
             cells.push(format!("{:.0}ms / {:.0}%", p95 * 1e3, slo_frac * 100.0));
         }
         cells.push(format!("{wall:.2}"));
@@ -57,5 +65,45 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
     println!("(worst-tenant p95; SLO fraction is completions-weighted across tenants)");
+
+    // ---- replica axis: scale the saturated 4096-device point out ----
+    let mut t2 = Table::new(
+        "Fig 19b: router replicas at 4096 devices, 0.25 req/s/dev (windowed)",
+        &["replicas", "done", "p95 ttft", "slo-ttft", "migrations", "migr B", "wall s"],
+    );
+    for replicas in [1usize, 2, 4, 8] {
+        let cfg = FleetConfig {
+            n_devices: 4096,
+            duration_s: 10.0,
+            rate_rps: 1024.0,
+            stop_s: 20.0,
+            tenants: 4,
+            params: SyneraParams {
+                batch: BatchPolicy {
+                    max_sessions: 64,
+                    replicas,
+                    // migrate when replica loads drift apart by > 8
+                    rebalance_threshold: 8,
+                    ..BatchPolicy::default()
+                },
+                ..SyneraParams::default()
+            },
+            seed: 0xF19B,
+            ..FleetConfig::default()
+        };
+        let rep = run_fleet(&cfg)?;
+        let (p95, slo_frac) = fleet_slo(&rep);
+        t2.row(&[
+            replicas.to_string(),
+            format!("{}/{}", rep.completed, rep.offered),
+            format!("{:.0}ms", p95 * 1e3),
+            format!("{:.0}%", slo_frac * 100.0),
+            rep.migrations.to_string(),
+            rep.migration_bytes.to_string(),
+            format!("{:.2}", rep.wall_s),
+        ]);
+    }
+    t2.print();
+    println!("(same seed per row; per-tenant reports are bit-reproducible at any fixed R)");
     Ok(())
 }

@@ -108,6 +108,19 @@ impl<T> WfqQueue<T> {
         self.len == 0
     }
 
+    /// Queued items for one tenant (0 for out-of-range tenants) — the
+    /// per-tenant backlog signal the router tier load-balances on.
+    pub fn len_of(&self, tenant: usize) -> usize {
+        self.queues.get(tenant).map_or(0, |q| q.len())
+    }
+
+    /// Does any queued item (any tenant) satisfy `pred`? Read-only
+    /// companion to [`WfqQueue::retain`] for busy-checks that must not
+    /// disturb stamps or credit.
+    pub fn any<F: FnMut(&T) -> bool>(&self, mut pred: F) -> bool {
+        self.queues.iter().any(|q| q.iter().any(|e| pred(&e.item)))
+    }
+
     /// Stamp the tenant's next virtual finish time for `cost` rows,
     /// returning `(finish, credit charged)`.
     fn stamp(&mut self, tenant: usize, cost: f64) -> (f64, f64) {

@@ -3,14 +3,19 @@
 //! decode rows co-scheduled per iteration under a token budget — over
 //! the slot-based [`crate::model::CloudEngine`], with paged logical
 //! sessions ([`sessions`]) so concurrency is bounded by host memory
-//! rather than the compiled batch width.
+//! rather than the compiled batch width. At fleet scale, a [`router`]
+//! tier fronts `R` independent scheduler replicas with tenant-aware
+//! load balancing, session affinity, and priced cross-replica KV
+//! migration.
 
 pub mod fairness;
+pub mod router;
 pub mod scheduler;
 pub mod sessions;
 pub mod verifier;
 
 pub use fairness::{TenantStats, WfqQueue};
+pub use router::{MigrationRecord, Router, RouterStats};
 pub use scheduler::{CloudEvent, CloudRequest, Scheduler, SchedulerStats};
 pub use sessions::{SessionManager, SwapStats};
 pub use verifier::{verify_chunk, VerifyOutcome};

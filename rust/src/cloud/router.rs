@@ -1,0 +1,378 @@
+//! Router tier: one front door over `R` independent scheduler replicas
+//! (ROADMAP "multi-replica cloud"; SNIPPETS.md §2 router/dispatcher
+//! pattern). Batching scales *within* a [`Scheduler`] up to its engine
+//! capacity; past that knee the only way up is out — more replicas.
+//! The router owns placement, session affinity and cross-replica
+//! session migration, so every other layer (coordinator, simulator,
+//! CLI, benches) talks to one object whether `R` is 1 or 8.
+//!
+//! ## The affinity / migration contract
+//!
+//! * **Placement is load-driven and deterministic.** A session-opening
+//!   request lands on the replica minimising `(queued + in-flight,
+//!   same-tenant open sessions, open sessions, replica index)` — the
+//!   tenant-sessions component spreads a hot tenant across replicas
+//!   instead of piling it onto one. No randomness, no wall clock: same
+//!   submission sequence ⇒ same placement at any fixed `R`.
+//! * **Session affinity holds within a round.** Every follow-up
+//!   request of a known session is forwarded to its *home* replica —
+//!   the KV lives there and nowhere else. A session is **never**
+//!   migrated while it has queued or in-flight work
+//!   ([`Scheduler::session_busy`]): migration happens only at round
+//!   boundaries, between an accepted verify outcome and the next
+//!   uplink.
+//! * **Migration is explicit, priced, and atomic.** [`Router::rebalance`]
+//!   moves quiescent sessions from the most- to the least-loaded
+//!   replica only while the load gap exceeds
+//!   [`Router::rebalance_threshold`]. Each move exports the session's
+//!   committed KV ([`Scheduler::export_session`]), round-trips it
+//!   through the real [`KvMigrateMsg`] wire encoding (f32 planes —
+//!   bit-identical by construction, gated by `tests/router_replicas`),
+//!   imports it on the destination, and charges the encoded byte count
+//!   to [`RouterStats::migration_bytes`] (priced in the cost model at
+//!   [`crate::metrics::cost::MIGRATION_COST_PER_BYTE`]). A failed
+//!   import restores the session at its source — a session is always
+//!   resident on exactly one replica, never two, never zero.
+//! * **A replica is never bypassed.** The router holds no KV and runs
+//!   no model; it only forwards, counts and migrates.
+//!
+//! Determinism: replica 0 inherits the caller's seed unchanged, so at
+//! `R = 1` the router is a transparent pass-through and every
+//! pre-router result is reproduced bit-for-bit. Replicas `r > 0` get
+//! deterministic seed variations (their verifier RNG streams must not
+//! be correlated with replica 0's).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
+use crate::config::BatchPolicy;
+use crate::model::cloud_engine::BatchEngine;
+use crate::net::wire::KvMigrateMsg;
+
+/// Router-level counters (per-replica stats live on the replicas).
+#[derive(Debug, Clone, Default)]
+pub struct RouterStats {
+    /// Requests forwarded to a replica (releases included).
+    pub routed: u64,
+    /// Completed cross-replica session migrations.
+    pub migrations: u64,
+    /// Wire bytes those migrations moved (the priced quantity).
+    pub migration_bytes: u64,
+    /// Rebalance rounds that found a load gap but no movable session
+    /// (everything on the hot replica was busy or too big to import).
+    pub rebalance_skips: u64,
+}
+
+/// One completed cross-replica session move, as surfaced to the caller
+/// (the fleet simulator charges its bytes to the wire and the tenant's
+/// energy account).
+#[derive(Debug, Clone)]
+pub struct MigrationRecord {
+    pub request_id: u64,
+    pub from: usize,
+    pub to: usize,
+    /// [`KvMigrateMsg`] wire bytes.
+    pub bytes: u64,
+    pub tenant: Option<usize>,
+}
+
+/// Front door over `R` scheduler replicas: deterministic tenant-aware
+/// placement, per-session home affinity, threshold-driven rebalancing
+/// with priced KV migration. See the module docs for the contract.
+pub struct Router<E: BatchEngine> {
+    replicas: Vec<Scheduler<E>>,
+    /// Home replica of every live session (single-residency invariant:
+    /// `home[id]` is the one replica whose scheduler may know `id`).
+    home: HashMap<u64, usize>,
+    /// Load gap (queued + in-flight + open sessions) above which
+    /// [`Router::rebalance`] migrates sessions. `0` = rebalancing off.
+    pub rebalance_threshold: usize,
+    /// Cap on migrations per [`Router::rebalance`] call (bounds the
+    /// stall a rebalance can add to one scheduling round).
+    pub max_migrations_per_round: usize,
+    pub stats: RouterStats,
+}
+
+impl<E: BatchEngine> Router<E> {
+    /// Build a router over one scheduler per engine. Replica 0 keeps
+    /// `seed` exactly (R = 1 reproduces the single-scheduler stack
+    /// bit-for-bit); later replicas get deterministic variations.
+    pub fn new(engines: Vec<E>, seed: u64, policy: &BatchPolicy) -> Result<Router<E>> {
+        if engines.is_empty() {
+            bail!("the router needs at least one replica engine");
+        }
+        let replicas = engines
+            .into_iter()
+            .enumerate()
+            .map(|(r, engine)| {
+                let rseed = if r == 0 {
+                    seed
+                } else {
+                    seed ^ (0x5EED ^ r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                };
+                Scheduler::with_policy(engine, rseed, policy.clone())
+            })
+            .collect();
+        Ok(Router {
+            replicas,
+            home: HashMap::new(),
+            rebalance_threshold: policy.rebalance_threshold,
+            max_migrations_per_round: 8,
+            stats: RouterStats::default(),
+        })
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn replica(&self, r: usize) -> &Scheduler<E> {
+        &self.replicas[r]
+    }
+
+    /// Direct replica access (serving drivers read stats and drain
+    /// engines; tests force states). Going around the router for
+    /// *submissions* voids the single-residency invariant.
+    pub fn replica_mut(&mut self, r: usize) -> &mut Scheduler<E> {
+        &mut self.replicas[r]
+    }
+
+    /// The home replica of a live session.
+    pub fn home_of(&self, id: u64) -> Option<usize> {
+        self.home.get(&id).copied()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.replicas.iter().all(|s| s.is_idle())
+    }
+
+    pub fn replica_idle(&self, r: usize) -> bool {
+        self.replicas[r].is_idle()
+    }
+
+    /// Total queued requests across replicas.
+    pub fn queue_depth(&self) -> usize {
+        self.replicas.iter().map(|s| s.queue_depth()).sum()
+    }
+
+    pub fn submit(&mut self, req: CloudRequest) -> Result<usize> {
+        self.submit_from(None, req)
+    }
+
+    pub fn submit_tenant(&mut self, tenant: usize, req: CloudRequest) -> Result<usize> {
+        self.submit_from(Some(tenant), req)
+    }
+
+    /// Route one request, returning the replica it landed on (the
+    /// fleet simulator wakes that replica's tick loop). Known sessions
+    /// go home (affinity); new sessions are placed by load; releases
+    /// follow the session home and retire it from the table.
+    fn submit_from(&mut self, tenant: Option<usize>, req: CloudRequest) -> Result<usize> {
+        let id = match &req {
+            CloudRequest::Generate { request_id, .. }
+            | CloudRequest::Verify { request_id, .. }
+            | CloudRequest::Release { request_id } => *request_id,
+        };
+        if matches!(req, CloudRequest::Release { .. }) {
+            let Some(r) = self.home.remove(&id) else {
+                return Ok(0); // releasing a session no replica knows: no-op
+            };
+            self.forward(r, tenant, req)?;
+            self.stats.routed += 1;
+            return Ok(r);
+        }
+        let r = match self.home.get(&id) {
+            Some(&r) => r,
+            None => self.place(tenant),
+        };
+        self.forward(r, tenant, req)?;
+        self.home.insert(id, r);
+        self.stats.routed += 1;
+        Ok(r)
+    }
+
+    fn forward(&mut self, r: usize, tenant: Option<usize>, req: CloudRequest) -> Result<()> {
+        match tenant {
+            Some(t) => self.replicas[r].submit_tenant(t, req),
+            None => self.replicas[r].submit(req),
+        }
+    }
+
+    /// Placement load: work a new arrival would queue behind.
+    fn load(s: &Scheduler<E>) -> usize {
+        s.queue_depth() + s.in_flight()
+    }
+
+    /// Deterministic placement: first replica minimising (load,
+    /// same-tenant sessions, open sessions, index).
+    fn place(&self, tenant: Option<usize>) -> usize {
+        let key = |r: usize| {
+            let s = &self.replicas[r];
+            (Self::load(s), tenant.map_or(0, |t| s.tenant_sessions(t)), s.active_sessions(), r)
+        };
+        (0..self.replicas.len()).min_by_key(|&r| key(r)).expect("≥1 replica")
+    }
+
+    /// Advance replica `r` one scheduler iteration. Sessions whose
+    /// generation completed retire from the home table (the scheduler
+    /// already closed them).
+    pub fn tick_replica(&mut self, r: usize) -> Result<(Vec<CloudEvent>, f64)> {
+        let (events, dt) = self.replicas[r].tick()?;
+        for e in &events {
+            if let CloudEvent::Generated { request_id, .. } = e {
+                self.home.remove(request_id);
+            }
+        }
+        Ok((events, dt))
+    }
+
+    /// Threshold-driven rebalancing: while the (queued + in-flight +
+    /// open-session) gap between the most- and least-loaded replica
+    /// exceeds [`Router::rebalance_threshold`], migrate the cheapest
+    /// quiescent session (fewest committed KV rows; id breaks ties)
+    /// from hot to cold. Open sessions count toward the gap because a
+    /// quiescent session *is* future load — and because migrating one
+    /// moves exactly one unit, so the loop converges. Returns the
+    /// completed moves for the caller to price (wire seconds, energy).
+    pub fn rebalance(&mut self) -> Result<Vec<MigrationRecord>> {
+        let mut out = Vec::new();
+        if self.rebalance_threshold == 0 || self.replicas.len() < 2 {
+            return Ok(out);
+        }
+        while out.len() < self.max_migrations_per_round {
+            // explicit first-max/first-min scans: deterministic on ties
+            let gap_load =
+                |s: &Scheduler<E>| Self::load(s) + s.active_sessions();
+            let loads: Vec<usize> = self.replicas.iter().map(gap_load).collect();
+            let (mut src, mut dst) = (0usize, 0usize);
+            for (r, &l) in loads.iter().enumerate() {
+                if l > loads[src] {
+                    src = r;
+                }
+                if l < loads[dst] {
+                    dst = r;
+                }
+            }
+            if loads[src] - loads[dst] <= self.rebalance_threshold {
+                break;
+            }
+            // candidates homed on the hot replica, in sorted id order
+            // (HashMap iteration order must not leak into policy)
+            let mut cands: Vec<u64> =
+                self.home.iter().filter(|&(_, &r)| r == src).map(|(&id, _)| id).collect();
+            cands.sort_unstable();
+            let hot = &self.replicas[src];
+            let pick = cands
+                .into_iter()
+                .filter(|&id| {
+                    hot.sessions().contains(id)
+                        && !hot.session_busy(id)
+                        && self.replicas[dst].can_import(hot.sessions().len_of(id))
+                })
+                .min_by_key(|&id| (hot.sessions().len_of(id), id));
+            let Some(id) = pick else {
+                // a gap with nothing movable: everything hot is busy
+                // (affinity forbids mid-round moves) or won't fit cold
+                self.stats.rebalance_skips += 1;
+                break;
+            };
+            out.push(self.migrate(id, src, dst)?);
+        }
+        Ok(out)
+    }
+
+    /// Force-migrate a session to replica `to` (test hook and operator
+    /// override; [`Router::rebalance`] is the policy path). Fails —
+    /// leaving the session untouched at its source — if the session is
+    /// unknown, busy, already on `to`, or does not fit there.
+    pub fn migrate_session(&mut self, id: u64, to: usize) -> Result<MigrationRecord> {
+        let Some(&src) = self.home.get(&id) else {
+            bail!("session {id} has no home replica");
+        };
+        if to >= self.replicas.len() {
+            bail!("replica {to} out of range ({} replicas)", self.replicas.len());
+        }
+        if src == to {
+            bail!("session {id} already lives on replica {to}");
+        }
+        self.migrate(id, src, to)
+    }
+
+    /// Export → wire round trip → import, with source restore on a
+    /// failed import. The *decoded* KV is what lands on the
+    /// destination, so any wire-format lossiness would surface as a KV
+    /// mismatch in the round-trip gate, not hide behind a shortcut.
+    fn migrate(&mut self, id: u64, src: usize, dst: usize) -> Result<MigrationRecord> {
+        let (kv, tenant) = self.replicas[src].export_session(id)?;
+        let msg = KvMigrateMsg { request_id: id, kv };
+        let encoded = msg.encode();
+        let bytes = msg.wire_bytes();
+        debug_assert_eq!(bytes, encoded.len(), "priced bytes must match the real encoding");
+        let decoded = KvMigrateMsg::decode(&encoded)?;
+        if let Err(e) = self.replicas[dst].import_session(id, tenant, &decoded.kv) {
+            self.replicas[src]
+                .import_session(id, tenant, &msg.kv)
+                .map_err(|restore| restore.context(format!("restore after failed import: {e}")))?;
+            return Err(e);
+        }
+        self.home.insert(id, dst);
+        self.stats.migrations += 1;
+        self.stats.migration_bytes += bytes as u64;
+        Ok(MigrationRecord { request_id: id, from: src, to: dst, bytes: bytes as u64, tenant })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::MockBatchEngine;
+    use crate::workload::vocab::VOCAB;
+
+    fn two_replica_router() -> Router<MockBatchEngine> {
+        let engines = (0..2).map(|_| MockBatchEngine::new(4, 32, VOCAB, 4096)).collect();
+        Router::new(engines, 0x7E57, &BatchPolicy::default()).unwrap()
+    }
+
+    fn gen_req(id: u64) -> CloudRequest {
+        CloudRequest::Generate { request_id: id, prompt: vec![5, 6, 7], max_new: 2 }
+    }
+
+    #[test]
+    fn rejects_zero_replicas() {
+        let none: Vec<MockBatchEngine> = Vec::new();
+        assert!(Router::new(none, 1, &BatchPolicy::default()).is_err());
+    }
+
+    #[test]
+    fn placement_spreads_new_sessions() {
+        let mut router = two_replica_router();
+        let a = router.submit(gen_req(1)).unwrap();
+        let b = router.submit(gen_req(2)).unwrap();
+        assert_ne!(a, b, "second session must land on the empty replica");
+        assert_eq!(router.home_of(1), Some(a));
+        assert_eq!(router.home_of(2), Some(b));
+    }
+
+    #[test]
+    fn release_of_unknown_session_is_a_noop() {
+        let mut router = two_replica_router();
+        router.submit(CloudRequest::Release { request_id: 99 }).unwrap();
+        assert!(router.is_idle());
+        assert_eq!(router.stats.routed, 0);
+    }
+
+    #[test]
+    fn generation_retires_from_the_home_table() {
+        let mut router = two_replica_router();
+        let r = router.submit(gen_req(7)).unwrap();
+        let mut guard = 0;
+        while router.home_of(7).is_some() {
+            router.tick_replica(r).unwrap();
+            guard += 1;
+            assert!(guard < 64, "generation must complete and retire");
+        }
+        assert!(router.replica_idle(r));
+    }
+}

@@ -54,6 +54,7 @@ use crate::config::BatchPolicy;
 use crate::model::cloud_engine::{BatchEngine, CloudEngine, SlotChunk};
 use crate::model::logits::argmax;
 use crate::net::wire::Dist;
+use crate::runtime::SlotKv;
 use crate::util::rng::Rng;
 use crate::workload::vocab::EOS;
 
@@ -160,6 +161,28 @@ struct Pick {
     aged: bool,
 }
 
+/// Reusable per-tick buffers (ROADMAP hot-path item). `tick()` used to
+/// allocate fresh vectors for its candidate list, batch plan,
+/// pick-tracking bitmaps and slot-indexed result join on **every**
+/// iteration; at fleet scale (millions of ticks per run) that
+/// allocation churn is pure scheduling overhead. These are cleared and
+/// refilled each tick, never shrunk — capacities converge to the job-
+/// pool and slot counts after the first few iterations.
+#[derive(Default)]
+struct TickScratch {
+    /// Candidates: (class, pool index, session id, runnable rows, waited).
+    cands: Vec<(u8, usize, u64, usize, u64)>,
+    picks: Vec<Pick>,
+    picked_decode: Vec<bool>,
+    picked_verify: Vec<bool>,
+    picked_prefill: Vec<bool>,
+    items: Vec<SlotChunk>,
+    res_by_slot: Vec<Option<usize>>,
+    /// Sessions granted a slot this iteration — ineligible as swap
+    /// victims, and a hard cap of one chunk per physical slot.
+    pinned: HashSet<u64>,
+}
+
 /// The mixed continuous-batching scheduler bound to one [`BatchEngine`]
 /// (the PJRT [`CloudEngine`] in production, a mock in tests).
 pub struct Scheduler<E: BatchEngine = CloudEngine> {
@@ -191,6 +214,8 @@ pub struct Scheduler<E: BatchEngine = CloudEngine> {
     pub tenant_stats: Vec<TenantStats>,
     rng: Rng,
     pub stats: SchedulerStats,
+    /// Reusable per-tick buffers (no per-iteration allocation churn).
+    scratch: TickScratch,
 }
 
 /// Admission cost of a request in engine token rows (the WFQ credit
@@ -240,6 +265,7 @@ impl<E: BatchEngine> Scheduler<E> {
             tenant_stats,
             rng: Rng::new(seed ^ 0xC10D),
             stats: SchedulerStats::default(),
+            scratch: TickScratch::default(),
         }
     }
 
@@ -378,6 +404,119 @@ impl<E: BatchEngine> Scheduler<E> {
             + self.wfq.as_ref().map_or(0, |w| w.len())
     }
 
+    // ---- load-signal surface (consumed by `crate::cloud::router`) ---------
+
+    /// Jobs mid-execution: prefilling, decoding, or in a verify round.
+    /// Together with [`Scheduler::queue_depth`] this is the router's
+    /// load metric for replica placement.
+    pub fn in_flight(&self) -> usize {
+        self.prefilling.len() + self.decoding.len() + self.verifying.len()
+    }
+
+    /// Open logical sessions on this scheduler.
+    pub fn active_sessions(&self) -> usize {
+        self.sessions.active()
+    }
+
+    /// Queued requests (staged + weighted-fair frontend) attributed to
+    /// `tenant` — the per-tenant backlog the router balances on.
+    pub fn tenant_backlog(&self, tenant: usize) -> usize {
+        let staged = self
+            .waiting_gen
+            .iter()
+            .chain(self.waiting_verify.iter())
+            .filter(|r| {
+                let id = match r {
+                    CloudRequest::Generate { request_id, .. }
+                    | CloudRequest::Verify { request_id, .. } => *request_id,
+                    CloudRequest::Release { .. } => return false,
+                };
+                self.tenant_of.get(&id) == Some(&tenant)
+            })
+            .count();
+        staged + self.wfq.as_ref().map_or(0, |w| w.len_of(tenant))
+    }
+
+    /// Open sessions attributed to `tenant` (session-affinity signal:
+    /// the router prefers the replica already serving a tenant).
+    pub fn tenant_sessions(&self, tenant: usize) -> usize {
+        self.tenant_of
+            .iter()
+            .filter(|&(id, t)| *t == tenant && self.sessions.contains(*id))
+            .count()
+    }
+
+    /// Fraction of this scheduler's time spent in engine compute (vs
+    /// scheduling bookkeeping). Derived from wall-clock counters, so it
+    /// is a **reporting/ops signal only** — the simulator's placement
+    /// decisions never read it (virtual-clock determinism).
+    pub fn busy_fraction(&self) -> f64 {
+        let total = self.stats.busy_s + self.stats.sched_overhead_s;
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.stats.busy_s / total
+        }
+    }
+
+    // ---- cross-replica session migration (router rebalancing) -------------
+
+    /// Does `id` have queued or in-flight work anywhere in this
+    /// scheduler (staged queues, tenant frontend, job pools, deferred
+    /// release)? A busy session must not migrate: its next round would
+    /// race the move (session affinity holds within a round).
+    pub fn session_busy(&self, id: u64) -> bool {
+        let matches_id = |r: &CloudRequest| match r {
+            CloudRequest::Generate { request_id, .. }
+            | CloudRequest::Verify { request_id, .. }
+            | CloudRequest::Release { request_id } => *request_id == id,
+        };
+        self.prefilling.iter().any(|j| j.request_id == id)
+            || self.decoding.iter().any(|j| j.request_id == id)
+            || self.verifying.iter().any(|j| j.request_id == id)
+            || self.pending_release.contains(&id)
+            || self.waiting_gen.iter().any(|r| matches_id(r))
+            || self.waiting_verify.iter().any(|r| matches_id(r))
+            || self.wfq.as_ref().is_some_and(|w| w.any(|r| matches_id(r)))
+    }
+
+    /// Detach a quiescent session for migration: its committed KV image
+    /// plus its tenant attribution. The session's slot or pool blocks
+    /// return to this scheduler; errors (unknown or busy session) leave
+    /// it untouched.
+    pub fn export_session(&mut self, id: u64) -> Result<(SlotKv, Option<usize>)> {
+        if !self.sessions.contains(id) {
+            bail!("export of unknown session {id}");
+        }
+        if self.session_busy(id) {
+            bail!("session {id} has queued or in-flight work; migrate at a round boundary");
+        }
+        let kv = self.sessions.export(id, &mut self.engine)?;
+        Ok((kv, self.tenant_of.remove(&id)))
+    }
+
+    /// Can this scheduler adopt a migrated session of `rows` committed
+    /// rows right now without evicting anything?
+    pub fn can_import(&self, rows: usize) -> bool {
+        self.sessions.can_import(rows, &self.engine)
+    }
+
+    /// Adopt a migrated session (the KV image a peer's
+    /// [`Scheduler::export_session`] produced, after its wire round
+    /// trip) under its tenant attribution. Follow-up rounds then submit
+    /// here exactly as if the session had always been local.
+    pub fn import_session(&mut self, id: u64, tenant: Option<usize>, kv: &SlotKv) -> Result<()> {
+        self.sessions.import(id, kv, &mut self.engine)?;
+        if let Some(t) = tenant {
+            // only track tenants this scheduler has counters for —
+            // per-row accounting indexes tenant_stats
+            if t < self.tenant_stats.len() {
+                self.tenant_of.insert(id, t);
+            }
+        }
+        Ok(())
+    }
+
     /// One mixed continuous-batching iteration. Returns surfaced events
     /// plus the engine compute seconds consumed by this tick (the
     /// caller's clock).
@@ -399,8 +538,19 @@ impl<E: BatchEngine> Scheduler<E> {
         };
         let age_th = self.policy.age_threshold;
 
-        // candidates: (class, pool index, session id, runnable rows, waited)
-        let mut cands: Vec<(u8, usize, u64, usize, u64)> = Vec::new();
+        // reusable scratch, destructured so its field borrows stay
+        // disjoint from the session/engine borrows below
+        let TickScratch {
+            cands,
+            picks,
+            picked_decode,
+            picked_verify,
+            picked_prefill,
+            items,
+            res_by_slot,
+            pinned,
+        } = &mut self.scratch;
+        cands.clear();
         for (i, j) in self.decoding.iter().enumerate() {
             if j.next_token.is_some() {
                 cands.push((CLASS_DECODE, i, j.request_id, 1, j.wait_iters));
@@ -439,11 +589,9 @@ impl<E: BatchEngine> Scheduler<E> {
 
         let mut remaining = budget;
         let mut prefill_used = 0usize;
-        // sessions granted a slot this iteration — ineligible as swap
-        // victims, and a hard cap of one chunk per physical slot
-        let mut pinned: HashSet<u64> = HashSet::new();
-        let mut picks: Vec<Pick> = Vec::new();
-        for &(class, idx, id, runnable, waited) in &cands {
+        pinned.clear();
+        picks.clear();
+        for &(class, idx, id, runnable, waited) in cands.iter() {
             if remaining == 0 || picks.len() == slots {
                 break;
             }
@@ -457,7 +605,7 @@ impl<E: BatchEngine> Scheduler<E> {
             // paged residency: resident sessions keep their slot; parked
             // ones are swapped in over an LRU victim (never one already
             // picked). No victim ⇒ the job waits and ages.
-            let Some(slot) = self.sessions.ensure_resident(id, &mut self.engine, &pinned)? else {
+            let Some(slot) = self.sessions.ensure_resident(id, &mut self.engine, pinned)? else {
                 continue;
             };
             if class == CLASS_PREFILL {
@@ -470,10 +618,13 @@ impl<E: BatchEngine> Scheduler<E> {
 
         // fairness accounting: scheduled jobs reset their wait; skipped
         // runnable jobs age by one iteration
-        let mut picked_decode = vec![false; self.decoding.len()];
-        let mut picked_verify = vec![false; self.verifying.len()];
-        let mut picked_prefill = vec![false; self.prefilling.len()];
-        for p in &picks {
+        picked_decode.clear();
+        picked_decode.resize(self.decoding.len(), false);
+        picked_verify.clear();
+        picked_verify.resize(self.verifying.len(), false);
+        picked_prefill.clear();
+        picked_prefill.resize(self.prefilling.len(), false);
+        for p in picks.iter() {
             match p.class {
                 CLASS_DECODE => picked_decode[p.idx] = true,
                 CLASS_VERIFY => picked_verify[p.idx] = true,
@@ -504,8 +655,8 @@ impl<E: BatchEngine> Scheduler<E> {
         }
 
         // ---- execute: one engine call for the whole mixed batch -----------
-        let mut items = Vec::with_capacity(picks.len());
-        for p in &picks {
+        items.clear();
+        for p in picks.iter() {
             let toks = match p.class {
                 CLASS_DECODE => {
                     let j = &self.decoding[p.idx];
@@ -522,19 +673,20 @@ impl<E: BatchEngine> Scheduler<E> {
             };
             items.push(SlotChunk { slot: p.slot, tokens: toks });
         }
-        let (res, dt) = self.engine.run_batch(&items)?;
+        let (res, dt) = self.engine.run_batch(items)?;
         let compute_s = dt;
         self.stats.busy_s += dt;
         self.stats.rows_executed = self.engine.rows_executed();
 
         // ---- apply per-slot results to their jobs -------------------------
         // slot-indexed join (the per-item linear scan was O(picks²))
-        let mut res_by_slot: Vec<Option<usize>> = vec![None; slots];
+        res_by_slot.clear();
+        res_by_slot.resize(slots, None);
         for (i, r) in res.iter().enumerate() {
             res_by_slot[r.slot] = Some(i);
         }
         let v = self.engine.vocab();
-        for (p, item) in picks.iter().zip(&items) {
+        for (p, item) in picks.iter().zip(items.iter()) {
             let ri = res_by_slot[item.slot].expect("engine result for scheduled slot");
             let r = &res[ri];
             self.sessions.note_rows(p.id, r.n_rows);

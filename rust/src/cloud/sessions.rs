@@ -40,6 +40,7 @@ use anyhow::{bail, Result};
 use crate::config::BatchPolicy;
 use crate::model::cloud_engine::{BatchEngine, SlotOwner};
 use crate::runtime::paging::{BlockPool, BlockTable};
+use crate::runtime::SlotKv;
 
 /// Token rows per host KV block (vLLM-style fixed granularity).
 pub const BLOCK_TOKENS: usize = 16;
@@ -297,6 +298,70 @@ impl SessionManager {
         sess.last_used = clock;
         self.stats.swap_s += t0.elapsed().as_secs_f64();
         Ok(Some(slot))
+    }
+
+    /// Remove a session and hand back its committed KV image — the
+    /// swap-out half of a cross-replica migration. The slot or pool
+    /// blocks it held are returned to this manager; the caller owns the
+    /// bytes (typically to `import` them on another replica's manager).
+    pub fn export<E: BatchEngine>(&mut self, id: u64, engine: &mut E) -> Result<SlotKv> {
+        let Some(sess) = self.sessions.remove(&id) else {
+            bail!("export of unknown session {id}");
+        };
+        match sess.state {
+            SessionState::Resident { slot } => {
+                let kv = engine.export_slot(slot);
+                debug_assert_eq!(kv.len, sess.len, "engine/session committed-length divergence");
+                engine.free_slot(slot);
+                Ok(kv)
+            }
+            SessionState::Parked { table } => {
+                let kv = self.pool.load(&table);
+                self.pool.release(table);
+                Ok(kv)
+            }
+            SessionState::Swapping => unreachable!("export during an in-flight swap"),
+        }
+    }
+
+    /// Can this manager accept an imported session of `rows` committed
+    /// rows right now — a free engine slot, or enough pool blocks to
+    /// park it — without evicting anything?
+    pub fn can_import<E: BatchEngine>(&self, rows: usize, engine: &E) -> bool {
+        self.can_open()
+            && (engine.free_slots() > 0 || self.pool.free_blocks() >= self.pool.blocks_for(rows))
+    }
+
+    /// Adopt a migrated session: land its KV in a free engine slot when
+    /// one exists, else park it in the host pool. Never evicts — the
+    /// router checks [`SessionManager::can_import`] first, and a failed
+    /// import leaves this manager untouched so the source replica can
+    /// restore the session.
+    pub fn import<E: BatchEngine>(&mut self, id: u64, kv: &SlotKv, engine: &mut E) -> Result<()> {
+        if self.sessions.contains_key(&id) {
+            bail!("import of already-open session {id}");
+        }
+        if !self.can_open() {
+            bail!("session table full ({} of {})", self.sessions.len(), self.max_sessions);
+        }
+        self.clock += 1;
+        let state = if engine.free_slots() > 0 {
+            let slot = engine.alloc_slot(SlotOwner::Request(id)).expect("free slot checked");
+            if kv.len > 0 {
+                if let Err(e) = engine.import_slot(slot, kv) {
+                    engine.free_slot(slot);
+                    return Err(e);
+                }
+            }
+            SessionState::Resident { slot }
+        } else if self.pool.free_blocks() >= self.pool.blocks_for(kv.len) {
+            SessionState::Parked { table: self.pool.store(kv)? }
+        } else {
+            bail!("no slot and no pool room for an imported session of {} rows", kv.len);
+        };
+        self.sessions
+            .insert(id, Session { state, len: kv.len, last_used: self.clock });
+        Ok(())
     }
 
     /// Swap a resident session's KV out to the host pool and free its

@@ -118,6 +118,16 @@ pub struct BatchPolicy {
     /// (`cloud::fairness`). Empty = frontend off (single-queue FIFO
     /// admission); entries must be finite and positive.
     pub tenant_weights: Vec<f64>,
+    /// Scheduler replicas behind the router tier (`cloud::router`).
+    /// `0` is normalised to `1`; with one replica the router is a
+    /// transparent pass-through and behavior is bit-identical to the
+    /// pre-router single-scheduler stack.
+    pub replicas: usize,
+    /// Cross-replica rebalance trigger: migrate parked sessions from
+    /// the most to the least loaded replica whenever their load gap
+    /// (queued + in-flight + open sessions) exceeds this. `0` =
+    /// rebalancing off.
+    pub rebalance_threshold: usize,
 }
 
 impl Default for BatchPolicy {
@@ -128,6 +138,8 @@ impl Default for BatchPolicy {
             age_threshold: 4,
             max_sessions: 0,
             tenant_weights: Vec::new(),
+            replicas: 1,
+            rebalance_threshold: 0,
         }
     }
 }
@@ -292,6 +304,8 @@ mod tests {
         assert!(b.age_threshold >= 1);
         assert_eq!(b.max_sessions, 0, "default session cap is auto (slot count, no paging)");
         assert!(b.tenant_weights.is_empty(), "tenant frontend defaults off");
+        assert_eq!(b.replicas, 1, "default is the single-replica stack");
+        assert_eq!(b.rebalance_threshold, 0, "rebalancing defaults off");
     }
 
     #[test]

@@ -1,13 +1,23 @@
 //! Real-time threaded serving mode (the end-to-end driver behind
 //! `examples/multi_device_serving.rs` and `synera serve`).
 //!
-//! Unlike the discrete-event pipelines, this runs actual OS threads with
-//! real queues and wall-clock time: one cloud thread owns a PJRT runtime
-//! plus the verification-aware [`Scheduler`]; each device thread owns its
-//! own runtime (PJRT objects are thread-confined) and executes the
-//! Synera device loop, *really* overlapping speculative computation with
-//! the in-flight verification (PI runs while polling the reply channel).
+//! Unlike the discrete-event pipelines, this runs actual OS threads
+//! with real queues and wall-clock time: `R` cloud threads
+//! (`params.batch.replicas`) each own a PJRT runtime plus the
+//! verification-aware [`Scheduler`], fronted by a router thread — the
+//! serving analogue of [`crate::cloud::router::Router`] — that places
+//! new sessions on the least-open replica and forwards follow-ups to
+//! their home (session affinity). Each device thread owns its own
+//! runtime (PJRT objects are thread-confined) and executes the Synera
+//! device loop, *really* overlapping speculative computation with the
+//! in-flight verification (PI runs while polling the reply channel).
 //! Network delays are injected as sleeps computed by the [`SimLink`].
+//!
+//! Cross-thread KV *migration* is deliberately not attempted here:
+//! PJRT engines are thread-confined, so a live migration would mean
+//! shipping buffers between runtimes mid-run. The deterministic fleet
+//! simulator ([`crate::sim::fleet`]) is the migration testbed; this
+//! tier scales by placement only.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -55,10 +65,12 @@ pub struct ServeReport {
     pub verify_rtt: Summary,
     pub quality: f64,
     pub offload_rate: f64,
-    /// Paged-KV swap traffic on the cloud thread (0/0 when
+    /// Paged-KV swap traffic summed across cloud replicas (0/0 when
     /// `max_sessions` keeps every session resident).
     pub swap_ins: u64,
     pub swap_outs: u64,
+    /// Cloud scheduler replicas behind the router thread.
+    pub replicas: usize,
 }
 
 enum ToCloud {
@@ -70,69 +82,124 @@ enum ToCloud {
 /// Run the threaded server end to end; blocks until all requests finish.
 pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
     let (tx_cloud, rx_cloud) = channel::<ToCloud>();
-    let artifacts = cfg.artifacts.clone();
-    let llm = cfg.scenario.pair.llm.clone();
-    let greedy = cfg.scenario.params.greedy;
-    let batch = cfg.scenario.params.batch.clone();
+    let replicas = cfg.scenario.params.batch.replicas.max(1);
 
-    // ---------------- cloud thread ----------------
-    let cloud = std::thread::Builder::new()
-        .name("synera-cloud".into())
-        .spawn(move || -> Result<SchedulerStats> {
-            let rt = Runtime::load(artifacts)?;
-            let mut engine = CloudEngine::new(rt.model(&llm)?)?;
-            engine.warmup()?; // compile before accepting traffic
-            let n_tenants = batch.tenant_weights.len();
-            let mut sched = Scheduler::with_policy(engine, 0xC10D, batch);
-            let mut replies: HashMap<u64, Sender<DownlinkMsg>> = HashMap::new();
-            let mut open = true;
-            while open || !sched.is_idle() {
-                // drain incoming
-                loop {
-                    match rx_cloud.recv_timeout(Duration::from_micros(200)) {
-                        Ok(ToCloud::Up(msg, reply)) => {
-                            replies.insert(msg.request_id, reply);
-                            let req = CloudRequest::Verify {
-                                request_id: msg.request_id,
-                                device_id: msg.device_id,
-                                uncached: msg.uncached,
-                                draft: msg.draft,
-                                dists: msg.dists,
-                                greedy,
-                            };
-                            if n_tenants > 0 {
-                                // devices map onto tenants round-robin
-                                sched.submit_tenant(msg.device_id as usize % n_tenants, req)?;
-                            } else {
-                                sched.submit(req)?;
+    // ---------------- cloud replica threads ----------------
+    // one scheduler per thread, each with its own PJRT runtime/engine
+    let mut cloud_handles = Vec::with_capacity(replicas);
+    let mut replica_txs = Vec::with_capacity(replicas);
+    for r in 0..replicas {
+        let (tx_r, rx_r) = channel::<ToCloud>();
+        replica_txs.push(tx_r);
+        let artifacts = cfg.artifacts.clone();
+        let llm = cfg.scenario.pair.llm.clone();
+        let greedy = cfg.scenario.params.greedy;
+        let batch = cfg.scenario.params.batch.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("synera-cloud{r}"))
+            .spawn(move || -> Result<SchedulerStats> {
+                let rt = Runtime::load(artifacts)?;
+                let mut engine = CloudEngine::new(rt.model(&llm)?)?;
+                engine.warmup()?; // compile before accepting traffic
+                let n_tenants = batch.tenant_weights.len();
+                // replica 0 keeps the historical seed (an R = 1 run
+                // reproduces the pre-router server); later replicas
+                // decorrelate their verifier RNG streams
+                let seed = if r == 0 {
+                    0xC10D
+                } else {
+                    0xC10D ^ (0x5EED ^ r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                };
+                let mut sched = Scheduler::with_policy(engine, seed, batch);
+                let mut replies: HashMap<u64, Sender<DownlinkMsg>> = HashMap::new();
+                let mut open = true;
+                while open || !sched.is_idle() {
+                    // drain incoming
+                    loop {
+                        match rx_r.recv_timeout(Duration::from_micros(200)) {
+                            Ok(ToCloud::Up(msg, reply)) => {
+                                replies.insert(msg.request_id, reply);
+                                let req = CloudRequest::Verify {
+                                    request_id: msg.request_id,
+                                    device_id: msg.device_id,
+                                    uncached: msg.uncached,
+                                    draft: msg.draft,
+                                    dists: msg.dists,
+                                    greedy,
+                                };
+                                if n_tenants > 0 {
+                                    // devices map onto tenants round-robin
+                                    sched
+                                        .submit_tenant(msg.device_id as usize % n_tenants, req)?;
+                                } else {
+                                    sched.submit(req)?;
+                                }
+                            }
+                            Ok(ToCloud::Release(id)) => {
+                                sched.submit(CloudRequest::Release { request_id: id })?;
+                            }
+                            Ok(ToCloud::Shutdown) => open = false,
+                            Err(RecvTimeoutError::Timeout) => break,
+                            Err(RecvTimeoutError::Disconnected) => {
+                                open = false;
+                                break;
                             }
                         }
-                        Ok(ToCloud::Release(id)) => {
-                            sched.submit(CloudRequest::Release { request_id: id })?;
-                        }
-                        Ok(ToCloud::Shutdown) => open = false,
-                        Err(RecvTimeoutError::Timeout) => break,
-                        Err(RecvTimeoutError::Disconnected) => {
-                            open = false;
-                            break;
+                    }
+                    let (events, _) = sched.tick()?;
+                    for e in events {
+                        if let CloudEvent::VerifyDone { request_id, outcome, .. } = e {
+                            if let Some(ch) = replies.get(&request_id) {
+                                let _ = ch.send(DownlinkMsg {
+                                    request_id,
+                                    accepted: outcome.accepted as u32,
+                                    next_token: outcome.next_token,
+                                });
+                            }
                         }
                     }
                 }
-                let (events, _) = sched.tick()?;
-                for e in events {
-                    if let CloudEvent::VerifyDone { request_id, outcome, .. } = e {
-                        if let Some(ch) = replies.get(&request_id) {
-                            let _ = ch.send(DownlinkMsg {
-                                request_id,
-                                accepted: outcome.accepted as u32,
-                                next_token: outcome.next_token,
-                            });
+                Ok(sched.stats.clone())
+            })?;
+        cloud_handles.push(handle);
+    }
+
+    // ---------------- router thread ----------------
+    // session affinity via a home map; new sessions land on the
+    // replica with the fewest open sessions (ties → smallest index),
+    // mirroring the simulator router's deterministic placement
+    let router = std::thread::Builder::new().name("synera-router".into()).spawn(move || {
+        let mut home: HashMap<u64, usize> = HashMap::new();
+        let mut open = vec![0usize; replica_txs.len()];
+        while let Ok(msg) = rx_cloud.recv() {
+            match msg {
+                ToCloud::Up(up, reply) => {
+                    let r = match home.get(&up.request_id) {
+                        Some(&r) => r,
+                        None => {
+                            let r = (0..open.len())
+                                .min_by_key(|&r| (open[r], r))
+                                .expect("≥1 replica");
+                            home.insert(up.request_id, r);
+                            open[r] += 1;
+                            r
                         }
+                    };
+                    if replica_txs[r].send(ToCloud::Up(up, reply)).is_err() {
+                        break; // replica gone; devices will observe too
                     }
                 }
+                ToCloud::Release(id) => {
+                    if let Some(r) = home.remove(&id) {
+                        open[r] = open[r].saturating_sub(1);
+                        let _ = replica_txs[r].send(ToCloud::Release(id));
+                    }
+                }
+                ToCloud::Shutdown => break,
             }
-            Ok(sched.stats.clone())
-        })?;
+        }
+        // dropping replica_txs closes every replica inbox → they drain
+    })?;
 
     // ---------------- device threads ----------------
     let profile = {
@@ -164,7 +231,15 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
         all.merge(s);
     }
     let wall = t0.elapsed().as_secs_f64();
-    let cloud_stats = cloud.join().map_err(|_| anyhow!("cloud thread panicked"))??;
+    // all device senders are gone → the router loop exits and drops
+    // the replica inboxes → each replica drains and returns its stats
+    router.join().map_err(|_| anyhow!("router thread panicked"))?;
+    let (mut swap_ins, mut swap_outs) = (0u64, 0u64);
+    for h in cloud_handles {
+        let s = h.join().map_err(|_| anyhow!("cloud thread panicked"))??;
+        swap_ins += s.swap_ins;
+        swap_outs += s.swap_outs;
+    }
 
     Ok(ServeReport {
         completed: all.completed,
@@ -175,8 +250,9 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
         verify_rtt: Summary::of(&all.rtts),
         quality: if all.completed > 0 { all.quality / all.completed as f64 } else { 0.0 },
         offload_rate: if all.chunks > 0 { all.offloads as f64 / all.chunks as f64 } else { 0.0 },
-        swap_ins: cloud_stats.swap_ins,
-        swap_outs: cloud_stats.swap_outs,
+        swap_ins,
+        swap_outs,
+        replicas,
     })
 }
 

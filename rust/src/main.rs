@@ -7,10 +7,15 @@
 //! synera eval      --method synera --slm s1b --llm l13b --task xsum --n 16
 //! synera profile   [--slm s1b --llm l13b] [--refresh]
 //! synera serve     --devices 4 --requests 8 --task xsum
-//!                  [--tenants 2 --tenant-weights 1,2]
+//!                  [--tenants 2 --tenant-weights 1,2] [--replicas 2]
 //! synera fleet     --devices 1024 --duration 60 [--rate 256]
 //!                  [--tenants 4] [--tenant-weights 1,1,2,4]
 //!                  [--max-sessions 64] [--burst] [--seed N]
+//!                  [--replicas 4 --rebalance 8]  (router-fronted
+//!                                     multi-replica cloud; rebalance
+//!                                     = load-gap migration threshold)
+//!                  [--cloud-iter-s 2e-3 --cloud-row-s 4e-4]
+//!                  [--migrate-gbps 10]
 //!                  [--real-engine]   (virtual-clock sim; artifact-free
 //!                                     over the mock engine by default)
 //! synera info
@@ -63,6 +68,9 @@ fn scenario_from(args: &Args) -> Result<Scenario> {
         args.get_usize("age-threshold", scen.params.batch.age_threshold as usize)? as u64;
     scen.params.batch.max_sessions =
         args.get_usize("max-sessions", scen.params.batch.max_sessions)?;
+    scen.params.batch.replicas = args.get_usize("replicas", scen.params.batch.replicas)?;
+    scen.params.batch.rebalance_threshold =
+        args.get_usize("rebalance", scen.params.batch.rebalance_threshold)?;
     scen.params.batch.tenant_weights = synera::config::BatchPolicy::tenant_weights_from(
         args.get_usize("tenants", 0)?,
         args.get("tenant-weights"),
@@ -258,7 +266,10 @@ fn serve(args: &Args) -> Result<()> {
         rep.quality,
         rep.offload_rate,
     );
-    println!("paged-kv swaps: in={} out={}", rep.swap_ins, rep.swap_outs);
+    println!(
+        "paged-kv swaps: in={} out={} ({} cloud replicas)",
+        rep.swap_ins, rep.swap_outs, rep.replicas
+    );
     Ok(())
 }
 
@@ -274,6 +285,8 @@ fn fleet(args: &Args) -> Result<()> {
     params.max_new_tokens = args.get_usize("max-new", params.max_new_tokens)?;
     params.batch.max_sessions = args.get_usize("max-sessions", 64)?;
     params.batch.token_budget = args.get_usize("token-budget", 0)?;
+    params.batch.replicas = args.get_usize("replicas", 1)?.max(1);
+    params.batch.rebalance_threshold = args.get_usize("rebalance", 0)?;
     let cfg = FleetConfig {
         n_devices,
         duration_s: args.get_f64("duration", 60.0)?,
@@ -287,6 +300,11 @@ fn fleet(args: &Args) -> Result<()> {
         tenant_weights: BatchPolicy::tenant_weights_from(tenants, args.get("tenant-weights"))?,
         params,
         seed: args.get_usize("seed", base.seed as usize)? as u64,
+        // modelled cloud service time (satellite knobs: sweep the
+        // service curve without recompiling)
+        cloud_iter_s: args.get_f64("cloud-iter-s", base.cloud_iter_s)?,
+        cloud_row_s: args.get_f64("cloud-row-s", base.cloud_row_s)?,
+        migrate_gbps: args.get_f64("migrate-gbps", base.migrate_gbps)?,
         slo_ttft_s: args.get_f64("slo-ttft", base.slo_ttft_s)?,
         slo_tbt_s: args.get_f64("slo-tbt", base.slo_tbt_s)?,
         // keep the cost model's packing factor in step with the engine
@@ -295,13 +313,14 @@ fn fleet(args: &Args) -> Result<()> {
         ..base
     };
     println!(
-        "fleet: {} devices, {:.0} virtual s at {:.1} req/s ({}), {} tenants, max_sessions={}",
+        "fleet: {} devices, {:.0} virtual s at {:.1} req/s ({}), {} tenants, max_sessions={}, replicas={}",
         cfg.n_devices,
         cfg.duration_s,
         cfg.rate_rps,
         if cfg.burst.is_some() { "bursty" } else { "poisson" },
         cfg.tenants,
         cfg.params.batch.max_sessions,
+        cfg.params.batch.replicas.max(1),
     );
     let rep = if args.has_flag("real-engine") {
         // artifact path: measured engine compute drives the clock
@@ -309,9 +328,13 @@ fn fleet(args: &Args) -> Result<()> {
         let llm = args.get_or("llm", "l13b");
         let profile =
             profiling::load_or_profile(&rt, &args.get_or("slm", "s1b"), None, &llm)?;
-        let mut engine = synera::model::CloudEngine::new(rt.model(&llm)?)?;
-        engine.warmup()?;
-        run_fleet_on(&cfg, engine, &profile, true)?
+        let mut engines = Vec::new();
+        for _ in 0..cfg.params.batch.replicas.max(1) {
+            let mut engine = synera::model::CloudEngine::new(rt.model(&llm)?)?;
+            engine.warmup()?;
+            engines.push(engine);
+        }
+        run_fleet_on(&cfg, engines, &profile, true)?
     } else {
         run_fleet(&cfg)?
     };
@@ -335,17 +358,25 @@ fn fleet(args: &Args) -> Result<()> {
         rep.pi_misses,
     );
     println!(
+        "router: {} replicas, {} migrations ({} B wire), per-replica iters={:?} rows={:?}",
+        rep.replicas,
+        rep.migrations,
+        rep.migration_bytes,
+        rep.replica_iterations,
+        rep.replica_rows,
+    );
+    println!(
         "traffic: {} offload rounds / {} local chunks, {} B up / {} B down",
         rep.offload_rounds, rep.local_chunks, rep.bytes_up, rep.bytes_down
     );
     println!(
-        "{:<7} {:>6} {:>5} {:>5} | {:>9} {:>9} {:>9} | {:>9} {:>9} | {:>7} {:>7} | {:>10}",
+        "{:<7} {:>6} {:>5} {:>5} | {:>9} {:>9} {:>9} | {:>9} {:>9} | {:>7} {:>7} | {:>10} {:>10}",
         "tenant", "weight", "req", "done", "ttft p50", "ttft p95", "ttft p99", "tbt p50",
-        "tbt p95", "slo-ttft", "slo-tbt", "rows",
+        "tbt p95", "slo-ttft", "slo-tbt", "rows", "energy",
     );
     for t in &rep.tenants {
         println!(
-            "{:<7} {:>6.1} {:>5} {:>5} | {:>8.0}ms {:>8.0}ms {:>8.0}ms | {:>8.1}ms {:>8.1}ms | {:>6.1}% {:>6.1}% | {:>10}",
+            "{:<7} {:>6.1} {:>5} {:>5} | {:>8.0}ms {:>8.0}ms {:>8.0}ms | {:>8.1}ms {:>8.1}ms | {:>6.1}% {:>6.1}% | {:>10} {:>9.1}J",
             t.tenant,
             t.weight,
             t.requests,
@@ -358,6 +389,7 @@ fn fleet(args: &Args) -> Result<()> {
             t.slo_ttft_frac * 100.0,
             t.slo_tbt_frac * 100.0,
             t.rows_executed,
+            t.energy_j,
         );
     }
     Ok(())

@@ -1,7 +1,10 @@
 //! Cloud serving cost model (paper §6.1): `c = (1/Pf) × T × W` where `Pf`
 //! is the packing factor (concurrent model instances per cluster, a unit
 //! cost proxy from Cocktail/Tabi), `T` the average TBT and `W` the average
-//! fraction of tokens generated on the cloud for the dataset.
+//! fraction of tokens generated on the cloud for the dataset. With a
+//! multi-replica cloud, cross-replica KV migration traffic is charged
+//! on top at [`MIGRATION_COST_PER_BYTE`] — rebalancing is not free, and
+//! a policy that thrashes sessions between replicas must show up in `c`.
 
 use std::collections::BTreeMap;
 
@@ -35,6 +38,11 @@ impl PackingFactors {
     }
 }
 
+/// Cost units charged per byte of cross-replica KV migration traffic
+/// (same arbitrary unit scale as the base `c`; intra-cluster bytes are
+/// cheap relative to model compute, but not free).
+pub const MIGRATION_COST_PER_BYTE: f64 = 1e-9;
+
 /// Accumulates cloud-side work and produces the paper's estimated cost.
 #[derive(Debug, Clone, Default)]
 pub struct CostModel {
@@ -46,6 +54,8 @@ pub struct CostModel {
     pub mean_tbt_s: f64,
     /// Which cloud model served the requests.
     pub cloud_model: String,
+    /// Cross-replica KV migration wire bytes (router rebalancing).
+    pub migration_bytes: u64,
 }
 
 impl CostModel {
@@ -61,10 +71,13 @@ impl CostModel {
         self.cloud_tokens as f64 / self.generated_tokens as f64
     }
 
-    /// Estimated cost `c = (1/Pf) × T × W` (arbitrary units; compare
-    /// across methods, not absolutely).
+    /// Estimated cost `c = (1/Pf) × T × W + migration` (arbitrary
+    /// units; compare across methods, not absolutely). The migration
+    /// term charges router rebalancing traffic at
+    /// [`MIGRATION_COST_PER_BYTE`].
     pub fn cost(&self, pf: &PackingFactors) -> f64 {
         (1.0 / pf.get(&self.cloud_model)) * self.mean_tbt_s * self.w()
+            + MIGRATION_COST_PER_BYTE * self.migration_bytes as f64
     }
 }
 
@@ -108,5 +121,22 @@ mod tests {
         let pf = PackingFactors::default();
         let c = CostModel::new("l70b");
         assert_eq!(c.cost(&pf), 0.0);
+    }
+
+    #[test]
+    fn migration_bytes_are_charged() {
+        let pf = PackingFactors::default();
+        let mut c = CostModel::new("l13b");
+        c.generated_tokens = 100;
+        c.cloud_tokens = 20;
+        c.mean_tbt_s = 0.05;
+        let base = c.cost(&pf);
+        c.migration_bytes = 1_000_000;
+        let with_migration = c.cost(&pf);
+        assert!(with_migration > base, "migrated bytes must raise the cost");
+        assert!(
+            (with_migration - base - MIGRATION_COST_PER_BYTE * 1e6).abs() < 1e-15,
+            "the delta is exactly the priced bytes"
+        );
     }
 }

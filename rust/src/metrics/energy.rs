@@ -29,6 +29,14 @@ impl EnergyModel {
         self.tokens += 1;
     }
 
+    /// Record `n` decode steps at one `layer_fraction` — bulk form of
+    /// [`EnergyModel::record_step`] for fleet-scale accounting (one call
+    /// per committed chunk instead of one per token).
+    pub fn record_steps(&mut self, n: u64, layer_fraction: f64) {
+        self.total_j += self.joules_per_token * layer_fraction * n as f64;
+        self.tokens += n;
+    }
+
     /// Record radio activity (uplink + downlink bytes).
     pub fn record_bytes(&mut self, bytes: u64) {
         self.total_j += self.joules_per_byte * bytes as f64;
@@ -66,6 +74,21 @@ mod tests {
         }
         assert!(ee.total_joules() < full.total_joules());
         assert!((full.joules_per_generated_token() - 1.86).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bulk_steps_match_single_steps() {
+        let mut one = EnergyModel::new(1.3, 0.0);
+        let mut bulk = EnergyModel::new(1.3, 0.0);
+        for _ in 0..7 {
+            one.record_step(0.8);
+        }
+        bulk.record_steps(7, 0.8);
+        assert!((one.total_joules() - bulk.total_joules()).abs() < 1e-12);
+        assert_eq!(
+            one.joules_per_generated_token(),
+            bulk.joules_per_generated_token()
+        );
     }
 
     #[test]

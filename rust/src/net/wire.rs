@@ -3,7 +3,13 @@
 //! Hand-rolled, length-prefixed little-endian encoding; the byte counts
 //! these encoders produce are what [`super::SimLink`] charges against the
 //! link — the compression ablation (Fig. 13) is therefore measured on
-//! real payloads, not estimates.
+//! real payloads, not estimates. The same discipline covers the
+//! cloud-internal [`KvMigrateMsg`]: cross-replica session migration is
+//! priced over its real encoding, not a per-row guess.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::SlotKv;
 
 /// One draft token's probability distribution, as shipped to the verifier.
 #[derive(Debug, Clone, PartialEq)]
@@ -138,6 +144,71 @@ impl DownlinkMsg {
 
     pub fn wire_bytes(&self) -> usize {
         self.encode().len()
+    }
+}
+
+/// Cloud-internal replica→replica session migration payload: a parked
+/// session's committed KV image moving between schedulers behind the
+/// router (see `crate::cloud::router`).
+///
+/// KV planes ship as **f32** little-endian words, not f16: the
+/// acceptance gate for migration is a *bit-identical* round trip (the
+/// destination replica must resume from exactly the KV the source
+/// committed), so the lossy f16 path used for probability payloads is
+/// off the table here.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvMigrateMsg {
+    pub request_id: u64,
+    pub kv: SlotKv,
+}
+
+impl KvMigrateMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        out.extend_from_slice(&self.request_id.to_le_bytes());
+        put_u32(&mut out, self.kv.len as u32);
+        put_u32(&mut out, self.kv.row as u32);
+        for &x in &self.kv.k {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        for &x in &self.kv.v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<KvMigrateMsg> {
+        if buf.len() < 16 {
+            bail!("kv migrate message truncated ({} bytes)", buf.len());
+        }
+        let request_id = u64::from_le_bytes(buf[0..8].try_into().unwrap());
+        let len = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+        let row = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
+        let plane = len * row;
+        if buf.len() != 16 + 8 * plane {
+            bail!(
+                "kv migrate message size mismatch: {} bytes for len={len} row={row}",
+                buf.len()
+            );
+        }
+        let word = |i: usize| {
+            f32::from_le_bytes(buf[16 + 4 * i..16 + 4 * i + 4].try_into().unwrap())
+        };
+        let k = (0..plane).map(word).collect();
+        let v = (plane..2 * plane).map(word).collect();
+        Ok(KvMigrateMsg { request_id, kv: SlotKv { len, row, k, v } })
+    }
+
+    /// Wire size in bytes — what the migration is priced at.
+    pub fn wire_bytes(&self) -> usize {
+        Self::wire_bytes_for(self.kv.len, self.kv.row)
+    }
+
+    /// [`KvMigrateMsg::wire_bytes`] from the session's dimensions,
+    /// without materialising a message: header (request_id + len + row)
+    /// plus two f32 planes of `len × row` words each.
+    pub fn wire_bytes_for(len: usize, row: usize) -> usize {
+        8 + 4 + 4 + 2 * 4 * len * row
     }
 }
 
@@ -277,5 +348,40 @@ mod wire_size_tests {
                 assert_eq!(m.wire_bytes(), m.encode().len());
             }
         }
+    }
+
+    #[test]
+    fn kv_migrate_wire_bytes_equals_encoded_len() {
+        for (len, row) in [(0usize, 4usize), (1, 4), (17, 4), (5, 8)] {
+            let m = KvMigrateMsg {
+                request_id: 0xAB,
+                kv: SlotKv {
+                    len,
+                    row,
+                    k: (0..len * row).map(|i| i as f32).collect(),
+                    v: (0..len * row).map(|i| -(i as f32)).collect(),
+                },
+            };
+            assert_eq!(m.wire_bytes(), m.encode().len(), "len={len} row={row}");
+            assert_eq!(m.wire_bytes(), KvMigrateMsg::wire_bytes_for(len, row));
+        }
+    }
+
+    #[test]
+    fn kv_migrate_roundtrips_bit_identical() {
+        let m = KvMigrateMsg {
+            request_id: (3u64 << 32) | 7,
+            kv: SlotKv {
+                len: 9,
+                row: 4,
+                k: (0..36).map(|i| (i * 31 + 5) as f32).collect(),
+                v: (0..36).map(|i| -((i * 17 + 3) as f32)).collect(),
+            },
+        };
+        let back = KvMigrateMsg::decode(&m.encode()).unwrap();
+        assert_eq!(back, m, "f32 planes must survive the wire bit-for-bit");
+        // malformed inputs are rejected, not misread
+        assert!(KvMigrateMsg::decode(&[0u8; 3]).is_err());
+        assert!(KvMigrateMsg::decode(&m.encode()[..20]).is_err());
     }
 }

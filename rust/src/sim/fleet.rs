@@ -5,26 +5,34 @@
 //! scored by the real [`Selector`], rejection-position prediction and
 //! alternative substitution from [`crate::device::parallel`], real
 //! top-k compression ([`compress_dist`]) priced by the real wire
-//! format — against a cloud that is the real
-//! [`Scheduler`] with the weighted-fair tenant frontend
-//! ([`crate::cloud::fairness`]). Only the *model forward passes* are
-//! synthetic: draft tokens/confidences/importances come from each
-//! device's seeded stream, and verification runs over the engine's own
-//! logits (exact speculative acceptance semantics, including
-//! corrections and bonus tokens).
+//! format — against a cloud that is the real router-fronted replica
+//! tier ([`crate::cloud::router::Router`] over `R` real schedulers
+//! with the weighted-fair tenant frontend of
+//! [`crate::cloud::fairness`]). Each modelled replica owns its own
+//! busy-until service window on the virtual clock; router rebalancing
+//! migrates quiescent sessions between replicas at round boundaries,
+//! with the migration's wire seconds and radio energy charged like any
+//! other traffic. Only the *model forward passes* are synthetic: draft
+//! tokens/confidences/importances come from each device's seeded
+//! stream, and verification runs over the engine's own logits (exact
+//! speculative acceptance semantics, including corrections and bonus
+//! tokens).
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
-use crate::config::SyneraParams;
+use crate::cloud::fairness::TenantStats;
+use crate::cloud::router::Router;
+use crate::cloud::scheduler::{CloudEvent, CloudRequest};
+use crate::config::{DeviceProfile, SyneraParams};
 use crate::device::codec::compress_dist;
 use crate::device::early_exit::SeqExitPolicy;
 use crate::device::offload::Selector;
 use crate::device::parallel::{alternative_token, predict_rejection};
 use crate::metrics::cost::{CostModel, PackingFactors};
+use crate::metrics::energy::EnergyModel;
 use crate::metrics::stats::{LatencyRecorder, Summary};
 use crate::model::cloud_engine::BatchEngine;
 use crate::net::link::{LinkProfile, SimLink};
@@ -71,6 +79,12 @@ pub struct FleetConfig {
     pub cloud_iter_s: f64,
     /// Modelled cloud service time per executed token row.
     pub cloud_row_s: f64,
+    /// Cross-replica KV migration link speed (Gbit/s) — prices the
+    /// virtual seconds a router rebalance stalls the replicas involved.
+    pub migrate_gbps: f64,
+    /// Device energy profile for the per-tenant energy column (J/token
+    /// drafting cost, J/byte radio cost).
+    pub device_profile: DeviceProfile,
     /// TTFT service-level objective (s).
     pub slo_ttft_s: f64,
     /// Per-request mean TBT service-level objective (s).
@@ -98,6 +112,8 @@ impl Default for FleetConfig {
             device_prefill_s: 1e-3,
             cloud_iter_s: 2e-3,
             cloud_row_s: 4e-4,
+            migrate_gbps: 10.0,
+            device_profile: DeviceProfile::jetson_orin_50w(),
             slo_ttft_s: 2.0,
             slo_tbt_s: 0.25,
             reservoir: 1 << 16,
@@ -127,6 +143,10 @@ pub struct TenantReport {
     pub rows_executed: u64,
     pub verifies_done: u64,
     pub draft_tokens_accepted: u64,
+    /// Device-side energy for this tenant's fleet slice: drafting
+    /// J/token plus radio J/byte over uplink, downlink and migration
+    /// traffic ([`crate::metrics::energy::EnergyModel`]).
+    pub energy_j: f64,
 }
 
 /// Aggregate results of one fleet run.
@@ -156,6 +176,16 @@ pub struct FleetReport {
     pub swap_bytes: u64,
     pub bytes_up: u64,
     pub bytes_down: u64,
+    /// Scheduler replicas behind the router this run.
+    pub replicas: usize,
+    /// Cross-replica session migrations the router performed.
+    pub migrations: u64,
+    /// Wire bytes those migrations moved (priced into `cost`).
+    pub migration_bytes: u64,
+    /// Scheduler iterations per replica (scaling/balance evidence).
+    pub replica_iterations: Vec<u64>,
+    /// Engine token rows per replica.
+    pub replica_rows: Vec<u64>,
 }
 
 impl FleetReport {
@@ -291,8 +321,8 @@ enum Ev {
     Wake { device: u32 },
     /// An uplink message reaches the cloud.
     Uplink { device: u32, req: CloudRequest },
-    /// One scheduler iteration completes.
-    CloudTick,
+    /// One scheduler iteration of replica `replica` completes.
+    CloudTick { replica: u32 },
     /// A verification reply reaches its device.
     Reply { device: u32, accepted: usize, next_token: u32 },
 }
@@ -326,10 +356,11 @@ struct Dev {
     next_req: u64,
 }
 
-#[derive(Default)]
 struct TenantAcc {
     ttft: LatencyRecorder,
     tbt: LatencyRecorder,
+    /// Device-side energy for this tenant's devices (drafting + radio).
+    energy: EnergyModel,
     requests: usize,
     completed: usize,
     slo_ok_ttft: usize,
@@ -340,14 +371,16 @@ struct TenantAcc {
 
 struct FleetRun<'a, E: BatchEngine> {
     cfg: &'a FleetConfig,
-    sched: Scheduler<E>,
+    router: Router<E>,
     q: EventQueue<Ev>,
     devs: Vec<Dev>,
     acc: Vec<TenantAcc>,
-    cloud_active: bool,
-    /// End of the last scheduled service period — the single simulated
-    /// cloud can never run two ticks concurrently.
-    cloud_busy_until: f64,
+    /// Per replica: is a CloudTick scheduled or firing for it?
+    cloud_active: Vec<bool>,
+    /// Per replica: end of its last scheduled service period — one
+    /// simulated replica never runs two ticks concurrently, and a
+    /// migration extends the windows of both replicas involved.
+    cloud_busy_until: Vec<f64>,
     measured_compute: bool,
     offered: usize,
     completed: usize,
@@ -405,6 +438,7 @@ impl<E: BatchEngine> FleetRun<'_, E> {
         let gamma = self.chunk_len(device);
         let step_s = self.cfg.device_step_s;
         let dev = &mut self.devs[device];
+        let tenant = dev.model.tenant;
         let a = dev.active.as_mut().expect("wake without an active request");
         debug_assert!(a.inflight.is_none(), "wake while a round is in flight");
         let chunk = dev.model.draft_chunk(gamma);
@@ -421,6 +455,7 @@ impl<E: BatchEngine> FleetRun<'_, E> {
             a.t_last = t;
             a.seq.extend_from_slice(&chunk.tokens);
             a.generated += chunk.tokens.len();
+            self.acc[tenant].energy.record_steps(chunk.tokens.len() as u64, 1.0);
             if a.generated >= self.cfg.params.max_new_tokens {
                 self.finish_request(t, device);
             } else {
@@ -443,6 +478,7 @@ impl<E: BatchEngine> FleetRun<'_, E> {
         // just to drop it (hot path at fleet scale)
         let up_bytes = UplinkMsg::wire_bytes_for(uncached.len(), chunk.tokens.len(), &dists);
         self.bytes_up += up_bytes as u64;
+        self.acc[tenant].energy.record_bytes(up_bytes as u64);
         let up_delay = dev.link.uplink_s(up_bytes);
         let pi = if self.cfg.params.parallel_inference && chunk.tokens.len() > 1 {
             dev.model.pi_bet(&chunk)
@@ -469,31 +505,41 @@ impl<E: BatchEngine> FleetRun<'_, E> {
 
     fn on_uplink(&mut self, t: f64, device: usize, req: CloudRequest) -> Result<()> {
         let tenant = self.devs[device].model.tenant;
-        self.sched.submit_tenant(tenant, req)?;
-        self.wake_cloud(t);
+        let r = self.router.submit_tenant(tenant, req)?;
+        self.wake_cloud(t, r);
         Ok(())
     }
 
-    fn wake_cloud(&mut self, t: f64) {
-        if !self.cloud_active && !self.sched.is_idle() {
-            self.cloud_active = true;
-            // a wake landing inside the previous tick's service period
-            // waits it out: one cloud, one service interval at a time
-            self.q.push(t.max(self.cloud_busy_until), Ev::CloudTick);
+    fn wake_cloud(&mut self, t: f64, replica: usize) {
+        if !self.cloud_active[replica] && !self.router.replica_idle(replica) {
+            self.cloud_active[replica] = true;
+            // a wake landing inside the replica's previous service
+            // period waits it out: one service interval at a time
+            self.q.push(
+                t.max(self.cloud_busy_until[replica]),
+                Ev::CloudTick { replica: replica as u32 },
+            );
         }
     }
 
-    fn on_cloud_tick(&mut self, t: f64) -> Result<()> {
-        let rows0 = self.sched.stats.rows_executed;
-        let (events, dt) = self.sched.tick()?;
-        let rows = self.sched.stats.rows_executed - rows0;
+    fn on_cloud_tick(&mut self, t: f64, replica: usize) -> Result<()> {
+        if t < self.cloud_busy_until[replica] {
+            // a migration on another replica's tick extended this
+            // replica's busy window after this event was scheduled;
+            // re-fire at the window's end (never into the past)
+            let at = self.cloud_busy_until[replica];
+            self.q.push(at, Ev::CloudTick { replica: replica as u32 });
+            return Ok(());
+        }
+        let rows0 = self.router.replica(replica).stats.rows_executed;
+        let (events, dt) = self.router.tick_replica(replica)?;
+        let rows = self.router.replica(replica).stats.rows_executed - rows0;
         let service = if self.measured_compute {
             dt.max(1e-6)
         } else {
             self.cfg.cloud_iter_s + rows as f64 * self.cfg.cloud_row_s
         };
-        let t_done = t + service;
-        self.cloud_busy_until = t_done;
+        let t_serve = t + service;
         for e in events {
             if let CloudEvent::VerifyDone { request_id, device_id, outcome } = e {
                 let device = device_id as usize;
@@ -504,9 +550,11 @@ impl<E: BatchEngine> FleetRun<'_, E> {
                 };
                 let bytes = reply.wire_bytes();
                 self.bytes_down += bytes as u64;
+                let tenant = self.devs[device].model.tenant;
+                self.acc[tenant].energy.record_bytes(bytes as u64);
                 let dl = self.devs[device].link.downlink_s(bytes);
                 self.q.push(
-                    t_done + dl,
+                    t_serve + dl,
                     Ev::Reply {
                         device: device_id,
                         accepted: outcome.accepted,
@@ -515,10 +563,30 @@ impl<E: BatchEngine> FleetRun<'_, E> {
                 );
             }
         }
-        if self.sched.is_idle() {
-            self.cloud_active = false;
+        // rebalance at the round boundary: each migration's wire time
+        // serialises after this replica's service period and extends
+        // the busy windows of both replicas it touches
+        let mut t_done = t_serve;
+        for m in self.router.rebalance()? {
+            let wire_s = m.bytes as f64 * 8.0 / (self.cfg.migrate_gbps * 1e9);
+            t_done += wire_s;
+            if let Some(tn) = m.tenant {
+                // the migrated KV transits the cloud interconnect, but
+                // the serving bytes are attributed (like swap traffic)
+                // to the tenant whose session moved
+                self.acc[tn].energy.record_bytes(m.bytes);
+            }
+            self.cloud_busy_until[m.from] = self.cloud_busy_until[m.from].max(t_done);
+            self.cloud_busy_until[m.to] = self.cloud_busy_until[m.to].max(t_done);
+        }
+        self.cloud_busy_until[replica] = self.cloud_busy_until[replica].max(t_done);
+        if self.router.replica_idle(replica) {
+            self.cloud_active[replica] = false;
         } else {
-            self.q.push(t_done, Ev::CloudTick);
+            self.q.push(
+                self.cloud_busy_until[replica],
+                Ev::CloudTick { replica: replica as u32 },
+            );
         }
         Ok(())
     }
@@ -527,6 +595,7 @@ impl<E: BatchEngine> FleetRun<'_, E> {
         let max_new = self.cfg.params.max_new_tokens;
         let (delta, step_s) = (self.cfg.params.delta, self.cfg.device_step_s);
         let dev = &mut self.devs[device];
+        let tenant = dev.model.tenant;
         let a = dev.active.as_mut().expect("reply without an active request");
         let inf = a.inflight.take().expect("reply without an in-flight round");
         let accepted = accepted.min(inf.draft.len());
@@ -573,6 +642,7 @@ impl<E: BatchEngine> FleetRun<'_, E> {
             a.t_last = t_now;
             a.seq.extend_from_slice(&commit);
             a.generated += commit.len();
+            self.acc[tenant].energy.record_steps(commit.len() as u64, 1.0);
         }
         if ended || a.generated >= max_new {
             self.finish_request(t_now, device);
@@ -586,8 +656,9 @@ impl<E: BatchEngine> FleetRun<'_, E> {
         let a = self.devs[device].active.take().expect("finishing an active request");
         if a.cloud_len > 0 {
             // the cloud holds state for this session; free it
-            let _ = self.sched.submit(CloudRequest::Release { request_id: a.req_id });
-            self.wake_cloud(t);
+            if let Ok(r) = self.router.submit(CloudRequest::Release { request_id: a.req_id }) {
+                self.wake_cloud(t, r);
+            }
         }
         let tenant = self.devs[device].model.tenant;
         let acc = &mut self.acc[tenant];
@@ -617,21 +688,24 @@ impl<E: BatchEngine> FleetRun<'_, E> {
     }
 }
 
-/// Run the fleet over the artifact-free [`MockBatchEngine`] with the
-/// synthetic offload profile (the default, CI-friendly configuration).
+/// Run the fleet over the artifact-free [`MockBatchEngine`] (one per
+/// replica, per `cfg.params.batch.replicas`) with the synthetic offload
+/// profile (the default, CI-friendly configuration).
 pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
-    let engine = MockBatchEngine::new(4, 32, VOCAB, 4096);
-    run_fleet_on(cfg, engine, &OffloadProfile::synthetic(), false)
+    let replicas = cfg.params.batch.replicas.max(1);
+    let engines = (0..replicas).map(|_| MockBatchEngine::new(4, 32, VOCAB, 4096)).collect();
+    run_fleet_on(cfg, engines, &OffloadProfile::synthetic(), false)
 }
 
-/// Run the fleet over an arbitrary [`BatchEngine`]. With
-/// `measured_compute` the virtual clock advances by the engine's
-/// *measured* per-tick compute (for the real PJRT engine on artifact
-/// machines); otherwise by the modelled
-/// `cloud_iter_s + rows × cloud_row_s`.
+/// Run the fleet over arbitrary [`BatchEngine`]s, one per replica
+/// (`engines.len()` must match `cfg.params.batch.replicas`, after the
+/// latter is normalised to ≥ 1). With `measured_compute` the virtual
+/// clock advances by each engine's *measured* per-tick compute (for
+/// the real PJRT engine on artifact machines); otherwise by the
+/// modelled `cloud_iter_s + rows × cloud_row_s`.
 pub fn run_fleet_on<E: BatchEngine>(
     cfg: &FleetConfig,
-    engine: E,
+    engines: Vec<E>,
     profile: &OffloadProfile,
     measured_compute: bool,
 ) -> Result<FleetReport> {
@@ -656,13 +730,22 @@ pub fn run_fleet_on<E: BatchEngine>(
     if weights.iter().any(|w| !w.is_finite() || *w <= 0.0) {
         bail!("tenant weights must be finite and positive: {weights:?}");
     }
+    let replicas = cfg.params.batch.replicas.max(1);
+    if engines.len() != replicas {
+        bail!("{} engines for {} configured replicas", engines.len(), replicas);
+    }
 
     let t_wall = Instant::now();
     let mut policy = cfg.params.batch.clone();
     policy.tenant_weights = weights.clone();
+    policy.replicas = replicas;
+    // replica 0 keeps the exact pre-router seed, so an R = 1 fleet is
+    // event-for-event identical to the single-scheduler driver it
+    // replaced (gated by `same_seed_gives_bit_identical_reports`)
+    let router = Router::new(engines, cfg.seed ^ 0xF1EE7, &policy)?;
     let mut run = FleetRun {
         cfg,
-        sched: Scheduler::with_policy(engine, cfg.seed ^ 0xF1EE7, policy),
+        router,
         q: EventQueue::new(),
         devs: (0..cfg.n_devices)
             .map(|d| Dev {
@@ -688,11 +771,19 @@ pub fn run_fleet_on<E: BatchEngine>(
                 } else {
                     LatencyRecorder::with_reservoir(cfg.reservoir, cfg.seed ^ 0x7B7 ^ t as u64)
                 },
-                ..TenantAcc::default()
+                energy: EnergyModel::new(
+                    cfg.device_profile.joules_per_token,
+                    cfg.device_profile.joules_per_byte,
+                ),
+                requests: 0,
+                completed: 0,
+                slo_ok_ttft: 0,
+                tbt_eligible: 0,
+                slo_ok_tbt: 0,
             })
             .collect(),
-        cloud_active: false,
-        cloud_busy_until: 0.0,
+        cloud_active: vec![false; replicas],
+        cloud_busy_until: vec![0.0; replicas],
         measured_compute,
         offered: 0,
         completed: 0,
@@ -732,7 +823,7 @@ pub fn run_fleet_on<E: BatchEngine>(
             Ev::Arrive { device, prompt } => run.on_arrive(t, device as usize, prompt),
             Ev::Wake { device } => run.on_wake(t, device as usize)?,
             Ev::Uplink { device, req } => run.on_uplink(t, device as usize, req)?,
-            Ev::CloudTick => run.on_cloud_tick(t)?,
+            Ev::CloudTick { replica } => run.on_cloud_tick(t, replica as usize)?,
             Ev::Reply { device, accepted, next_token } => {
                 run.on_reply(t, device as usize, accepted, next_token)
             }
@@ -747,8 +838,29 @@ pub fn run_fleet_on<E: BatchEngine>(
     } else {
         run.q.now()
     };
-    let stats = run.sched.stats.clone();
-    let tstats = run.sched.tenant_stats.clone();
+    // per-tenant and aggregate cloud stats, summed across replicas
+    let nrep = run.router.n_replicas();
+    let mut cloud_draft_rows = 0u64;
+    let mut cloud_iterations = 0u64;
+    let (mut swap_ins, mut swap_outs, mut swap_bytes) = (0u64, 0u64, 0u64);
+    let mut replica_iterations = Vec::with_capacity(nrep);
+    let mut replica_rows = Vec::with_capacity(nrep);
+    let mut tstats = vec![TenantStats::default(); cfg.tenants];
+    for r in 0..nrep {
+        let s = run.router.replica(r);
+        cloud_draft_rows += s.stats.draft_tokens_seen;
+        cloud_iterations += s.stats.iterations;
+        swap_ins += s.stats.swap_ins;
+        swap_outs += s.stats.swap_outs;
+        swap_bytes += s.stats.swap_bytes;
+        replica_iterations.push(s.stats.iterations);
+        replica_rows.push(s.stats.rows_executed);
+        for (t, ts) in s.tenant_stats.iter().enumerate().take(cfg.tenants) {
+            tstats[t].rows_executed += ts.rows_executed;
+            tstats[t].verifies_done += ts.verifies_done;
+            tstats[t].draft_tokens_accepted += ts.draft_tokens_accepted;
+        }
+    }
     let mut tenants = Vec::with_capacity(cfg.tenants);
     for (t, acc) in run.acc.iter().enumerate() {
         let done = acc.completed.max(1);
@@ -764,6 +876,7 @@ pub fn run_fleet_on<E: BatchEngine>(
             rows_executed: tstats[t].rows_executed,
             verifies_done: tstats[t].verifies_done,
             draft_tokens_accepted: tstats[t].draft_tokens_accepted,
+            energy_j: acc.energy.total_joules(),
         });
     }
     let mut report = FleetReport {
@@ -777,20 +890,26 @@ pub fn run_fleet_on<E: BatchEngine>(
         local_chunks: run.local_chunks,
         pi_hits: run.pi_hits,
         pi_misses: run.pi_misses,
-        cloud_draft_rows: stats.draft_tokens_seen,
+        cloud_draft_rows,
         cost: 0.0,
-        cloud_iterations: stats.iterations,
-        swap_ins: stats.swap_ins,
-        swap_outs: stats.swap_outs,
-        swap_bytes: stats.swap_bytes,
+        cloud_iterations,
+        swap_ins,
+        swap_outs,
+        swap_bytes,
         bytes_up: run.bytes_up,
         bytes_down: run.bytes_down,
+        replicas: nrep,
+        migrations: run.router.stats.migrations,
+        migration_bytes: run.router.stats.migration_bytes,
+        replica_iterations,
+        replica_rows,
     };
     let cost_model = CostModel {
         cloud_tokens: report.cloud_draft_rows,
         generated_tokens: report.generated_tokens,
         mean_tbt_s: report.mean_tbt_s(),
         cloud_model: cfg.cloud_model.clone(),
+        migration_bytes: report.migration_bytes,
     };
     report.cost = cost_model.cost(&PackingFactors::default());
     Ok(report)

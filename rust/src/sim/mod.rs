@@ -6,13 +6,16 @@
 //! and sleeps with a **deterministic discrete-event simulation** in
 //! which N simulated devices each run the *genuine* Synera device loop
 //! (draft → [`crate::device::offload::Selector`] → parallel inference
-//! via [`crate::device::parallel`] → verify) and a single simulated
-//! cloud advances the *real* [`crate::cloud::scheduler::Scheduler`] —
-//! over [`crate::testutil::MockBatchEngine`] by default, or the PJRT
-//! [`crate::model::CloudEngine`] on artifact machines. Thousands of
-//! devices simulate per wall-second, so the queueing/fairness regime
-//! of Fig. 15 can finally be explored at population scale
-//! (`benches/fig19_fleet.rs`).
+//! via [`crate::device::parallel`] → verify) and a simulated cloud
+//! tier advances the *real* [`crate::cloud::router::Router`] over `R`
+//! real [`crate::cloud::scheduler::Scheduler`] replicas — each over a
+//! [`crate::testutil::MockBatchEngine`] by default, or the PJRT
+//! [`crate::model::CloudEngine`] on artifact machines. Each replica
+//! owns its own busy-until service window on the virtual clock; router
+//! rebalancing migrates parked sessions between replicas with the wire
+//! seconds priced in. Thousands of devices simulate per wall-second,
+//! so the queueing/fairness regime of Fig. 15 can finally be explored
+//! at population scale (`benches/fig19_fleet.rs`).
 //!
 //! ## The virtual-clock contract
 //!

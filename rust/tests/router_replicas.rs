@@ -1,0 +1,382 @@
+//! Router/multi-replica gates — artifact-free. Exercises the
+//! router-fronted cloud tier ([`synera::cloud::router::Router`]) over
+//! deterministic [`MockBatchEngine`] replicas:
+//!
+//! * cross-replica KV migration round trips **bit-identically** through
+//!   the real [`KvMigrateMsg`] wire encoding, and the migrated session
+//!   keeps verifying on its new home to its exact token budget;
+//! * migrated bytes are priced over the real encoding (the record's
+//!   byte count equals `encode().len()`), and session affinity holds —
+//!   a busy session never migrates;
+//! * placement spreads a skewed tenant; threshold-driven rebalancing
+//!   converges to the configured gap;
+//! * under random traffic with forced rebalances, no session is ever
+//!   resident on two replicas and every replica conserves its slots
+//!   and blocks;
+//! * the fleet simulator is bit-reproducible at R > 1 with rebalancing
+//!   enabled.
+
+use std::collections::HashSet;
+
+use synera::cloud::router::Router;
+use synera::cloud::scheduler::{CloudEvent, CloudRequest};
+use synera::cloud::verifier::VerifyOutcome;
+use synera::config::{BatchPolicy, SyneraParams};
+use synera::model::cloud_engine::BatchEngine;
+use synera::net::wire::{Dist, KvMigrateMsg};
+use synera::runtime::SlotKv;
+use synera::sim::{run_fleet, FleetConfig};
+use synera::testutil::{check, usize_in, MockBatchEngine, MOCK_KV_ROW};
+
+const VOCAB: usize = 64;
+
+fn dense_dists(n: usize) -> Vec<Dist> {
+    vec![Dist::Dense(vec![1.0 / VOCAB as f32; VOCAB]); n]
+}
+
+fn router_with(n: usize, policy: &BatchPolicy) -> Router<MockBatchEngine> {
+    let engines = (0..n).map(|_| MockBatchEngine::new(4, 32, VOCAB, 4096)).collect();
+    Router::new(engines, 0x7E57_0001, policy).unwrap()
+}
+
+fn verify_req(id: u64, uncached: Vec<u32>, draft: Vec<u32>) -> CloudRequest {
+    let n = draft.len();
+    CloudRequest::Verify {
+        request_id: id,
+        device_id: id as u32,
+        uncached,
+        draft,
+        dists: dense_dists(n),
+        greedy: true,
+    }
+}
+
+/// Tick replica `r` until it surfaces `VerifyDone` for `id`.
+fn drive_to_verify_done(
+    router: &mut Router<MockBatchEngine>,
+    r: usize,
+    id: u64,
+) -> VerifyOutcome {
+    for _ in 0..200 {
+        let (events, _) = router.tick_replica(r).unwrap();
+        for e in events {
+            if let CloudEvent::VerifyDone { request_id, outcome, .. } = e {
+                if request_id == id {
+                    return outcome;
+                }
+            }
+        }
+    }
+    panic!("verify round for session {id} never completed on replica {r}");
+}
+
+/// The committed KV image of a resident session, read off the engine.
+fn resident_kv(router: &Router<MockBatchEngine>, r: usize, id: u64) -> SlotKv {
+    let s = router.replica(r);
+    let slot = s.sessions().slot_of(id).expect("session is resident");
+    s.engine.export_slot(slot)
+}
+
+fn assert_replica_conserved(router: &Router<MockBatchEngine>, r: usize) {
+    let s = router.replica(r);
+    assert_eq!(s.engine.free_slots(), s.engine.slots, "replica {r}: slots returned");
+    assert_eq!(s.engine.allocs, s.engine.frees, "replica {r}: slot conservation");
+    assert_eq!(
+        s.sessions().free_blocks(),
+        s.sessions().block_capacity(),
+        "replica {r}: block conservation"
+    );
+}
+
+/// The tentpole gate: a verify session is bounced between two replicas
+/// at every round boundary. Each migration's KV image must round trip
+/// bit-for-bit through the real wire encoding, its priced byte count
+/// must equal the actual encoding length, and the session must keep
+/// verifying on its new home replica to *exactly* its token budget.
+#[test]
+fn migrated_session_round_trips_bit_identical_and_finishes_its_budget() {
+    let mut router = router_with(2, &BatchPolicy::default());
+    const ID: u64 = 42;
+    let max_new = 6usize;
+    let mut seq: Vec<u32> = vec![12, 13, 14, 15]; // prompt + commits
+    let mut cloud_len = 0usize;
+    let mut generated = 0usize;
+    let mut expected_home: Option<usize> = None;
+    let mut migrations = 0u64;
+
+    while generated < max_new {
+        let draft = vec![9u32, 9];
+        let room = max_new - generated;
+        let start_len = seq.len();
+        let uncached = seq[cloud_len..].to_vec();
+        assert!(!uncached.is_empty(), "verify rounds always carry new tokens");
+        let home = router.submit(verify_req(ID, uncached, draft.clone())).unwrap();
+        if let Some(h) = expected_home {
+            assert_eq!(home, h, "affinity must follow the migrated session");
+        }
+        let outcome = drive_to_verify_done(&mut router, home, ID);
+
+        // commit exactly as the device protocol does (mock never EOS)
+        let accepted = outcome.accepted.min(draft.len());
+        cloud_len = start_len + accepted;
+        let mut commit: Vec<u32> = draft[..accepted].to_vec();
+        commit.push(outcome.next_token);
+        commit.truncate(room);
+        seq.extend_from_slice(&commit);
+        generated += commit.len();
+
+        // round boundary: bounce the now-quiescent session across
+        let src = router.home_of(ID).expect("session stays open until release");
+        let dst = 1 - src;
+        let kv_before = resident_kv(&router, src, ID);
+        assert_eq!(kv_before.len, cloud_len, "cloud KV holds exactly the accepted prefix");
+        let rec = router.migrate_session(ID, dst).unwrap();
+        migrations += 1;
+        assert_eq!(rec.from, src);
+        assert_eq!(rec.to, dst);
+        assert_eq!(
+            rec.bytes as usize,
+            KvMigrateMsg::wire_bytes_for(kv_before.len, MOCK_KV_ROW),
+            "priced bytes follow the wire formula"
+        );
+        let msg = KvMigrateMsg { request_id: ID, kv: kv_before.clone() };
+        assert_eq!(rec.bytes as usize, msg.encode().len(), "priced over the real encoding");
+        assert!(
+            !router.replica(src).sessions().contains(ID),
+            "never resident on two replicas"
+        );
+        assert_eq!(router.home_of(ID), Some(dst));
+        let kv_after = resident_kv(&router, dst, ID);
+        assert_eq!(kv_after, kv_before, "migration round trip must be bit-identical");
+        expected_home = Some(dst);
+    }
+
+    assert_eq!(generated, max_new, "the token budget is hit exactly");
+    assert_eq!(router.stats.migrations, migrations);
+    assert!(router.stats.migration_bytes > 0, "migrated KV always carries committed rows");
+    router.submit(CloudRequest::Release { request_id: ID }).unwrap();
+    assert!(router.is_idle());
+    assert_eq!(router.home_of(ID), None);
+    for r in 0..2 {
+        assert_replica_conserved(&router, r);
+    }
+}
+
+/// Session affinity: a session with queued work must not migrate — and
+/// the failed attempt leaves it fully functional on its home replica.
+#[test]
+fn busy_sessions_never_migrate() {
+    let mut router = router_with(2, &BatchPolicy::default());
+    let home = router.submit(verify_req(7, vec![12, 13], vec![9, 9])).unwrap();
+    // round still queued: the session is busy, the move must refuse
+    assert!(router.migrate_session(7, 1 - home).is_err());
+    assert_eq!(router.home_of(7), Some(home), "failed migration leaves the home intact");
+    let _ = drive_to_verify_done(&mut router, home, 7);
+    // quiescent now: the same move succeeds
+    router.migrate_session(7, 1 - home).unwrap();
+    assert_eq!(router.home_of(7), Some(1 - home));
+    router.submit(CloudRequest::Release { request_id: 7 }).unwrap();
+    assert!(router.is_idle());
+}
+
+/// Tenant-aware placement: a single hot tenant's sessions spread
+/// across replicas instead of piling onto one.
+#[test]
+fn skewed_tenant_spreads_across_replicas() {
+    let policy = BatchPolicy { tenant_weights: vec![1.0, 1.0], ..BatchPolicy::default() };
+    let mut router = router_with(2, &policy);
+    let mut homes = [0usize; 2];
+    for id in 0..8u64 {
+        let r = router
+            .submit_tenant(
+                0, // every session from the same tenant
+                CloudRequest::Generate { request_id: id, prompt: vec![5, 6, 7], max_new: 2 },
+            )
+            .unwrap();
+        homes[r] += 1;
+    }
+    assert!(
+        homes[0].abs_diff(homes[1]) <= 1,
+        "skewed tenant must balance: {homes:?}"
+    );
+}
+
+/// Threshold-driven rebalancing converges: pile every quiescent
+/// session onto one replica, then watch `rebalance()` move the
+/// cheapest ones until the gap closes to the threshold.
+#[test]
+fn rebalance_converges_to_the_threshold() {
+    // max_sessions > engine slots: the forced 6/0 pile-up needs the
+    // hot replica to park sessions beyond its 4 physical slots
+    let mut router = router_with(2, &BatchPolicy { max_sessions: 8, ..BatchPolicy::default() });
+    let n = 6u64;
+    for id in 0..n {
+        let home = router.submit(verify_req(id, vec![12, 13], vec![9, 9])).unwrap();
+        let _ = drive_to_verify_done(&mut router, home, id);
+    }
+    // force the skew: everything onto replica 0
+    for id in 0..n {
+        if router.home_of(id) == Some(1) {
+            router.migrate_session(id, 0).unwrap();
+        }
+    }
+    assert_eq!(router.replica(0).active_sessions(), n as usize);
+    router.rebalance_threshold = 1;
+    let moves = router.rebalance().unwrap();
+    assert_eq!(moves.len(), 3, "6/0 split closes to 3/3 (gap 0 ≤ threshold 1)");
+    assert!(moves.iter().all(|m| m.from == 0 && m.to == 1));
+    assert_eq!(router.replica(0).active_sessions(), 3);
+    assert_eq!(router.replica(1).active_sessions(), 3);
+    // a balanced tier rebalances to nothing
+    assert!(router.rebalance().unwrap().is_empty());
+    for id in 0..n {
+        router.submit(CloudRequest::Release { request_id: id }).unwrap();
+    }
+    assert!(router.is_idle());
+    for r in 0..2 {
+        assert_replica_conserved(&router, r);
+    }
+}
+
+/// Property: random verify/generate traffic over 2–3 replicas with
+/// interleaved ticks and forced rebalances never puts one session on
+/// two replicas, and after a full drain every replica conserves its
+/// slots and blocks.
+#[test]
+fn prop_random_traffic_with_rebalances_conserves_everything() {
+    check("router traffic conserves slots/blocks; single residency", |rng| {
+        let nrep = usize_in(rng, 2, 3);
+        let policy = BatchPolicy {
+            max_sessions: 4,
+            rebalance_threshold: 1,
+            ..BatchPolicy::default()
+        };
+        let engines = (0..nrep).map(|_| MockBatchEngine::new(2, 8, VOCAB, 4096)).collect();
+        let mut router: Router<MockBatchEngine> =
+            Router::new(engines, 0xABCD ^ rng.below(1 << 30), &policy).unwrap();
+        let mut next_id = 0u64;
+        let mut open: HashSet<u64> = HashSet::new(); // sessions to release
+        for _ in 0..usize_in(rng, 20, 60) {
+            match rng.below(6) {
+                0 => {
+                    router
+                        .submit(verify_req(next_id, vec![12, 13, 14], vec![9, 9]))
+                        .map_err(|e| e.to_string())?;
+                    open.insert(next_id);
+                    next_id += 1;
+                }
+                1 => {
+                    router
+                        .submit(CloudRequest::Generate {
+                            request_id: next_id,
+                            prompt: vec![5, 6, 7],
+                            max_new: 2,
+                        })
+                        .map_err(|e| e.to_string())?;
+                    next_id += 1; // generations close themselves
+                }
+                2 => {
+                    // a follow-up round for some *quiescent* open
+                    // session (the protocol never overlaps rounds)
+                    if let Some(&id) = open.iter().min() {
+                        let quiescent = router
+                            .home_of(id)
+                            .is_some_and(|h| !router.replica(h).session_busy(id));
+                        if quiescent {
+                            router
+                                .submit(verify_req(id, vec![10], vec![9]))
+                                .map_err(|e| e.to_string())?;
+                        }
+                    }
+                }
+                3 => {
+                    let _ = router.rebalance().map_err(|e| e.to_string())?;
+                }
+                _ => {
+                    let r = usize_in(rng, 0, nrep - 1);
+                    if !router.replica_idle(r) {
+                        router.tick_replica(r).map_err(|e| e.to_string())?;
+                    }
+                }
+            }
+            // single-residency invariant, checked after every step
+            for id in 0..next_id {
+                let residents =
+                    (0..nrep).filter(|&r| router.replica(r).sessions().contains(id)).count();
+                if residents > 1 {
+                    return Err(format!("session {id} resident on {residents} replicas"));
+                }
+            }
+        }
+        // drain: release every session, then tick everything to idle
+        for id in open {
+            router.submit(CloudRequest::Release { request_id: id }).map_err(|e| e.to_string())?;
+        }
+        for _ in 0..3_000 {
+            if router.is_idle() {
+                break;
+            }
+            for r in 0..nrep {
+                if !router.replica_idle(r) {
+                    router.tick_replica(r).map_err(|e| e.to_string())?;
+                }
+            }
+        }
+        if !router.is_idle() {
+            return Err("router failed to drain".into());
+        }
+        for r in 0..nrep {
+            let s = router.replica(r);
+            if s.engine.free_slots() != s.engine.slots {
+                return Err(format!("replica {r}: slot leak"));
+            }
+            if s.engine.allocs != s.engine.frees {
+                return Err(format!("replica {r}: alloc/free imbalance"));
+            }
+            if s.sessions().free_blocks() != s.sessions().block_capacity() {
+                return Err(format!("replica {r}: block leak"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Same seed ⇒ bit-identical per-tenant reports at R = 2 with
+/// rebalancing on — the fleet's determinism contract extends across
+/// the router tier, migrations included.
+#[test]
+fn fleet_with_replicas_and_rebalancing_is_deterministic() {
+    let cfg = FleetConfig {
+        n_devices: 48,
+        duration_s: 4.0,
+        rate_rps: 24.0,
+        tenants: 2,
+        params: SyneraParams {
+            batch: BatchPolicy {
+                max_sessions: 32,
+                replicas: 2,
+                rebalance_threshold: 2,
+                ..BatchPolicy::default()
+            },
+            ..SyneraParams::default()
+        },
+        seed: 0x5EED5,
+        ..FleetConfig::default()
+    };
+    let a = run_fleet(&cfg).unwrap();
+    let b = run_fleet(&cfg).unwrap();
+    assert_eq!(a.replicas, 2);
+    assert_eq!(
+        format!("{:?}", a.tenants),
+        format!("{:?}", b.tenants),
+        "per-tenant reports must be bit-identical"
+    );
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.migration_bytes, b.migration_bytes);
+    assert_eq!(a.replica_iterations, b.replica_iterations);
+    assert_eq!(a.replica_rows, b.replica_rows);
+    assert_eq!(a.generated_tokens, b.generated_tokens);
+    // both replicas actually served work
+    assert!(a.replica_iterations.iter().all(|&n| n > 0), "{:?}", a.replica_iterations);
+}
