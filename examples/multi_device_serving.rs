@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
         n_devices,
         requests_per_device: requests,
         artifacts: artifacts_dir(),
+        trace: None,
     };
     println!(
         "multi-device serving: {n_devices} devices × {requests} requests (pair {}, {})",

@@ -16,12 +16,18 @@
 //! session is admitted and the knee moves out to the host-memory bound,
 //! at the cost of the reported swap traffic.
 
-use synera::bench::Table;
+//!
+//! `--json` additionally writes `BENCH_fig15.json` with the raw rows
+//! of all three tables (rate sweep, background load, paged sessions).
+
+use synera::bench::{write_bench_json, Table};
 use synera::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
 use synera::config::BatchPolicy;
 use synera::model::CloudEngine;
 use synera::net::wire::Dist;
 use synera::runtime::Runtime;
+use synera::util::cli::Args;
+use synera::util::json::Json;
 use synera::util::rng::Rng;
 
 enum Work {
@@ -222,10 +228,24 @@ fn simulate_sessions(
     ))
 }
 
+/// NaN-safe JSON number: overloaded points with no completions have no
+/// p50, which must serialize as `null` rather than invalid `NaN`.
+fn jnum(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
     let rt = Runtime::load_default()?;
     // warm the engine (compile) before timing-sensitive simulation
     let _ = simulate(&rt, 0.3, 5.0, 0.0)?;
+    let mut rate_rows: Vec<Json> = Vec::new();
+    let mut bg_rows: Vec<Json> = Vec::new();
+    let mut session_rows: Vec<Json> = Vec::new();
     let mut t = Table::new(
         "Fig 15: verification latency (p50, ms) vs offered user request rate",
         &["user req/s", "budget 0.3", "budget 0.6", "budget 0.9"],
@@ -239,6 +259,12 @@ fn main() -> anyhow::Result<()> {
             } else {
                 cells.push(format!("{:.1}", p50 * 1e3));
             }
+            rate_rows.push(Json::obj(vec![
+                ("user_rps", Json::num(rps)),
+                ("budget", Json::num(b)),
+                ("verify_p50_s", jnum(p50)),
+                ("done_frac", Json::num(done)),
+            ]));
         }
         t.row(&cells);
     }
@@ -257,6 +283,13 @@ fn main() -> anyhow::Result<()> {
             } else {
                 cells.push(format!("{:.1}", p50 * 1e3));
             }
+            bg_rows.push(Json::obj(vec![
+                ("user_rps", Json::num(rps)),
+                ("gen_rps", Json::num(rps * 0.2)),
+                ("budget", Json::num(b)),
+                ("verify_p50_s", jnum(p50)),
+                ("done_frac", Json::num(done)),
+            ]));
         }
         t2.row(&cells);
     }
@@ -282,7 +315,25 @@ fn main() -> anyhow::Result<()> {
             cell(p_paged, done_paged),
             format!("{si}/{so}"),
         ]);
+        session_rows.push(Json::obj(vec![
+            ("sessions", Json::num(s as f64)),
+            ("p50_unpaged_s", jnum(p_base)),
+            ("done_frac_unpaged", Json::num(done_base)),
+            ("p50_paged_s", jnum(p_paged)),
+            ("done_frac_paged", Json::num(done_paged)),
+            ("swap_ins", Json::num(si as f64)),
+            ("swap_outs", Json::num(so as f64)),
+        ]));
     }
     t3.print();
+    if args.has_flag("json") {
+        let results = Json::obj(vec![
+            ("rate_sweep", Json::Arr(rate_rows)),
+            ("background_load", Json::Arr(bg_rows)),
+            ("paged_sessions", Json::Arr(session_rows)),
+        ]);
+        let path = write_bench_json("fig15", results)?;
+        synera::log!(Info, "wrote {}", path.display());
+    }
     Ok(())
 }

@@ -1,21 +1,29 @@
 //! Fig. 18 — cloud-runtime scheduling overhead vs offloading budget:
 //! scheduler bookkeeping time as a fraction of engine compute (higher
 //! budgets → shorter verification chunks → relatively more scheduling).
+//!
+//! `--json` additionally writes `BENCH_fig18.json` with the raw
+//! numbers plus the per-tick phase breakdown (wfq / paging / pack /
+//! engine / commit seconds) from the scheduler's phase accounting.
 
-use synera::bench::{pct, Table};
+use synera::bench::{pct, write_bench_json, Table};
 use synera::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
 use synera::model::CloudEngine;
 use synera::net::wire::Dist;
 use synera::runtime::Runtime;
+use synera::util::cli::Args;
+use synera::util::json::Json;
 use synera::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
     let rt = Runtime::load_default()?;
     let gamma = rt.meta.gamma;
     let mut t = Table::new(
         "Fig 18: scheduler overhead vs budget (verify stream, l13b)",
         &["budget", "uncached/verify", "engine ms/verify", "sched µs/verify", "overhead"],
     );
+    let mut rows: Vec<Json> = Vec::new();
     for b in [0.1, 0.2, 0.4, 0.6, 0.8, 1.0] {
         let offl = (b as f64 + 0.15).min(1.0);
         let uncached_len = ((gamma as f64 * (1.0 - offl) / offl).round() as usize).max(1);
@@ -52,7 +60,25 @@ fn main() -> anyhow::Result<()> {
             format!("{:.1}", s.sched_overhead_s / n as f64 * 1e6),
             pct(overhead),
         ]);
+        rows.push(Json::obj(vec![
+            ("budget", Json::num(b)),
+            ("uncached_per_verify", Json::num(uncached_len as f64)),
+            ("verifies", Json::num(n as f64)),
+            ("iterations", Json::num(s.iterations as f64)),
+            ("engine_s_per_verify", Json::num(s.busy_s / n as f64)),
+            ("sched_s_per_verify", Json::num(s.sched_overhead_s / n as f64)),
+            ("overhead_frac", Json::num(overhead)),
+            ("phase_wfq_s", Json::num(s.phase_wfq_s)),
+            ("phase_paging_s", Json::num(s.phase_paging_s)),
+            ("phase_pack_s", Json::num(s.phase_pack_s)),
+            ("phase_engine_s", Json::num(s.phase_engine_s)),
+            ("phase_commit_s", Json::num(s.phase_commit_s)),
+        ]));
     }
     t.print();
+    if args.has_flag("json") {
+        let path = write_bench_json("fig18", Json::Arr(rows))?;
+        synera::log!(Info, "wrote {}", path.display());
+    }
     Ok(())
 }

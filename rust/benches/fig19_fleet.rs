@@ -13,9 +13,15 @@
 //! engine with a modelled per-row service time, so this bench runs
 //! anywhere `cargo bench` does.
 
-use synera::bench::Table;
+//!
+//! `--json` additionally writes `BENCH_fig19.json` with the raw rows
+//! of both tables (device scaling and the replica sweep).
+
+use synera::bench::{write_bench_json, Table};
 use synera::config::{BatchPolicy, SyneraParams};
 use synera::sim::{run_fleet, FleetConfig, FleetReport};
+use synera::util::cli::Args;
+use synera::util::json::Json;
 
 /// Worst-tenant p95 TTFT and completions-weighted TTFT-SLO fraction.
 fn fleet_slo(rep: &FleetReport) -> (f64, f64) {
@@ -31,6 +37,9 @@ fn fleet_slo(rep: &FleetReport) -> (f64, f64) {
 }
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let mut scaling_rows: Vec<Json> = Vec::new();
+    let mut replica_rows: Vec<Json> = Vec::new();
     let rates = [0.125f64, 0.25, 0.5];
     let mut t = Table::new(
         "Fig 19: fleet scaling — p95 TTFT / TTFT-SLO attainment vs devices x per-device req/s",
@@ -59,12 +68,24 @@ fn main() -> anyhow::Result<()> {
             wall += rep.wall_s;
             let (p95, slo_frac) = fleet_slo(&rep);
             cells.push(format!("{:.0}ms / {:.0}%", p95 * 1e3, slo_frac * 100.0));
+            scaling_rows.push(Json::obj(vec![
+                ("devices", Json::num(devices as f64)),
+                ("rate_per_dev", Json::num(r)),
+                ("completed", Json::num(rep.completed as f64)),
+                ("offered", Json::num(rep.offered as f64)),
+                ("p95_ttft_s", Json::num(p95)),
+                ("slo_ttft_frac", Json::num(slo_frac)),
+                ("wall_s", Json::num(rep.wall_s)),
+            ]));
         }
         cells.push(format!("{wall:.2}"));
         t.row(&cells);
     }
     t.print();
-    println!("(worst-tenant p95; SLO fraction is completions-weighted across tenants)");
+    synera::log!(
+        Info,
+        "(worst-tenant p95; SLO fraction is completions-weighted across tenants)"
+    );
 
     // ---- replica axis: scale the saturated 4096-device point out ----
     let mut t2 = Table::new(
@@ -102,8 +123,29 @@ fn main() -> anyhow::Result<()> {
             rep.migration_bytes.to_string(),
             format!("{:.2}", rep.wall_s),
         ]);
+        replica_rows.push(Json::obj(vec![
+            ("replicas", Json::num(replicas as f64)),
+            ("completed", Json::num(rep.completed as f64)),
+            ("offered", Json::num(rep.offered as f64)),
+            ("p95_ttft_s", Json::num(p95)),
+            ("slo_ttft_frac", Json::num(slo_frac)),
+            ("migrations", Json::num(rep.migrations as f64)),
+            ("migration_bytes", Json::num(rep.migration_bytes as f64)),
+            ("wall_s", Json::num(rep.wall_s)),
+        ]));
     }
     t2.print();
-    println!("(same seed per row; per-tenant reports are bit-reproducible at any fixed R)");
+    synera::log!(
+        Info,
+        "(same seed per row; per-tenant reports are bit-reproducible at any fixed R)"
+    );
+    if args.has_flag("json") {
+        let results = Json::obj(vec![
+            ("scaling", Json::Arr(scaling_rows)),
+            ("replicas", Json::Arr(replica_rows)),
+        ]);
+        let path = write_bench_json("fig19", results)?;
+        synera::log!(Info, "wrote {}", path.display());
+    }
     Ok(())
 }

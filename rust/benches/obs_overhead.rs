@@ -1,0 +1,69 @@
+//! Observability overhead guard: with tracing disabled the obs layer
+//! must cost nothing measurable. Two checks:
+//!
+//! 1. micro: per-call cost of the disabled `trace::with` hot path
+//!    (one `Option` branch — should be ~1 ns);
+//! 2. macro: the same fleet simulation run with `trace: None` vs a
+//!    live sink, reporting the wall-clock ratio. The disabled run is
+//!    the shipping configuration; the enabled run bounds what `--trace`
+//!    costs on top.
+//!
+//! Reported, not asserted: bench wall times are too noisy for a hard
+//! CI gate, but the micro number makes regressions obvious at a
+//! glance (a disabled-path regression shows up as 10-100× here).
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use synera::bench::{f2, fmt_s, Table};
+use synera::obs::trace::{self, TraceShared, TraceSink};
+use synera::sim::{run_fleet, FleetConfig};
+
+/// Best-of-`reps` fleet wall time under the given trace config.
+fn fleet_wall(trace: Option<TraceShared>, reps: usize) -> anyhow::Result<f64> {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let cfg = FleetConfig {
+            n_devices: 128,
+            duration_s: 4.0,
+            rate_rps: 48.0,
+            tenants: 4,
+            seed: 0x0B5,
+            trace: trace.clone(),
+            ..FleetConfig::default()
+        };
+        let t0 = Instant::now();
+        let rep = run_fleet(&cfg)?;
+        best = best.min(t0.elapsed().as_secs_f64());
+        black_box(rep.completed);
+    }
+    Ok(best)
+}
+
+fn main() -> anyhow::Result<()> {
+    // micro: disabled trace::with is one None branch per call
+    let off: Option<TraceShared> = None;
+    let iters = 50_000_000u64;
+    let t0 = Instant::now();
+    for i in 0..iters {
+        trace::with(black_box(&off), |s| {
+            s.instant(0, 0, "never", i, Vec::new());
+        });
+    }
+    let per_call = t0.elapsed().as_secs_f64() / iters as f64;
+
+    // macro: identical fleet run with the sink absent vs live
+    let wall_off = fleet_wall(None, 3)?;
+    let wall_on = fleet_wall(Some(trace::shared(TraceSink::virtual_time(1 << 20))), 3)?;
+
+    let mut t = Table::new(
+        "obs overhead: tracing disabled must be free",
+        &["check", "value"],
+    );
+    t.row(&["disabled trace::with / call".into(), fmt_s(per_call)]);
+    t.row(&["fleet wall, trace off".into(), fmt_s(wall_off)]);
+    t.row(&["fleet wall, trace on".into(), fmt_s(wall_on)]);
+    t.row(&["on/off ratio".into(), f2(wall_on / wall_off)]);
+    t.print();
+    Ok(())
+}

@@ -1,11 +1,16 @@
 //! Bench harness (the offline mirror carries no criterion): a small
 //! timing/reporting toolkit used by every `cargo bench` target
 //! (`harness = false`). Provides warmup + repeated measurement with
-//! mean/p50/p95, and paper-style table printing.
+//! mean/p50/p95, paper-style table printing, and the stable
+//! `BENCH_<name>.json` snapshot writer ([`write_bench_json`]) that
+//! benches use under `--json` so the perf trajectory is tracked in
+//! machine-readable form.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::metrics::stats::Summary;
+use crate::util::json::Json;
 
 /// Time `f` over `iters` iterations after `warmup` runs; returns
 /// per-iteration seconds.
@@ -63,7 +68,7 @@ impl Table {
     }
 
     pub fn print(&self) {
-        println!("\n=== {} ===", self.title);
+        crate::log!(Info, "\n=== {} ===", self.title);
         let line = |cells: &[String], widths: &[usize]| {
             let mut s = String::from("| ");
             for (c, w) in cells.iter().zip(widths) {
@@ -71,11 +76,11 @@ impl Table {
             }
             s
         };
-        println!("{}", line(&self.header, &self.widths));
+        crate::log!(Info, "{}", line(&self.header, &self.widths));
         let sep: usize = self.widths.iter().sum::<usize>() + 3 * self.widths.len() + 1;
-        println!("{}", "-".repeat(sep));
+        crate::log!(Info, "{}", "-".repeat(sep));
         for r in &self.rows {
-            println!("{}", line(r, &self.widths));
+            crate::log!(Info, "{}", line(r, &self.widths));
         }
         self.save();
     }
@@ -97,6 +102,23 @@ impl Table {
         }
         let _ = std::fs::write(dir.join(format!("{slug}.tsv")), out);
     }
+}
+
+/// Write a stable machine-readable benchmark snapshot next to the
+/// bench's working directory: `BENCH_<name>.json` holding
+/// `{"bench": name, "schema": 1, "results": <results>}`. The schema
+/// field versions the layout so downstream diffing of snapshots across
+/// commits can detect shape changes; `results` is bench-specific but
+/// must keep its keys stable within a schema version.
+pub fn write_bench_json(name: &str, results: Json) -> crate::Result<PathBuf> {
+    let doc = Json::obj(vec![
+        ("bench", Json::str(name)),
+        ("schema", Json::num(1)),
+        ("results", results),
+    ]);
+    let path = PathBuf::from(format!("BENCH_{name}.json"));
+    std::fs::write(&path, doc.to_string())?;
+    Ok(path)
 }
 
 /// `fN` formatting helpers for table cells.

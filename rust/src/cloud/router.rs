@@ -50,6 +50,7 @@ use crate::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler};
 use crate::config::BatchPolicy;
 use crate::model::cloud_engine::BatchEngine;
 use crate::net::wire::KvMigrateMsg;
+use crate::obs::trace::{self, TraceShared, PID_ROUTER};
 
 /// Router-level counters (per-replica stats live on the replicas).
 #[derive(Debug, Clone, Default)]
@@ -93,6 +94,9 @@ pub struct Router<E: BatchEngine> {
     /// stall a rebalance can add to one scheduling round).
     pub max_migrations_per_round: usize,
     pub stats: RouterStats,
+    /// Placement/migration trace sink (router track; replicas record
+    /// their own events on the cloud track).
+    trace: Option<TraceShared>,
 }
 
 impl<E: BatchEngine> Router<E> {
@@ -121,7 +125,18 @@ impl<E: BatchEngine> Router<E> {
             rebalance_threshold: policy.rebalance_threshold,
             max_migrations_per_round: 8,
             stats: RouterStats::default(),
+            trace: None,
         })
+    }
+
+    /// Attach (or detach) a trace sink: the router records placement
+    /// and migration on the router track, and every replica scheduler
+    /// gets the same sink with its replica index as cloud-track thread.
+    pub fn set_trace(&mut self, trace: Option<TraceShared>) {
+        for (r, s) in self.replicas.iter_mut().enumerate() {
+            s.set_trace(trace.clone(), r as u32);
+        }
+        self.trace = trace;
     }
 
     pub fn n_replicas(&self) -> usize {
@@ -183,10 +198,14 @@ impl<E: BatchEngine> Router<E> {
             self.stats.routed += 1;
             return Ok(r);
         }
-        let r = match self.home.get(&id) {
-            Some(&r) => r,
-            None => self.place(tenant),
+        let (r, placed) = match self.home.get(&id) {
+            Some(&r) => (r, false),
+            None => (self.place(tenant), true),
         };
+        if placed && self.trace.is_some() {
+            let args = vec![("replica", r as f64)];
+            trace::with(&self.trace, |s| s.instant(PID_ROUTER, 0, "place", id, args));
+        }
         self.forward(r, tenant, req)?;
         self.home.insert(id, r);
         self.stats.routed += 1;
@@ -320,6 +339,14 @@ impl<E: BatchEngine> Router<E> {
         self.home.insert(id, dst);
         self.stats.migrations += 1;
         self.stats.migration_bytes += bytes as u64;
+        if self.trace.is_some() {
+            let args = vec![
+                ("from", src as f64),
+                ("to", dst as f64),
+                ("bytes", bytes as f64),
+            ];
+            trace::with(&self.trace, |s| s.instant(PID_ROUTER, 0, "migrate", id, args));
+        }
         Ok(MigrationRecord { request_id: id, from: src, to: dst, bytes: bytes as u64, tenant })
     }
 }

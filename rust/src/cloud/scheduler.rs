@@ -54,6 +54,7 @@ use crate::config::BatchPolicy;
 use crate::model::cloud_engine::{BatchEngine, CloudEngine, SlotChunk};
 use crate::model::logits::argmax;
 use crate::net::wire::Dist;
+use crate::obs::trace::{self, TraceShared, PID_CLOUD};
 use crate::runtime::SlotKv;
 use crate::util::rng::Rng;
 use crate::workload::vocab::EOS;
@@ -113,6 +114,18 @@ pub struct SchedulerStats {
     pub swap_outs: u64,
     pub swap_bytes: u64,
     pub swap_s: f64,
+    /// Per-phase wall seconds inside `tick()` (always-on cheap timers;
+    /// the Fig. 18 breakdown and the `BENCH_fig18.json` phase schema).
+    /// `wfq_drain` covers the admission pass (WFQ drain + session
+    /// grants), `paging` the host↔slot KV copies, `pack` candidate
+    /// sort + batch planning net of paging, `engine` the engine's own
+    /// measured compute, `commit` result application and completion
+    /// handling.
+    pub phase_wfq_s: f64,
+    pub phase_paging_s: f64,
+    pub phase_pack_s: f64,
+    pub phase_engine_s: f64,
+    pub phase_commit_s: f64,
 }
 
 struct GenJob {
@@ -216,6 +229,10 @@ pub struct Scheduler<E: BatchEngine = CloudEngine> {
     pub stats: SchedulerStats,
     /// Reusable per-tick buffers (no per-iteration allocation churn).
     scratch: TickScratch,
+    /// Request-lifecycle trace sink (`None` ⇒ every record site is one
+    /// branch); events land on the cloud process, thread `trace_tid`.
+    trace: Option<TraceShared>,
+    trace_tid: u32,
 }
 
 /// Admission cost of a request in engine token rows (the WFQ credit
@@ -266,7 +283,23 @@ impl<E: BatchEngine> Scheduler<E> {
             rng: Rng::new(seed ^ 0xC10D),
             stats: SchedulerStats::default(),
             scratch: TickScratch::default(),
+            trace: None,
+            trace_tid: 0,
         }
+    }
+
+    /// Attach (or detach) a trace sink; `tid` is this scheduler's
+    /// replica index — its thread on the cloud trace track. Propagates
+    /// to the session manager so swap events share the sink.
+    pub fn set_trace(&mut self, trace: Option<TraceShared>, tid: u32) {
+        self.sessions.set_trace(trace.clone(), tid);
+        self.trace = trace;
+        self.trace_tid = tid;
+    }
+
+    /// Record a point event on this replica's cloud track.
+    fn trace_instant(&self, name: &'static str, id: u64, args: Vec<(&'static str, f64)>) {
+        trace::with(&self.trace, |s| s.instant(PID_CLOUD, self.trace_tid, name, id, args));
     }
 
     /// The session manager (paged-KV residency state; test hooks).
@@ -352,6 +385,10 @@ impl<E: BatchEngine> Scheduler<E> {
             | CloudRequest::Verify { request_id, .. } => *request_id,
             CloudRequest::Release { .. } => unreachable!("handled above"),
         };
+        if self.trace.is_some() {
+            // WFQ queue wait = gap between this and the "admit" instant
+            self.trace_instant("enqueue", request_id, vec![("cost", request_cost(&req))]);
+        }
         if let Some(t) = tenant {
             if let Some(wfq) = self.wfq.as_ref() {
                 if t >= wfq.n_tenants() {
@@ -522,10 +559,24 @@ impl<E: BatchEngine> Scheduler<E> {
     /// caller's clock).
     pub fn tick(&mut self) -> Result<(Vec<CloudEvent>, f64)> {
         let t_tick = Instant::now();
+        // phase trace: stamp the tick start once up front; phase events
+        // are recorded at the end with measured wall offsets (both the
+        // offsets and the durations collapse to zero under a
+        // deterministic virtual clock)
+        let mut trace_t0 = 0.0;
+        if let Some(t) = &self.trace {
+            if let Ok(s) = t.lock() {
+                trace_t0 = s.now_s();
+            }
+        }
+        let swap_s0 = self.sessions.stats().swap_s;
         self.stats.iterations += 1;
         let mut events = Vec::new();
 
         self.admit(&mut events)?;
+        let wfq_s = t_tick.elapsed().as_secs_f64();
+        self.stats.phase_wfq_s += wfq_s;
+        let t_plan = Instant::now();
 
         // ---- plan: pack one mixed batch under the token budget ------------
         let chunk = self.engine.chunk();
@@ -673,9 +724,15 @@ impl<E: BatchEngine> Scheduler<E> {
             };
             items.push(SlotChunk { slot: p.slot, tokens: toks });
         }
+        let paging_s = self.sessions.stats().swap_s - swap_s0;
+        let pack_s = (t_plan.elapsed().as_secs_f64() - paging_s).max(0.0);
+        self.stats.phase_paging_s += paging_s;
+        self.stats.phase_pack_s += pack_s;
         let (res, dt) = self.engine.run_batch(items)?;
         let compute_s = dt;
         self.stats.busy_s += dt;
+        self.stats.phase_engine_s += dt;
+        let t_commit = Instant::now();
         self.stats.rows_executed = self.engine.rows_executed();
 
         // ---- apply per-slot results to their jobs -------------------------
@@ -770,6 +827,16 @@ impl<E: BatchEngine> Scheduler<E> {
                     self.engine.rollback(slot, target);
                     self.sessions.set_len(job.request_id, target);
                 }
+                if self.trace.is_some() {
+                    self.trace_instant(
+                        "verify_commit",
+                        job.request_id,
+                        vec![
+                            ("accepted", outcome.accepted as f64),
+                            ("draft", job.draft.len() as f64),
+                        ],
+                    );
+                }
                 events.push(CloudEvent::VerifyDone {
                     request_id: job.request_id,
                     device_id: job.device_id,
@@ -785,6 +852,13 @@ impl<E: BatchEngine> Scheduler<E> {
             if self.decoding[i].next_token.is_none() {
                 let job = self.decoding.remove(i);
                 self.close_session(job.request_id);
+                if self.trace.is_some() {
+                    self.trace_instant(
+                        "generated",
+                        job.request_id,
+                        vec![("tokens", job.generated.len() as f64)],
+                    );
+                }
                 events.push(CloudEvent::Generated {
                     request_id: job.request_id,
                     tokens: job.generated,
@@ -800,6 +874,51 @@ impl<E: BatchEngine> Scheduler<E> {
         self.stats.swap_outs = sw.swap_outs;
         self.stats.swap_bytes = sw.bytes_in + sw.bytes_out;
         self.stats.swap_s = sw.swap_s;
+
+        let commit_s = t_commit.elapsed().as_secs_f64();
+        self.stats.phase_commit_s += commit_s;
+
+        if self.trace.is_some() {
+            let tid = self.trace_tid;
+            let picks = self.scratch.items.len() as f64;
+            let rows = self.scratch.items.iter().map(|c| c.tokens.len()).sum::<usize>() as f64;
+            let completions = events.len() as f64;
+            let queue = self.queue_depth() as f64;
+            trace::with(&self.trace, |s| {
+                // wall offsets sequence the phases within the tick; a
+                // deterministic clock collapses them onto the tick stamp
+                let det = s.is_deterministic();
+                let off = move |x: f64| if det { 0.0 } else { x };
+                let t0 = trace_t0;
+                s.complete(PID_CLOUD, tid, "wfq-drain", t0, wfq_s, vec![("queue", queue)]);
+                s.complete(PID_CLOUD, tid, "paging", t0 + off(wfq_s), paging_s, vec![]);
+                s.complete(
+                    PID_CLOUD,
+                    tid,
+                    "pack",
+                    t0 + off(wfq_s + paging_s),
+                    pack_s,
+                    vec![("picks", picks)],
+                );
+                let plan_s = paging_s + pack_s;
+                s.complete(
+                    PID_CLOUD,
+                    tid,
+                    "engine",
+                    t0 + off(wfq_s + plan_s),
+                    dt,
+                    vec![("rows", rows)],
+                );
+                s.complete(
+                    PID_CLOUD,
+                    tid,
+                    "commit",
+                    t0 + off(wfq_s + plan_s + dt),
+                    commit_s,
+                    vec![("completions", completions)],
+                );
+            });
+        }
 
         self.stats.sched_overhead_s += t_tick.elapsed().as_secs_f64() - dt;
         Ok((events, compute_s))
@@ -861,6 +980,11 @@ impl<E: BatchEngine> Scheduler<E> {
                 match self.waiting_gen.pop_front() {
                     Some(CloudRequest::Generate { request_id, prompt, max_new }) => {
                         self.sessions.open(request_id)?;
+                        self.trace_instant(
+                            "admit",
+                            request_id,
+                            vec![("prompt", prompt.len() as f64)],
+                        );
                         self.prefilling.push(GenJob {
                             request_id,
                             prompt,
@@ -974,6 +1098,13 @@ impl<E: BatchEngine> Scheduler<E> {
             unreachable!("start_verify takes only verify requests");
         };
         let base_len = self.sessions.len_of(request_id);
+        if self.trace.is_some() {
+            self.trace_instant(
+                "admit",
+                request_id,
+                vec![("base_len", base_len as f64), ("draft", draft.len() as f64)],
+            );
+        }
         if base_len + uncached.len() + draft.len() > self.engine.max_len() {
             events.push(CloudEvent::VerifyDone {
                 request_id,

@@ -39,6 +39,7 @@ use anyhow::{bail, Result};
 
 use crate::config::BatchPolicy;
 use crate::model::cloud_engine::{BatchEngine, SlotOwner};
+use crate::obs::trace::{self, TraceShared, PID_CLOUD};
 use crate::runtime::paging::{BlockPool, BlockTable};
 use crate::runtime::SlotKv;
 
@@ -101,6 +102,10 @@ pub struct SessionManager {
     /// Admission cap on concurrent logical sessions.
     pub max_sessions: usize,
     stats: SwapStats,
+    /// Swap-event trace sink shared with the owning scheduler
+    /// ([`crate::cloud::scheduler::Scheduler::set_trace`]).
+    trace: Option<TraceShared>,
+    trace_tid: u32,
 }
 
 impl SessionManager {
@@ -111,7 +116,16 @@ impl SessionManager {
             clock: 0,
             max_sessions: max_sessions.max(1),
             stats: SwapStats::default(),
+            trace: None,
+            trace_tid: 0,
         }
+    }
+
+    /// Attach (or detach) the trace sink swap events are recorded to;
+    /// `tid` is the owning replica's cloud-track thread.
+    pub fn set_trace(&mut self, trace: Option<TraceShared>, tid: u32) {
+        self.trace = trace;
+        self.trace_tid = tid;
     }
 
     /// Size a manager for `engine` under `policy`: `max_sessions == 0`
@@ -282,6 +296,11 @@ impl SessionManager {
             let kv = self.pool.load(&table);
             self.stats.bytes_in += kv.bytes() as u64;
             self.stats.swap_ins += 1;
+            if self.trace.is_some() {
+                let tid = self.trace_tid;
+                let args = vec![("rows", kv.len as f64), ("bytes", kv.bytes() as f64)];
+                trace::with(&self.trace, |s| s.instant(PID_CLOUD, tid, "swap_in", id, args));
+            }
             if let Err(e) = engine.import_slot(slot, &kv) {
                 // roll the half-swap back: return the slot, keep the
                 // parked image authoritative (no stranded Swapping
@@ -396,6 +415,11 @@ impl SessionManager {
         self.stats.swap_outs += 1;
         self.stats.bytes_out += kv.bytes() as u64;
         self.stats.swap_s += t0.elapsed().as_secs_f64();
+        if self.trace.is_some() {
+            let tid = self.trace_tid;
+            let args = vec![("rows", kv.len as f64), ("bytes", kv.bytes() as f64)];
+            trace::with(&self.trace, |s| s.instant(PID_CLOUD, tid, "swap_out", id, args));
+        }
         self.sessions.get_mut(&id).expect("still present").state =
             SessionState::Parked { table };
         Ok(true)

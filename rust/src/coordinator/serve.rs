@@ -38,6 +38,7 @@ use crate::model::device_engine::DeviceEngine;
 use crate::model::logits::argmax;
 use crate::net::link::SimLink;
 use crate::net::wire::{DownlinkMsg, UplinkMsg};
+use crate::obs::trace::{self, tenant_pid, TraceShared};
 use crate::profiling::{load_or_profile, OffloadProfile};
 use crate::runtime::Runtime;
 use crate::util::rng::Rng;
@@ -52,6 +53,9 @@ pub struct ServeConfig {
     pub n_devices: usize,
     pub requests_per_device: usize,
     pub artifacts: PathBuf,
+    /// Attached trace sink; a *wall-clock* sink fits this tier (real
+    /// OS threads share the one clock). `None` = tracing off.
+    pub trace: Option<TraceShared>,
 }
 
 /// Wall-clock results of a serving run.
@@ -95,6 +99,7 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
         let llm = cfg.scenario.pair.llm.clone();
         let greedy = cfg.scenario.params.greedy;
         let batch = cfg.scenario.params.batch.clone();
+        let trace_r = cfg.trace.clone();
         let handle = std::thread::Builder::new()
             .name(format!("synera-cloud{r}"))
             .spawn(move || -> Result<SchedulerStats> {
@@ -111,6 +116,7 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
                     0xC10D ^ (0x5EED ^ r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
                 };
                 let mut sched = Scheduler::with_policy(engine, seed, batch);
+                sched.set_trace(trace_r, r as u32);
                 let mut replies: HashMap<u64, Sender<DownlinkMsg>> = HashMap::new();
                 let mut open = true;
                 while open || !sched.is_idle() {
@@ -309,6 +315,9 @@ fn device_worker(
     let mut rng = Rng::new(0xD0 + device_id as u64);
     let exit_th = params.exit_threshold as f32;
     let mut stats = DeviceStats::default();
+    // same round-robin device→tenant map the replica frontends use
+    let n_tenants = params.batch.tenant_weights.len().max(1);
+    let pid = tenant_pid(device_id as usize % n_tenants);
 
     for r in 0..cfg.requests_per_device {
         let sample = crate::workload::synthlang::generate(
@@ -318,6 +327,7 @@ fn device_worker(
         );
         let req_id = ((device_id as u64) << 32) | r as u64;
         let t_req = Instant::now();
+        trace::with(&cfg.trace, |s| s.begin(pid, device_id, "request", req_id));
         let (mut sess, mut cur) = dev.prefill(&sample.prompt)?;
         let mut cloud_len = 0usize;
         let mut generated: Vec<u32> = Vec::new();
@@ -347,6 +357,10 @@ fn device_worker(
             stats.chunks += 1;
             let dec = selector.decide(&confs, &imps);
             if !(dec.offload && seq_exit.offload_allowed(generated.len())) {
+                if cfg.trace.is_some() {
+                    let args = vec![("gamma", draft.len() as f64)];
+                    trace::with(&cfg.trace, |s| s.instant(pid, device_id, "local", req_id, args));
+                }
                 generated.extend_from_slice(&draft);
                 if hit_eos {
                     break;
@@ -354,6 +368,19 @@ fn device_worker(
                 continue;
             }
             stats.offloads += 1;
+            if cfg.trace.is_some() {
+                let args = vec![
+                    ("gamma", draft.len() as f64),
+                    ("p_conf", dec.p_conf),
+                    ("p_imp", dec.p_imp),
+                    ("mean_conf", dec.mean_conf),
+                    ("mean_imp", dec.mean_imp),
+                ];
+                trace::with(&cfg.trace, |s| {
+                    s.instant(pid, device_id, "offload", req_id, args);
+                    s.begin(pid, device_id, "round", req_id);
+                });
+            }
 
             let uncached = sess.tokens[cloud_len..start_len].to_vec();
             let dists = probs_all.iter().map(|p| compress_dist(p, 8)).collect::<Vec<_>>();
@@ -430,6 +457,13 @@ fn device_worker(
 
             let accepted = (reply.accepted as usize).min(draft.len());
             cloud_len = start_len + accepted;
+            if cfg.trace.is_some() {
+                let args = vec![("accepted", accepted as f64)];
+                trace::with(&cfg.trace, |s| {
+                    s.end(pid, device_id, "round", req_id);
+                    s.instant(pid, device_id, "device_commit", req_id, args);
+                });
+            }
             if hit_eos && accepted == draft.len() {
                 generated.extend_from_slice(&draft);
                 break 'gen; // verifier agreed with the drafted EOS
@@ -456,6 +490,7 @@ fn device_worker(
             }
         }
 
+        trace::with(&cfg.trace, |s| s.end(pid, device_id, "request", req_id));
         let _ = tx.send(ToCloud::Release(req_id));
         generated.truncate(params.max_new_tokens);
         if generated.last() == Some(&EOS) {

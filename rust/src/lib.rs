@@ -30,7 +30,11 @@
 //!   discrete-event harness that serves thousands of simulated devices
 //!   through the real scheduler/session/offload code (with per-tenant
 //!   weighted fair queueing, [`cloud::fairness`]) in seconds of wall
-//!   time (`synera fleet`, `benches/fig19_fleet.rs`).
+//!   time (`synera fleet`, `benches/fig19_fleet.rs`);
+//! * the **observability layer** ([`obs`]) — request-lifecycle tracing
+//!   (virtual- or wall-clock spans, Chrome-trace/JSONL export for
+//!   Perfetto), a sampled metrics registry, and the leveled
+//!   [`log!`](crate::log) macro.
 //!
 //! Entry points: the `synera` binary (`serve`, `generate`, `eval`,
 //! `profile`), `examples/`, and one bench target per paper table/figure.
@@ -44,6 +48,7 @@ pub mod device;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod profiling;
 pub mod runtime;
 pub mod sim;

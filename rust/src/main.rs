@@ -8,6 +8,7 @@
 //! synera profile   [--slm s1b --llm l13b] [--refresh]
 //! synera serve     --devices 4 --requests 8 --task xsum
 //!                  [--tenants 2 --tenant-weights 1,2] [--replicas 2]
+//!                  [--trace serve.trace.json]  (wall-clock Chrome trace)
 //! synera fleet     --devices 1024 --duration 60 [--rate 256]
 //!                  [--tenants 4] [--tenant-weights 1,1,2,4]
 //!                  [--max-sessions 64] [--burst] [--seed N]
@@ -18,8 +19,17 @@
 //!                  [--migrate-gbps 10]
 //!                  [--real-engine]   (virtual-clock sim; artifact-free
 //!                                     over the mock engine by default)
+//!                  [--trace fleet.trace.json]  (virtual-time Chrome
+//!                                     trace, loadable in Perfetto)
+//!                  [--metrics fleet.jsonl [--metrics-cadence 1.0]]
 //! synera info
 //! ```
+//!
+//! Every subcommand takes `--verbose` (Debug-level diagnostics on
+//! stderr). Human-readable output goes to stderr via `synera::log!`;
+//! stdout stays reserved for machine-readable artifacts.
+
+use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 use synera::baselines::ALL_METHODS;
@@ -27,6 +37,9 @@ use synera::config::{BatchPolicy, Scenario};
 use synera::coordinator::eval::{eval_method, EvalOptions};
 use synera::coordinator::pipeline::Method;
 use synera::coordinator::serve::{run_threaded, ServeConfig};
+use synera::obs::export::{write_chrome_trace, write_metrics_jsonl};
+use synera::obs::registry;
+use synera::obs::trace::{self, TraceShared, TraceSink};
 use synera::profiling;
 use synera::runtime::{artifacts_dir, Runtime};
 use synera::sim::{run_fleet, run_fleet_on, FleetConfig};
@@ -34,9 +47,13 @@ use synera::util::cli::Args;
 use synera::workload::synthlang::Task;
 use synera::workload::trace::BurstProfile;
 
+/// Trace ring-buffer capacity for CLI-attached sinks: large enough for
+/// hour-scale fleet runs, bounded so `--trace` can't exhaust memory.
+const TRACE_CAP: usize = 1 << 20;
+
 fn main() {
     if let Err(e) = run() {
-        eprintln!("error: {e:#}");
+        synera::log!(Error, "error: {e:#}");
         std::process::exit(1);
     }
 }
@@ -83,6 +100,7 @@ fn scenario_from(args: &Args) -> Result<Scenario> {
 
 fn run() -> Result<()> {
     let args = Args::from_env()?;
+    synera::obs::set_verbose(args.has_flag("verbose"));
     match args.command.as_deref() {
         Some("info") => info(),
         Some("generate") => generate(&args),
@@ -91,7 +109,8 @@ fn run() -> Result<()> {
         Some("serve") => serve(&args),
         Some("fleet") => fleet(&args),
         _ => {
-            eprintln!(
+            synera::log!(
+                Error,
                 "usage: synera <info|generate|eval|profile|serve|fleet> [--opts]\n\
                  see rust/src/main.rs header for examples"
             );
@@ -102,13 +121,15 @@ fn run() -> Result<()> {
 
 fn info() -> Result<()> {
     let rt = Runtime::load_default()?;
-    println!("artifacts: {} (fingerprint {})", rt.dir.display(), rt.meta.fingerprint);
-    println!(
+    synera::log!(Info, "artifacts: {} (fingerprint {})", rt.dir.display(), rt.meta.fingerprint);
+    synera::log!(
+        Info,
         "gamma={} chunk={} cloud_slots={} vocab={}",
         rt.meta.gamma, rt.meta.chunk, rt.meta.cloud_slots, rt.meta.vocab
     );
     for (name, m) in &rt.meta.models {
-        println!(
+        synera::log!(
+            Info,
             "  {name:<6} {:>8} params  d={} L={} H={} role={} execs={}",
             m.param_count(),
             m.d_model,
@@ -157,10 +178,11 @@ fn generate(args: &Args) -> Result<()> {
         rng: &mut rng,
     };
     let rep = synera::coordinator::pipeline::run_request(&mut ctx, method, &sample.prompt)?;
-    println!("prompt  : {:?}", sample.prompt);
-    println!("answer  : {:?}", sample.answer);
-    println!("generated: {:?}", rep.generated);
-    println!(
+    synera::log!(Info, "prompt  : {:?}", sample.prompt);
+    synera::log!(Info, "answer  : {:?}", sample.answer);
+    synera::log!(Info, "generated: {:?}", rep.generated);
+    synera::log!(
+        Info,
         "quality={:.3} latency={:.3}s tbt={:.1}ms offloads={} local={} pi={}+{} exits={}",
         synera::metrics::quality::score_sample(&sample, &rep.generated),
         rep.total_s,
@@ -183,7 +205,8 @@ fn eval(args: &Args) -> Result<()> {
         Some("all") | None => ALL_METHODS.to_vec(),
         Some(m) => vec![parse_method(m)?],
     };
-    println!(
+    synera::log!(
+        Info,
         "pair={} task={} n={n} budget={}",
         scen.pair.label(),
         task.name(),
@@ -191,7 +214,8 @@ fn eval(args: &Args) -> Result<()> {
     );
     for m in methods {
         let rep = eval_method(&rt, &scen, m, &EvalOptions { n_samples: n, task })?;
-        println!(
+        synera::log!(
+            Info,
             "{:<13} quality={:.3} tbt={:6.1}ms p95={:6.1}ms cost={:.4} W={:.2} offl={:.2} pi_hit={:.2} exits={:.2}",
             rep.method.name(),
             rep.quality,
@@ -222,7 +246,8 @@ fn profile(args: &Args) -> Result<()> {
     };
     for (slm, w, llm) in pairs {
         let p = profiling::load_or_profile(&rt, &slm, w.as_deref(), &llm)?;
-        println!(
+        synera::log!(
+            Info,
             "{}&{}: c_th={:.3} alpha={:.3} i_th(b=0.2)={:.3} ppl_th={:.2}",
             p.slm,
             p.llm,
@@ -238,14 +263,18 @@ fn profile(args: &Args) -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     let scen = scenario_from(args)?;
     let task = Task::from_name(&args.get_or("task", "xsum")).context("bad --task")?;
+    let trace_path = args.get("trace").map(PathBuf::from);
     let cfg = ServeConfig {
         scenario: scen,
         task,
         n_devices: args.get_usize("devices", 4)?,
         requests_per_device: args.get_usize("requests", 4)?,
         artifacts: artifacts_dir(),
+        // real OS threads share one wall clock
+        trace: trace_path.as_ref().map(|_| trace::shared(TraceSink::wall_time(TRACE_CAP))),
     };
-    println!(
+    synera::log!(
+        Debug,
         "serving: {} devices × {} requests, pair={}, task={}",
         cfg.n_devices,
         cfg.requests_per_device,
@@ -253,11 +282,13 @@ fn serve(args: &Args) -> Result<()> {
         task.name()
     );
     let rep = run_threaded(&cfg)?;
-    println!(
+    synera::log!(
+        Info,
         "completed={} wall={:.2}s throughput={:.2} req/s tokens/s={:.1}",
         rep.completed, rep.wall_s, rep.throughput_rps, rep.tokens_per_s
     );
-    println!(
+    synera::log!(
+        Info,
         "e2e p50={:.0}ms p95={:.0}ms  verify-rtt p50={:.0}ms p95={:.0}ms  quality={:.3} offload={:.2}",
         rep.e2e_latency.p50 * 1e3,
         rep.e2e_latency.p95 * 1e3,
@@ -266,9 +297,28 @@ fn serve(args: &Args) -> Result<()> {
         rep.quality,
         rep.offload_rate,
     );
-    println!(
+    synera::log!(
+        Info,
         "paged-kv swaps: in={} out={} ({} cloud replicas)",
         rep.swap_ins, rep.swap_outs, rep.replicas
+    );
+    if let Some(path) = &trace_path {
+        write_trace_file(path, &cfg.trace)?;
+    }
+    Ok(())
+}
+
+/// Flush an attached sink to `path` as Chrome trace JSON.
+fn write_trace_file(path: &std::path::Path, trace: &Option<TraceShared>) -> Result<()> {
+    let Some(tr) = trace else { return Ok(()) };
+    let Ok(sink) = tr.lock() else { bail!("trace sink poisoned") };
+    write_chrome_trace(path, &sink)?;
+    synera::log!(
+        Info,
+        "trace: {} events ({} dropped) -> {}",
+        sink.len(),
+        sink.dropped(),
+        path.display()
     );
     Ok(())
 }
@@ -287,6 +337,9 @@ fn fleet(args: &Args) -> Result<()> {
     params.batch.token_budget = args.get_usize("token-budget", 0)?;
     params.batch.replicas = args.get_usize("replicas", 1)?.max(1);
     params.batch.rebalance_threshold = args.get_usize("rebalance", 0)?;
+    let trace_path = args.get("trace").map(PathBuf::from);
+    let metrics_path = args.get("metrics").map(PathBuf::from);
+    let metrics_cadence = args.get_f64("metrics-cadence", 1.0)?;
     let cfg = FleetConfig {
         n_devices,
         duration_s: args.get_f64("duration", 60.0)?,
@@ -310,9 +363,14 @@ fn fleet(args: &Args) -> Result<()> {
         // keep the cost model's packing factor in step with the engine
         // actually selected on the --real-engine path
         cloud_model: args.get_or("llm", &base.cloud_model),
+        // the simulator stamps events in virtual time (byte-identical
+        // same-seed traces); a snapshot every `metrics_cadence` virtual s
+        trace: trace_path.as_ref().map(|_| trace::shared(TraceSink::virtual_time(TRACE_CAP))),
+        registry: metrics_path.as_ref().map(|_| registry::shared(metrics_cadence)),
         ..base
     };
-    println!(
+    synera::log!(
+        Debug,
         "fleet: {} devices, {:.0} virtual s at {:.1} req/s ({}), {} tenants, max_sessions={}, replicas={}",
         cfg.n_devices,
         cfg.duration_s,
@@ -338,7 +396,8 @@ fn fleet(args: &Args) -> Result<()> {
     } else {
         run_fleet(&cfg)?
     };
-    println!(
+    synera::log!(
+        Info,
         "completed {}/{} requests ({} tokens) in {:.1} virtual s / {:.2} wall s",
         rep.completed,
         rep.offered,
@@ -346,7 +405,8 @@ fn fleet(args: &Args) -> Result<()> {
         rep.virtual_s,
         rep.wall_s,
     );
-    println!(
+    synera::log!(
+        Info,
         "cloud: {} iterations, {} draft rows verified, cost={:.5}, swaps in/out={}/{} ({} B), pi hit/miss={}/{}",
         rep.cloud_iterations,
         rep.cloud_draft_rows,
@@ -357,7 +417,8 @@ fn fleet(args: &Args) -> Result<()> {
         rep.pi_hits,
         rep.pi_misses,
     );
-    println!(
+    synera::log!(
+        Info,
         "router: {} replicas, {} migrations ({} B wire), per-replica iters={:?} rows={:?}",
         rep.replicas,
         rep.migrations,
@@ -365,17 +426,20 @@ fn fleet(args: &Args) -> Result<()> {
         rep.replica_iterations,
         rep.replica_rows,
     );
-    println!(
+    synera::log!(
+        Info,
         "traffic: {} offload rounds / {} local chunks, {} B up / {} B down",
         rep.offload_rounds, rep.local_chunks, rep.bytes_up, rep.bytes_down
     );
-    println!(
+    synera::log!(
+        Info,
         "{:<7} {:>6} {:>5} {:>5} | {:>9} {:>9} {:>9} | {:>9} {:>9} | {:>7} {:>7} | {:>10} {:>10}",
         "tenant", "weight", "req", "done", "ttft p50", "ttft p95", "ttft p99", "tbt p50",
         "tbt p95", "slo-ttft", "slo-tbt", "rows", "energy",
     );
     for t in &rep.tenants {
-        println!(
+        synera::log!(
+            Info,
             "{:<7} {:>6.1} {:>5} {:>5} | {:>8.0}ms {:>8.0}ms {:>8.0}ms | {:>8.1}ms {:>8.1}ms | {:>6.1}% {:>6.1}% | {:>10} {:>9.1}J",
             t.tenant,
             t.weight,
@@ -391,6 +455,14 @@ fn fleet(args: &Args) -> Result<()> {
             t.rows_executed,
             t.energy_j,
         );
+    }
+    if let Some(path) = &trace_path {
+        write_trace_file(path, &cfg.trace)?;
+    }
+    if let (Some(path), Some(reg)) = (&metrics_path, &cfg.registry) {
+        let Ok(r) = reg.lock() else { bail!("metrics registry poisoned") };
+        write_metrics_jsonl(path, &r)?;
+        synera::log!(Info, "metrics: {} samples -> {}", r.samples.len(), path.display());
     }
     Ok(())
 }

@@ -24,6 +24,49 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Summary of a non-empty sample, `None` for an empty one — the
+    /// honest form of [`Summary::of`] (no zero sentinel that reads as
+    /// a real 0-second percentile downstream).
+    pub fn of_nonempty(values: &[f64]) -> Option<Summary> {
+        if values.is_empty() {
+            None
+        } else {
+            Some(Summary::of(values))
+        }
+    }
+
+    /// Combine two summaries without the underlying samples: `n`,
+    /// `mean`, `min`/`max` and the pooled `std` are exact; the merged
+    /// percentiles are the *n-weighted blend* of the inputs'
+    /// percentiles — an approximation that is exact when both sides
+    /// were drawn from the same distribution (the per-replica /
+    /// per-tenant roll-up case this exists for) and always lands
+    /// between the two inputs.
+    pub fn merge(&self, other: &Summary) -> Summary {
+        if self.n == 0 {
+            return other.clone();
+        }
+        if other.n == 0 {
+            return self.clone();
+        }
+        let n = self.n + other.n;
+        let (wa, wb) = (self.n as f64 / n as f64, other.n as f64 / n as f64);
+        let mean = wa * self.mean + wb * other.mean;
+        // pooled variance: E[var] + var of the component means
+        let va = self.std * self.std + (self.mean - mean) * (self.mean - mean);
+        let vb = other.std * other.std + (other.mean - mean) * (other.mean - mean);
+        Summary {
+            n,
+            mean,
+            min: self.min.min(other.min),
+            max: self.max.max(other.max),
+            p50: wa * self.p50 + wb * other.p50,
+            p95: wa * self.p95 + wb * other.p95,
+            p99: wa * self.p99 + wb * other.p99,
+            std: (wa * va + wb * vb).sqrt(),
+        }
+    }
+
     pub fn of(values: &[f64]) -> Summary {
         if values.is_empty() {
             return Summary::default();
@@ -110,8 +153,10 @@ impl LatencyRecorder {
         }
     }
 
-    pub fn summary(&self) -> Summary {
-        Summary::of(&self.values)
+    /// Summary of the retained samples, `None` when nothing was
+    /// recorded — callers must not mistake "no data" for "0 s p99".
+    pub fn summary(&self) -> Option<Summary> {
+        Summary::of_nonempty(&self.values)
     }
 
     pub fn values(&self) -> &[f64] {
@@ -143,10 +188,37 @@ mod tests {
     }
 
     #[test]
-    fn summary_empty_is_zero() {
+    fn summary_empty_is_none() {
+        assert!(Summary::of_nonempty(&[]).is_none());
+        assert!(LatencyRecorder::new().summary().is_none());
+        // the raw constructor keeps its zero-default for struct fill-in
         let s = Summary::of(&[]);
         assert_eq!(s.n, 0);
         assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn summary_merge_exact_moments() {
+        let a = Summary::of(&[1.0, 2.0, 3.0]);
+        let b = Summary::of(&[4.0, 5.0, 6.0, 7.0]);
+        let m = a.merge(&b);
+        let full = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(m.n, full.n);
+        assert!((m.mean - full.mean).abs() < 1e-12);
+        assert_eq!(m.min, full.min);
+        assert_eq!(m.max, full.max);
+        assert!((m.std - full.std).abs() < 1e-12, "pooled std is exact");
+        // blended percentiles stay within the input envelope
+        assert!(m.p50 >= a.p50 && m.p50 <= b.p50);
+    }
+
+    #[test]
+    fn summary_merge_with_empty_is_identity() {
+        let a = Summary::of(&[1.0, 2.0]);
+        let e = Summary::default();
+        assert_eq!(a.merge(&e).n, 2);
+        assert_eq!(e.merge(&a).n, 2);
+        assert_eq!(a.merge(&e).mean, a.mean);
     }
 
     #[test]
@@ -174,7 +246,7 @@ mod tests {
         }
         assert_eq!(res.values().len(), 4096, "reservoir is bounded");
         assert_eq!(res.seen(), 200_000);
-        let (e, r) = (exact.summary(), res.summary());
+        let (e, r) = (exact.summary().unwrap(), res.summary().unwrap());
         for (pe, pr, name, tol) in [
             (e.p50, r.p50, "p50", 0.15),
             (e.p95, r.p95, "p95", 0.10),
@@ -206,7 +278,8 @@ mod tests {
         let mut b = LatencyRecorder::new();
         b.record(3.0);
         a.merge(&b);
-        assert_eq!(a.summary().n, 2);
-        assert_eq!(a.summary().mean, 2.0);
+        let s = a.summary().unwrap();
+        assert_eq!(s.n, 2);
+        assert_eq!(s.mean, 2.0);
     }
 }

@@ -1,0 +1,238 @@
+//! Serialize traces and metrics: Chrome trace-event JSON and JSONL.
+//!
+//! Everything routes through [`crate::util::json::Json`] (object keys
+//! in `BTreeMap` order, integer-exact number formatting), so a
+//! deterministic event stream serializes to deterministic *bytes* —
+//! the byte-identity gate in `tests/obs_trace.rs` compares these
+//! strings directly.
+//!
+//! ## Chrome trace-event schema
+//!
+//! [`chrome_trace_string`] emits `{"traceEvents": [...]}` in the
+//! [Trace Event Format]: one object per event with `ph` (`B`/`E`/`i`/
+//! `X`/`C`), `ts`/`dur` in **microseconds**, `pid`/`tid` track ids,
+//! `name`, `cat`, optional `id` and numeric `args` — plus `M`
+//! (metadata) events naming every process and thread seen, so the
+//! file opens in Perfetto (<https://ui.perfetto.dev>) with readable
+//! tracks: `router`, `cloud` (one thread per replica), and one
+//! process per device tenant (one thread per device).
+//!
+//! [Trace Event Format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+//!
+//! ## JSONL schemas
+//!
+//! * [`events_jsonl_string`]: one event object per line, seconds (not
+//!   µs), same field names as the in-memory [`TraceEvent`].
+//! * [`metrics_jsonl_string`]: one `{"t_s", "name", "value"}` line per
+//!   registry sample, then one `{"hist", "n", "mean", "p50", "p95",
+//!   "max"}` line per histogram.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::obs::registry::Registry;
+use crate::obs::trace::{Ph, TraceEvent, TraceSink, PID_CLOUD, PID_ROUTER};
+use crate::util::json::Json;
+use crate::Result;
+
+fn process_name(pid: u32) -> String {
+    match pid {
+        PID_ROUTER => "router".to_string(),
+        PID_CLOUD => "cloud".to_string(),
+        p => format!("tenant {}", p - 2),
+    }
+}
+
+fn thread_name(pid: u32, tid: u32) -> String {
+    match pid {
+        PID_ROUTER => "router".to_string(),
+        PID_CLOUD => format!("replica {tid}"),
+        _ => format!("dev {tid}"),
+    }
+}
+
+fn metadata_event(name: &'static str, pid: u32, tid: u32, label: String) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid)),
+        ("tid", Json::num(tid)),
+        ("name", Json::str(name)),
+        ("args", Json::obj(vec![("name", Json::Str(label))])),
+    ])
+}
+
+fn args_json(args: &[(&'static str, f64)]) -> Json {
+    Json::obj(args.iter().map(|&(k, v)| (k, Json::num(v))).collect())
+}
+
+fn event_json(e: &TraceEvent) -> Json {
+    let mut fields = vec![
+        ("ph", Json::str(e.ph.code())),
+        ("ts", Json::num(e.ts_s * 1e6)),
+        ("pid", Json::num(e.pid)),
+        ("tid", Json::num(e.tid)),
+        ("name", Json::str(e.name)),
+        ("cat", Json::str(e.cat)),
+    ];
+    if e.ph == Ph::Complete {
+        fields.push(("dur", Json::num(e.dur_s * 1e6)));
+    }
+    if e.ph == Ph::Instant {
+        // process-scoped instants render as full-height markers
+        fields.push(("s", Json::str("t")));
+    }
+    if e.id != 0 {
+        fields.push(("id", Json::num(e.id as f64)));
+    }
+    if !e.args.is_empty() {
+        fields.push(("args", args_json(&e.args)));
+    }
+    Json::obj(fields)
+}
+
+/// The whole sink as one Chrome trace-event JSON document (see the
+/// module docs for the schema).
+pub fn chrome_trace_string(sink: &TraceSink) -> String {
+    let mut tracks: BTreeSet<(u32, u32)> = BTreeSet::new();
+    for e in sink.events() {
+        tracks.insert((e.pid, e.tid));
+    }
+    let mut events: Vec<Json> = Vec::with_capacity(sink.len() + 2 * tracks.len());
+    let mut pids: BTreeSet<u32> = BTreeSet::new();
+    for &(pid, tid) in &tracks {
+        if pids.insert(pid) {
+            events.push(metadata_event("process_name", pid, 0, process_name(pid)));
+        }
+        events.push(metadata_event("thread_name", pid, tid, thread_name(pid, tid)));
+    }
+    for e in sink.events() {
+        events.push(event_json(e));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+    .to_string()
+}
+
+/// One JSON object per line per event, timestamps in seconds.
+pub fn events_jsonl_string(sink: &TraceSink) -> String {
+    let mut out = String::new();
+    for e in sink.events() {
+        let mut fields = vec![
+            ("ts_s", Json::num(e.ts_s)),
+            ("ph", Json::str(e.ph.code())),
+            ("pid", Json::num(e.pid)),
+            ("tid", Json::num(e.tid)),
+            ("name", Json::str(e.name)),
+        ];
+        if e.dur_s != 0.0 {
+            fields.push(("dur_s", Json::num(e.dur_s)));
+        }
+        if e.id != 0 {
+            fields.push(("id", Json::num(e.id as f64)));
+        }
+        if !e.args.is_empty() {
+            fields.push(("args", args_json(&e.args)));
+        }
+        out.push_str(&Json::obj(fields).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Registry samples (then histogram summaries) as JSONL.
+pub fn metrics_jsonl_string(reg: &Registry) -> String {
+    let mut out = String::new();
+    for s in &reg.samples {
+        let line = Json::obj(vec![
+            ("t_s", Json::num(s.t_s)),
+            ("name", Json::Str(s.name.clone())),
+            ("value", Json::num(s.value)),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    for (name, h) in reg.hists() {
+        let line = Json::obj(vec![
+            ("hist", Json::Str(name.to_string())),
+            ("n", Json::num(h.n as f64)),
+            ("mean", h.mean().map(Json::num).unwrap_or(Json::Null)),
+            ("p50", h.quantile(0.5).map(Json::num).unwrap_or(Json::Null)),
+            ("p95", h.quantile(0.95).map(Json::num).unwrap_or(Json::Null)),
+            ("max", if h.n == 0 { Json::Null } else { Json::num(h.max) }),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write the Chrome trace JSON for `sink` to `path`.
+pub fn write_chrome_trace(path: &Path, sink: &TraceSink) -> Result<()> {
+    std::fs::write(path, chrome_trace_string(sink))?;
+    Ok(())
+}
+
+/// Write the registry's sample series as JSONL to `path`.
+pub fn write_metrics_jsonl(path: &Path, reg: &Registry) -> Result<()> {
+    std::fs::write(path, metrics_jsonl_string(reg))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceSink;
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_metadata() {
+        let mut s = TraceSink::virtual_time(64);
+        s.set_now(0.5);
+        s.begin(2, 3, "request", 9);
+        s.set_now(1.0);
+        s.end(2, 3, "request", 9);
+        s.instant(1, 0, "enqueue", 9, vec![("cost", 4.0)]);
+        let text = chrome_trace_string(&s);
+        let doc = Json::parse(&text).expect("valid JSON");
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 metadata names for pid 2 + 2 for pid 1 + 3 events
+        assert_eq!(evs.len(), 7);
+        let metas = evs
+            .iter()
+            .filter(|e| matches!(e.opt("ph"), Some(Json::Str(p)) if p == "M"))
+            .count();
+        assert_eq!(metas, 4);
+        // µs scaling: the begin event lands at ts = 500000
+        assert!(text.contains("\"ts\":500000"), "got: {text}");
+    }
+
+    #[test]
+    fn jsonl_lines_each_parse() {
+        let mut s = TraceSink::virtual_time(8);
+        s.instant(0, 0, "place", 3, vec![("replica", 1.0)]);
+        s.counter(1, 0, "queue", 5.0);
+        let text = events_jsonl_string(&s);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            Json::parse(l).expect("line parses");
+        }
+    }
+
+    #[test]
+    fn metrics_jsonl_covers_samples_and_hists() {
+        let mut r = Registry::new(0.0);
+        r.gauge_set("cloud.queue_depth.0", 2.0);
+        r.snapshot(1.0);
+        r.hist_record("ttft_s", 0.25);
+        let text = metrics_jsonl_string(&r);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("cloud.queue_depth.0"));
+        assert!(lines[1].contains("\"hist\":\"ttft_s\""));
+        for l in lines {
+            Json::parse(l).expect("line parses");
+        }
+    }
+}

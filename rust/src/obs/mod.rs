@@ -1,0 +1,142 @@
+//! Zero-dependency observability: request tracing, a metrics
+//! registry, leveled logging, and deterministic exporters.
+//!
+//! The layer has three parts plus the [`log!`](crate::log) macro:
+//!
+//! * [`trace`] — spans/events in a [`trace::TraceSink`] ring buffer,
+//!   stamped by a [`trace::Clock`]. **Clock contract:** the fleet
+//!   simulator attaches a [`trace::VirtualClock`] and advances it to
+//!   each discrete-event firing time, so same-seed runs produce
+//!   byte-identical traces and measured wall durations are forced to
+//!   zero; the threaded server attaches a [`trace::WallClock`]
+//!   (seconds since run start). Instrumented structs hold an
+//!   `Option<`[`trace::TraceShared`]`>` — disabled tracing is one
+//!   branch per site.
+//! * [`registry`] — named counters/gauges/histograms sampled on a
+//!   caller-driven cadence ([`registry::Registry::due`] /
+//!   [`registry::Registry::snapshot`]); the standard cloud gauges are
+//!   captured by [`registry::sample_router`].
+//! * [`export`] — Chrome trace-event JSON and JSONL serializers over
+//!   [`crate::util::json::Json`] (deterministic bytes).
+//!
+//! ## Event schema
+//!
+//! Request lifecycle (ids are request ids; device tracks live in
+//! process [`trace::tenant_pid`]`(t)`, thread = device):
+//!
+//! | name | kind | track | meaning |
+//! |---|---|---|---|
+//! | `arrive` | instant | device | request entered the device queue |
+//! | `request` | span | device | request start → final token |
+//! | `draft` / `local` / `offload` | instant | device | SLM chunk drafted; offload decision with confidence/importance scores |
+//! | `round` | span | device | one offload round (send → verdict applied) |
+//! | `uplink` | span | device | draft chunk on the wire |
+//! | `place` / `migrate` | instant | router | replica placement; parked-KV migration (with bytes) |
+//! | `enqueue` / `admit` | instant | cloud replica | WFQ arrival; session admission (queue wait = gap) |
+//! | `swap_in` / `swap_out` | instant | cloud replica | paged-KV slot traffic |
+//! | `wfq-drain`, `paging`, `pack`, `engine`, `commit` | complete | cloud replica | per-tick scheduler phases |
+//! | `verify_commit` / `generated` | instant | cloud replica | verdict committed; generate finished |
+//! | `device_commit` | instant | device | verdict applied on-device (downlink end) |
+//!
+//! ## Perfetto how-to
+//!
+//! ```text
+//! synera fleet --devices 4096 --replicas 4 --trace fleet.trace.json
+//! ```
+//!
+//! then open <https://ui.perfetto.dev> → *Open trace file* →
+//! `fleet.trace.json`. Tracks appear as one `cloud` process with a
+//! thread per replica, a `router` process, and one process per device
+//! tenant with a thread per device. See `docs/observability.md`.
+//!
+//! ## Logging
+//!
+//! [`log!`](crate::log) writes leveled lines to **stderr** (stdout
+//! stays clean for machine-readable output). Default level is
+//! [`Level::Info`]; `--verbose` on the CLI raises it to
+//! [`Level::Debug`].
+
+pub mod export;
+pub mod registry;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, most severe first.
+#[repr(u8)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global log threshold (messages above it are suppressed).
+pub fn set_level(level: Level) {
+    LOG_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// `--verbose` toggle: Debug on, Info off.
+pub fn set_verbose(verbose: bool) {
+    set_level(if verbose { Level::Debug } else { Level::Info });
+}
+
+/// Current global threshold as its `u8` rank.
+pub fn level() -> u8 {
+    LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Would a message at `level` currently print?
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Leveled logging to stderr: `log!(Info, "packed {} rows", n)`.
+///
+/// Levels are the [`Level`](crate::obs::Level) variants. Messages at
+/// or above the global threshold ([`crate::obs::set_level`]) print to
+/// stderr; everything else is one atomic load. Library code must use
+/// this instead of `println!`/`eprintln!` so stdout stays parseable.
+#[macro_export]
+macro_rules! log {
+    ($lvl:ident, $($arg:tt)*) => {
+        if $crate::obs::enabled($crate::obs::Level::$lvl) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+pub use crate::log;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        let prev = level();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_verbose(true);
+        assert!(enabled(Level::Debug));
+        set_verbose(false);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        // restore whatever the harness had (tests share the global)
+        LOG_LEVEL.store(prev, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn log_macro_compiles_at_every_level() {
+        log!(Error, "e {}", 1);
+        log!(Warn, "w");
+        log!(Info, "i");
+        log!(Debug, "d");
+    }
+}

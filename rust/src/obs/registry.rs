@@ -1,0 +1,303 @@
+//! Named counters, gauges and histograms sampled on a cadence.
+//!
+//! A [`Registry`] is a flat name → value store. Instrumented code
+//! *sets* gauges and *adds* to counters at any rate; the driver calls
+//! [`Registry::due`] / [`Registry::snapshot`] on its own clock (the
+//! fleet sim uses virtual time) so the sampled series
+//! ([`Registry::samples`]) is bounded by the cadence, not the event
+//! rate. [`sample_scheduler`] and [`sample_router`] capture the
+//! standard cloud-tier gauges — queue depth, in-flight verifies,
+//! resident/open sessions, free KV blocks, engine rows per tick,
+//! migration bytes — which `tests/paging_invariants.rs` and
+//! `tests/router_replicas.rs` cross-check against the live invariants.
+//!
+//! Names are dotted paths with a trailing replica index, e.g.
+//! `cloud.free_blocks.0` or `router.migration_bytes`. Everything is
+//! `f64`; counts below 2^53 are exact.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::cloud::router::Router;
+use crate::cloud::scheduler::Scheduler;
+use crate::model::cloud_engine::BatchEngine;
+
+const HIST_BUCKETS: usize = 64;
+/// Bucket 0 lower bound: 2^-40 s (≈ 1 ns); bucket 63 ≈ 2^23 s.
+const HIST_MIN_EXP: f64 = -40.0;
+
+/// Fixed-size log2 histogram: 64 power-of-two buckets spanning
+/// roughly 1 ns .. 97 days when values are seconds.
+#[derive(Debug, Clone)]
+pub struct Hist {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    buckets: [u64; HIST_BUCKETS],
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist {
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buckets: [0; HIST_BUCKETS],
+        }
+    }
+}
+
+fn bucket_of(v: f64) -> usize {
+    let idx = (v.max(1e-12).log2() - HIST_MIN_EXP).floor() as i64;
+    idx.clamp(0, HIST_BUCKETS as i64 - 1) as usize
+}
+
+impl Hist {
+    pub fn record(&mut self, v: f64) {
+        self.n += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.buckets[bucket_of(v)] += 1;
+    }
+
+    /// Mean of recorded values, `None` when empty.
+    pub fn mean(&self) -> Option<f64> {
+        if self.n == 0 {
+            None
+        } else {
+            Some(self.sum / self.n as f64)
+        }
+    }
+
+    /// Bucket-resolution quantile estimate (upper bound of the bucket
+    /// holding the q-th value), `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.n == 0 {
+            return None;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some((HIST_MIN_EXP + i as f64 + 1.0).exp2());
+            }
+        }
+        Some(self.max)
+    }
+}
+
+/// One sampled point of the metric series.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub t_s: f64,
+    pub name: String,
+    pub value: f64,
+}
+
+/// Flat metric store with cadence-gated sampling (see module docs).
+#[derive(Debug)]
+pub struct Registry {
+    cadence_s: f64,
+    next_s: f64,
+    counters: BTreeMap<String, f64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Hist>,
+    /// Cadence-gated time series, one point per (snapshot, name).
+    pub samples: Vec<Sample>,
+}
+
+impl Registry {
+    /// A registry snapshotting at most every `cadence_s` seconds of
+    /// driver time (0 ⇒ every call to [`Registry::snapshot`]).
+    pub fn new(cadence_s: f64) -> Registry {
+        Registry {
+            cadence_s: cadence_s.max(0.0),
+            next_s: 0.0,
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            hists: BTreeMap::new(),
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn counter_add(&mut self, name: &str, delta: f64) {
+        *self.counters.entry(name.to_string()).or_insert(0.0) += delta;
+    }
+
+    pub fn gauge_set(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn hist_record(&mut self, name: &str, value: f64) {
+        self.hists.entry(name.to_string()).or_default().record(value);
+    }
+
+    pub fn counter(&self, name: &str) -> f64 {
+        self.counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Hist> {
+        self.hists.get(name)
+    }
+
+    /// Iterate final counter values (sorted by name).
+    pub fn counters(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.counters.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// Iterate current gauge values (sorted by name).
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// Iterate histograms (sorted by name).
+    pub fn hists(&self) -> impl Iterator<Item = (&str, &Hist)> {
+        self.hists.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Is a snapshot due at driver time `t_s`?
+    pub fn due(&self, t_s: f64) -> bool {
+        t_s >= self.next_s
+    }
+
+    /// Append every gauge and counter to [`Registry::samples`] at
+    /// `t_s` and arm the next cadence window. Callers gate on
+    /// [`Registry::due`]; calling unconditionally forces a sample
+    /// (e.g. one final end-of-run snapshot).
+    pub fn snapshot(&mut self, t_s: f64) {
+        for (name, &value) in &self.gauges {
+            self.samples.push(Sample {
+                t_s,
+                name: name.clone(),
+                value,
+            });
+        }
+        for (name, &value) in &self.counters {
+            self.samples.push(Sample {
+                t_s,
+                name: name.clone(),
+                value,
+            });
+        }
+        self.next_s = t_s + self.cadence_s;
+    }
+}
+
+/// Shared handle drivers hold as `Option<RegistryShared>`.
+pub type RegistryShared = Arc<Mutex<Registry>>;
+
+/// A shareable registry with the given sampling cadence.
+pub fn shared(cadence_s: f64) -> RegistryShared {
+    Arc::new(Mutex::new(Registry::new(cadence_s)))
+}
+
+/// Run `f` against the registry if one is attached (single-branch
+/// disabled path, mirroring [`crate::obs::trace::with`]).
+pub fn with<F: FnOnce(&mut Registry)>(registry: &Option<RegistryShared>, f: F) {
+    if let Some(r) = registry {
+        if let Ok(mut reg) = r.lock() {
+            f(&mut reg);
+        }
+    }
+}
+
+/// Capture the standard gauges of one scheduler replica under
+/// `cloud.<gauge>.<tid>` names.
+pub fn sample_scheduler<E: BatchEngine>(reg: &mut Registry, tid: usize, s: &Scheduler<E>) {
+    let g = |name: &str| format!("cloud.{name}.{tid}");
+    reg.gauge_set(&g("queue_depth"), s.queue_depth() as f64);
+    reg.gauge_set(&g("in_flight"), s.in_flight() as f64);
+    reg.gauge_set(&g("sessions_open"), s.active_sessions() as f64);
+    let slots = s.engine.slots();
+    let free_slots = s.engine.free_slots();
+    reg.gauge_set(&g("sessions_resident"), (slots - free_slots) as f64);
+    reg.gauge_set(&g("slots_free"), free_slots as f64);
+    reg.gauge_set(&g("free_blocks"), s.sessions().free_blocks() as f64);
+    reg.gauge_set(&g("block_capacity"), s.sessions().block_capacity() as f64);
+    reg.gauge_set(&g("rows_executed"), s.stats.rows_executed as f64);
+    let rows_per_tick = if s.stats.iterations > 0 {
+        s.stats.rows_executed as f64 / s.stats.iterations as f64
+    } else {
+        0.0
+    };
+    reg.gauge_set(&g("rows_per_tick"), rows_per_tick);
+    reg.gauge_set(&g("swap_ins"), s.sessions().stats().swap_ins as f64);
+    reg.gauge_set(&g("swap_outs"), s.sessions().stats().swap_outs as f64);
+}
+
+/// Capture every replica of a router plus the router-level placement
+/// and migration counters.
+pub fn sample_router<E: BatchEngine>(reg: &mut Registry, router: &Router<E>) {
+    for r in 0..router.n_replicas() {
+        sample_scheduler(reg, r, router.replica(r));
+    }
+    reg.gauge_set("router.routed", router.stats.routed as f64);
+    reg.gauge_set("router.migrations", router.stats.migrations as f64);
+    reg.gauge_set("router.migration_bytes", router.stats.migration_bytes as f64);
+    reg.gauge_set("router.rebalance_skips", router.stats.rebalance_skips as f64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cadence_gates_snapshots() {
+        let mut r = Registry::new(1.0);
+        r.gauge_set("g", 1.0);
+        assert!(r.due(0.0));
+        r.snapshot(0.0);
+        assert!(!r.due(0.5));
+        assert!(r.due(1.0));
+        r.gauge_set("g", 2.0);
+        r.snapshot(1.0);
+        let vals: Vec<f64> = r.samples.iter().map(|s| s.value).collect();
+        assert_eq!(vals, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn counters_accumulate_and_gauges_overwrite() {
+        let mut r = Registry::new(0.0);
+        r.counter_add("c", 2.0);
+        r.counter_add("c", 3.0);
+        r.gauge_set("g", 7.0);
+        r.gauge_set("g", 9.0);
+        assert_eq!(r.counter("c"), 5.0);
+        assert_eq!(r.gauge("g"), Some(9.0));
+        assert_eq!(r.gauge("missing"), None);
+    }
+
+    #[test]
+    fn hist_quantiles_are_bucket_bounds() {
+        let mut r = Registry::new(0.0);
+        assert!(r.hist("h").is_none());
+        for _ in 0..90 {
+            r.hist_record("h", 0.001);
+        }
+        for _ in 0..10 {
+            r.hist_record("h", 1.0);
+        }
+        let h = r.hist("h").unwrap();
+        assert_eq!(h.n, 100);
+        let p50 = h.quantile(0.5).unwrap();
+        assert!(p50 >= 0.001 && p50 < 0.01, "p50 ~ 1 ms bucket, got {p50}");
+        let p99 = h.quantile(0.99).unwrap();
+        assert!(p99 >= 1.0, "p99 in the 1 s bucket, got {p99}");
+        assert_eq!(h.quantile(0.0).map(|_| ()), Some(()));
+    }
+
+    #[test]
+    fn empty_hist_reports_none() {
+        let h = Hist::default();
+        assert_eq!(h.mean(), None);
+        assert_eq!(h.quantile(0.5), None);
+    }
+}

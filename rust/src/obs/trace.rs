@@ -1,0 +1,442 @@
+//! Spans and events: the [`TraceSink`] ring buffer and the [`Clock`]
+//! contract.
+//!
+//! ## The clock contract
+//!
+//! Every event is stamped by the sink's [`Clock`] at record time:
+//!
+//! * the fleet simulator attaches a [`VirtualClock`] and calls
+//!   [`TraceSink::set_now`] with the firing time of each discrete
+//!   event, so timestamps are *virtual seconds* and a same-seed run
+//!   reproduces the event stream byte for byte
+//!   (`tests/obs_trace.rs`);
+//! * the threaded server attaches a [`WallClock`] (seconds since the
+//!   sink was built); `set_now` is a no-op there.
+//!
+//! A deterministic (virtual) clock additionally zeroes the measured
+//! wall durations of [`TraceSink::complete`] events — wall time must
+//! never leak into a simulator trace.
+//!
+//! ## Pay-for-what-you-use
+//!
+//! Instrumented code holds an `Option<TraceShared>`; a disabled sink
+//! is `None` and every record site is one branch ([`with`]). Enabled
+//! sinks are `Arc<Mutex<_>>` so the threaded server's replica and
+//! device threads can share one wall clock; the simulator is
+//! single-threaded, so the lock is uncontended and ordering stays
+//! deterministic.
+//!
+//! ## Track layout (Perfetto)
+//!
+//! `pid`/`tid` place events on tracks: process [`PID_ROUTER`] is the
+//! router, process [`PID_CLOUD`] holds one thread per scheduler
+//! replica, and [`tenant_pid`]`(t)` is one process per device tenant
+//! holding one thread per device. Begin/end spans of one device are
+//! strictly sequential (a device runs one request and one round at a
+//! time), so span nesting per track is always well formed.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Timestamp source for a [`TraceSink`] (see the module docs for the
+/// virtual-vs-wall contract).
+pub trait Clock: Send {
+    /// Seconds since the run started.
+    fn now_s(&self) -> f64;
+    /// Advance a virtual clock; wall clocks ignore this.
+    fn advance_to(&mut self, _now_s: f64) {}
+    /// Deterministic clocks force measured wall durations to zero.
+    fn is_deterministic(&self) -> bool {
+        false
+    }
+}
+
+/// Caller-advanced clock for discrete-event simulation: time moves
+/// only via [`Clock::advance_to`] (monotone — moving backwards is
+/// ignored), so same inputs give identical stamps.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VirtualClock {
+    now_s: f64,
+}
+
+impl Clock for VirtualClock {
+    fn now_s(&self) -> f64 {
+        self.now_s
+    }
+
+    fn advance_to(&mut self, now_s: f64) {
+        if now_s > self.now_s {
+            self.now_s = now_s;
+        }
+    }
+
+    fn is_deterministic(&self) -> bool {
+        true
+    }
+}
+
+/// Wall clock: seconds since construction (the threaded server).
+#[derive(Debug, Clone, Copy)]
+pub struct WallClock {
+    t0: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { t0: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+/// Track process of the router tier.
+pub const PID_ROUTER: u32 = 0;
+/// Track process of the cloud tier (one thread per scheduler replica).
+pub const PID_CLOUD: u32 = 1;
+
+/// Track process of device tenant `t` (one thread per device).
+pub fn tenant_pid(tenant: usize) -> u32 {
+    2 + tenant as u32
+}
+
+/// Chrome trace-event phase of a recorded event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ph {
+    /// Span open (`"B"`).
+    Begin,
+    /// Span close (`"E"`).
+    End,
+    /// Point event (`"i"`).
+    Instant,
+    /// Self-contained span with a duration (`"X"`).
+    Complete,
+    /// Counter sample (`"C"`).
+    Counter,
+}
+
+impl Ph {
+    /// The Chrome trace-event `ph` code.
+    pub fn code(self) -> &'static str {
+        match self {
+            Ph::Begin => "B",
+            Ph::End => "E",
+            Ph::Instant => "i",
+            Ph::Complete => "X",
+            Ph::Counter => "C",
+        }
+    }
+}
+
+/// One recorded trace event. `name`/`cat` are static so a record is
+/// two words and no allocation on the hot path; `args` carry numeric
+/// payloads only (deterministic serialization).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Seconds since run start (the sink's clock).
+    pub ts_s: f64,
+    /// Duration for [`Ph::Complete`] events (0 otherwise).
+    pub dur_s: f64,
+    pub ph: Ph,
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub pid: u32,
+    pub tid: u32,
+    /// Request/session id (0 = none).
+    pub id: u64,
+    pub args: Vec<(&'static str, f64)>,
+}
+
+/// Bounded ring buffer of trace events stamped by a [`Clock`]. On
+/// overflow the *oldest* event is dropped (and counted), so the tail
+/// of a run is always retained and drops are as deterministic as the
+/// event stream itself.
+pub struct TraceSink {
+    clock: Box<dyn Clock>,
+    deterministic: bool,
+    cap: usize,
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceSink")
+            .field("deterministic", &self.deterministic)
+            .field("cap", &self.cap)
+            .field("events", &self.events.len())
+            .field("dropped", &self.dropped)
+            .finish()
+    }
+}
+
+impl TraceSink {
+    pub fn new(clock: Box<dyn Clock>, cap: usize) -> TraceSink {
+        TraceSink {
+            deterministic: clock.is_deterministic(),
+            clock,
+            cap: cap.max(1),
+            events: VecDeque::new(),
+            dropped: 0,
+        }
+    }
+
+    /// Sink over a [`VirtualClock`] starting at 0 (simulators).
+    pub fn virtual_time(cap: usize) -> TraceSink {
+        TraceSink::new(Box::new(VirtualClock::default()), cap)
+    }
+
+    /// Sink over a [`WallClock`] started now (threaded serving).
+    pub fn wall_time(cap: usize) -> TraceSink {
+        TraceSink::new(Box::new(WallClock::new()), cap)
+    }
+
+    /// Advance a virtual clock to the current discrete-event time
+    /// (no-op on wall clocks).
+    pub fn set_now(&mut self, now_s: f64) {
+        self.clock.advance_to(now_s);
+    }
+
+    pub fn now_s(&self) -> f64 {
+        self.clock.now_s()
+    }
+
+    /// Does this sink zero measured wall durations (virtual clock)?
+    pub fn is_deterministic(&self) -> bool {
+        self.deterministic
+    }
+
+    fn push(&mut self, e: TraceEvent) {
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(e);
+    }
+
+    /// Open a span on track `(pid, tid)` for request/session `id`.
+    pub fn begin(&mut self, pid: u32, tid: u32, name: &'static str, id: u64) {
+        let ts_s = self.clock.now_s();
+        self.push(TraceEvent {
+            ts_s,
+            dur_s: 0.0,
+            ph: Ph::Begin,
+            name,
+            cat: "span",
+            pid,
+            tid,
+            id,
+            args: Vec::new(),
+        });
+    }
+
+    /// Close the innermost open span `name` on track `(pid, tid)`.
+    pub fn end(&mut self, pid: u32, tid: u32, name: &'static str, id: u64) {
+        let ts_s = self.clock.now_s();
+        self.push(TraceEvent {
+            ts_s,
+            dur_s: 0.0,
+            ph: Ph::End,
+            name,
+            cat: "span",
+            pid,
+            tid,
+            id,
+            args: Vec::new(),
+        });
+    }
+
+    /// Point event with numeric args.
+    pub fn instant(
+        &mut self,
+        pid: u32,
+        tid: u32,
+        name: &'static str,
+        id: u64,
+        args: Vec<(&'static str, f64)>,
+    ) {
+        let ts_s = self.clock.now_s();
+        self.push(TraceEvent {
+            ts_s,
+            dur_s: 0.0,
+            ph: Ph::Instant,
+            name,
+            cat: "event",
+            pid,
+            tid,
+            id,
+            args,
+        });
+    }
+
+    /// Self-contained span at `ts_s` lasting `dur_s` (both measured by
+    /// the caller against this sink's clock). Under a deterministic
+    /// clock the duration is forced to 0 — measured wall time must not
+    /// leak into a virtual-time trace.
+    pub fn complete(
+        &mut self,
+        pid: u32,
+        tid: u32,
+        name: &'static str,
+        ts_s: f64,
+        dur_s: f64,
+        args: Vec<(&'static str, f64)>,
+    ) {
+        self.push(TraceEvent {
+            ts_s,
+            dur_s: if self.deterministic { 0.0 } else { dur_s },
+            ph: Ph::Complete,
+            name,
+            cat: "phase",
+            pid,
+            tid,
+            id: 0,
+            args,
+        });
+    }
+
+    /// Counter sample (`value` lands in the args).
+    pub fn counter(&mut self, pid: u32, tid: u32, name: &'static str, value: f64) {
+        let ts_s = self.clock.now_s();
+        self.push(TraceEvent {
+            ts_s,
+            dur_s: 0.0,
+            ph: Ph::Counter,
+            name,
+            cat: "counter",
+            pid,
+            tid,
+            id: 0,
+            args: vec![("value", value)],
+        });
+    }
+
+    /// Recorded events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events the ring buffer discarded (oldest-first overflow).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Number of `(pid, tid, id, name)` span keys whose begin/end
+    /// counts differ — 0 for a fully drained run with no ring drops
+    /// (the per-request balance gate in `tests/obs_trace.rs`).
+    pub fn span_imbalance(&self) -> usize {
+        let mut bal: BTreeMap<(u32, u32, u64, &'static str), i64> = BTreeMap::new();
+        for e in &self.events {
+            match e.ph {
+                Ph::Begin => *bal.entry((e.pid, e.tid, e.id, e.name)).or_insert(0) += 1,
+                Ph::End => *bal.entry((e.pid, e.tid, e.id, e.name)).or_insert(0) -= 1,
+                _ => {}
+            }
+        }
+        bal.values().filter(|&&v| v != 0).count()
+    }
+}
+
+/// Shared handle instrumented code holds as `Option<TraceShared>`.
+pub type TraceShared = Arc<Mutex<TraceSink>>;
+
+/// Wrap a sink for sharing across the instrumented layers.
+pub fn shared(sink: TraceSink) -> TraceShared {
+    Arc::new(Mutex::new(sink))
+}
+
+/// Run `f` against the sink if one is attached — the single-branch
+/// disabled path every instrumentation site compiles down to.
+pub fn with<F: FnOnce(&mut TraceSink)>(trace: &Option<TraceShared>, f: F) {
+    if let Some(t) = trace {
+        if let Ok(mut sink) = t.lock() {
+            f(&mut sink);
+        }
+    }
+}
+
+/// Advance an attached sink's virtual clock (no-op when disabled or
+/// on a wall clock).
+pub fn set_now(trace: &Option<TraceShared>, now_s: f64) {
+    if let Some(t) = trace {
+        if let Ok(mut sink) = t.lock() {
+            sink.set_now(now_s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_is_monotone_and_deterministic() {
+        let mut s = TraceSink::virtual_time(16);
+        assert!(s.is_deterministic());
+        s.set_now(2.0);
+        s.set_now(1.0); // backwards move ignored
+        assert_eq!(s.now_s(), 2.0);
+        s.instant(1, 0, "x", 7, vec![("v", 3.0)]);
+        let e = s.events().next().unwrap();
+        assert_eq!(e.ts_s, 2.0);
+        assert_eq!(e.id, 7);
+    }
+
+    #[test]
+    fn deterministic_sink_zeroes_complete_durations() {
+        let mut s = TraceSink::virtual_time(16);
+        s.complete(1, 0, "phase", 1.0, 0.125, vec![]);
+        assert_eq!(s.events().next().unwrap().dur_s, 0.0);
+        let mut w = TraceSink::wall_time(16);
+        w.complete(1, 0, "phase", 1.0, 0.125, vec![]);
+        assert_eq!(w.events().next().unwrap().dur_s, 0.125);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut s = TraceSink::virtual_time(2);
+        for i in 0..5u64 {
+            s.instant(0, 0, "e", i, vec![]);
+        }
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.dropped(), 3);
+        let ids: Vec<u64> = s.events().map(|e| e.id).collect();
+        assert_eq!(ids, vec![3, 4], "newest events survive");
+    }
+
+    #[test]
+    fn span_imbalance_counts_unclosed_spans() {
+        let mut s = TraceSink::virtual_time(16);
+        s.begin(2, 0, "request", 1);
+        s.begin(2, 0, "round", 1);
+        s.end(2, 0, "round", 1);
+        assert_eq!(s.span_imbalance(), 1);
+        s.end(2, 0, "request", 1);
+        assert_eq!(s.span_imbalance(), 0);
+    }
+
+    #[test]
+    fn disabled_sink_is_a_noop_branch() {
+        let none: Option<TraceShared> = None;
+        with(&none, |_| panic!("must not run"));
+        set_now(&none, 1.0);
+    }
+}

@@ -29,7 +29,7 @@ use crate::cloud::scheduler::{CloudEvent, CloudRequest};
 use crate::config::{DeviceProfile, SyneraParams};
 use crate::device::codec::compress_dist;
 use crate::device::early_exit::SeqExitPolicy;
-use crate::device::offload::Selector;
+use crate::device::offload::{OffloadDecision, Selector};
 use crate::device::parallel::{alternative_token, predict_rejection};
 use crate::metrics::cost::{CostModel, PackingFactors};
 use crate::metrics::energy::EnergyModel;
@@ -37,6 +37,8 @@ use crate::metrics::stats::{LatencyRecorder, Summary};
 use crate::model::cloud_engine::BatchEngine;
 use crate::net::link::{LinkProfile, SimLink};
 use crate::net::wire::{DownlinkMsg, UplinkMsg};
+use crate::obs::registry::{self, RegistryShared};
+use crate::obs::trace::{self, tenant_pid, TraceShared};
 use crate::profiling::OffloadProfile;
 use crate::sim::clock::EventQueue;
 use crate::testutil::MockBatchEngine;
@@ -94,6 +96,13 @@ pub struct FleetConfig {
     pub seed: u64,
     /// Cloud model label for the cost model's packing factor.
     pub cloud_model: String,
+    /// Attached trace sink (virtual-clock spans and events across the
+    /// device, router and replica tracks); `None` = tracing off, every
+    /// record site is a single branch.
+    pub trace: Option<TraceShared>,
+    /// Attached metrics registry, sampled on its own cadence in
+    /// virtual time at replica tick boundaries; `None` = off.
+    pub registry: Option<RegistryShared>,
 }
 
 impl Default for FleetConfig {
@@ -119,6 +128,8 @@ impl Default for FleetConfig {
             reservoir: 1 << 16,
             seed: 0xF1EE7,
             cloud_model: "l13b".into(),
+            trace: None,
+            registry: None,
         }
     }
 }
@@ -275,8 +286,21 @@ impl SimDevice {
     /// The real two-stage offload decision plus the sequence-exit gate
     /// (`generated` = tokens generated so far in this request).
     pub fn decide_offload(&mut self, ch: &DraftedChunk, generated: usize) -> bool {
+        self.decide_offload_scored(ch, generated).0
+    }
+
+    /// [`SimDevice::decide_offload`] plus the selector's raw scores,
+    /// so tracing can record *why* a chunk offloaded. Identical RNG
+    /// draws to the unscored form — observing the decision never
+    /// perturbs the simulation.
+    pub fn decide_offload_scored(
+        &mut self,
+        ch: &DraftedChunk,
+        generated: usize,
+    ) -> (bool, OffloadDecision) {
         let d = self.selector.decide(&ch.confs, &ch.imps);
-        d.offload && self.seq_exit.offload_allowed(generated)
+        let offload = d.offload && self.seq_exit.offload_allowed(generated);
+        (offload, d)
     }
 
     /// The device's parallel-inference bet for an in-flight chunk:
@@ -399,6 +423,12 @@ impl<E: BatchEngine> FleetRun<'_, E> {
         let tenant = self.devs[device].model.tenant;
         self.acc[tenant].requests += 1;
         self.devs[device].pending.push_back((t, prompt));
+        if self.cfg.trace.is_some() {
+            let queued = self.devs[device].pending.len() as f64;
+            trace::with(&self.cfg.trace, |s| {
+                s.instant(tenant_pid(tenant), device as u32, "arrive", 0, vec![("queued", queued)])
+            });
+        }
         if self.devs[device].active.is_none() {
             self.start_next(t, device);
         }
@@ -422,6 +452,10 @@ impl<E: BatchEngine> FleetRun<'_, E> {
             t_last: 0.0,
             inflight: None,
         });
+        let tenant = dev.model.tenant;
+        trace::with(&self.cfg.trace, |s| {
+            s.begin(tenant_pid(tenant), device as u32, "request", req_id)
+        });
         let gamma = self.chunk_len(device);
         let delay = prompt_len as f64 * self.cfg.device_prefill_s
             + gamma as f64 * self.cfg.device_step_s;
@@ -442,12 +476,23 @@ impl<E: BatchEngine> FleetRun<'_, E> {
         let a = dev.active.as_mut().expect("wake without an active request");
         debug_assert!(a.inflight.is_none(), "wake while a round is in flight");
         let chunk = dev.model.draft_chunk(gamma);
-        let offload = dev.model.decide_offload(&chunk, a.generated);
+        let (offload, dec) = dev.model.decide_offload_scored(&chunk, a.generated);
 
         if !offload {
             // commit locally; token 0 of the chunk finished drafting at
             // t − (γ−1)·step
             self.local_chunks += 1;
+            if self.cfg.trace.is_some() {
+                let (pid, id) = (tenant_pid(tenant), a.req_id);
+                let args = vec![
+                    ("gamma", gamma as f64),
+                    ("p_conf", dec.p_conf),
+                    ("p_imp", dec.p_imp),
+                    ("mean_conf", dec.mean_conf),
+                    ("mean_imp", dec.mean_imp),
+                ];
+                trace::with(&self.cfg.trace, |s| s.instant(pid, device as u32, "local", id, args));
+            }
             let t0 = t - (gamma - 1) as f64 * step_s;
             if a.t_first.is_none() {
                 a.t_first = Some(t0);
@@ -500,11 +545,37 @@ impl<E: BatchEngine> FleetRun<'_, E> {
             greedy: self.cfg.params.greedy,
         };
         self.q.push(t + up_delay, Ev::Uplink { device: device as u32, req });
+        if self.cfg.trace.is_some() {
+            let (pid, id) = (tenant_pid(tenant), a.req_id);
+            let args = vec![
+                ("gamma", gamma as f64),
+                ("p_conf", dec.p_conf),
+                ("p_imp", dec.p_imp),
+                ("mean_conf", dec.mean_conf),
+                ("mean_imp", dec.mean_imp),
+                ("bytes", up_bytes as f64),
+            ];
+            trace::with(&self.cfg.trace, |s| {
+                s.instant(pid, device as u32, "offload", id, args);
+                s.begin(pid, device as u32, "round", id);
+                s.begin(pid, device as u32, "uplink", id);
+            });
+        }
         Ok(())
     }
 
     fn on_uplink(&mut self, t: f64, device: usize, req: CloudRequest) -> Result<()> {
         let tenant = self.devs[device].model.tenant;
+        if self.cfg.trace.is_some() {
+            let id = if let CloudRequest::Verify { request_id, .. } = &req {
+                *request_id
+            } else {
+                0
+            };
+            trace::with(&self.cfg.trace, |s| {
+                s.end(tenant_pid(tenant), device as u32, "uplink", id)
+            });
+        }
         let r = self.router.submit_tenant(tenant, req)?;
         self.wake_cloud(t, r);
         Ok(())
@@ -588,6 +659,16 @@ impl<E: BatchEngine> FleetRun<'_, E> {
                 Ev::CloudTick { replica: replica as u32 },
             );
         }
+        // cadence-gated metrics sample at the tick boundary, stamped
+        // with virtual time
+        if let Some(reg) = &self.cfg.registry {
+            if let Ok(mut r) = reg.lock() {
+                if r.due(t) {
+                    registry::sample_router(&mut r, &self.router);
+                    r.snapshot(t);
+                }
+            }
+        }
         Ok(())
     }
 
@@ -635,6 +716,14 @@ impl<E: BatchEngine> FleetRun<'_, E> {
         }
         let room = max_new - a.generated;
         commit.truncate(room);
+        if self.cfg.trace.is_some() {
+            let (pid, id) = (tenant_pid(tenant), a.req_id);
+            let args = vec![("accepted", accepted as f64), ("committed", commit.len() as f64)];
+            trace::with(&self.cfg.trace, |s| {
+                s.end(pid, device as u32, "round", id);
+                s.instant(pid, device as u32, "device_commit", id, args);
+            });
+        }
         if !commit.is_empty() {
             if a.t_first.is_none() {
                 a.t_first = Some(t_now);
@@ -654,13 +743,16 @@ impl<E: BatchEngine> FleetRun<'_, E> {
 
     fn finish_request(&mut self, t: f64, device: usize) {
         let a = self.devs[device].active.take().expect("finishing an active request");
+        let tenant = self.devs[device].model.tenant;
+        trace::with(&self.cfg.trace, |s| {
+            s.end(tenant_pid(tenant), device as u32, "request", a.req_id)
+        });
         if a.cloud_len > 0 {
             // the cloud holds state for this session; free it
             if let Ok(r) = self.router.submit(CloudRequest::Release { request_id: a.req_id }) {
                 self.wake_cloud(t, r);
             }
         }
-        let tenant = self.devs[device].model.tenant;
         let acc = &mut self.acc[tenant];
         acc.completed += 1;
         self.completed += 1;
@@ -742,7 +834,8 @@ pub fn run_fleet_on<E: BatchEngine>(
     // replica 0 keeps the exact pre-router seed, so an R = 1 fleet is
     // event-for-event identical to the single-scheduler driver it
     // replaced (gated by `same_seed_gives_bit_identical_reports`)
-    let router = Router::new(engines, cfg.seed ^ 0xF1EE7, &policy)?;
+    let mut router = Router::new(engines, cfg.seed ^ 0xF1EE7, &policy)?;
+    router.set_trace(cfg.trace.clone());
     let mut run = FleetRun {
         cfg,
         router,
@@ -819,6 +912,9 @@ pub fn run_fleet_on<E: BatchEngine>(
         if n_events > max_events {
             bail!("fleet sim exceeded {max_events} events (runaway configuration?)");
         }
+        // all trace events fired by this handler carry the event's
+        // virtual firing time (the clock contract in `obs::trace`)
+        trace::set_now(&cfg.trace, t);
         match ev {
             Ev::Arrive { device, prompt } => run.on_arrive(t, device as usize, prompt),
             Ev::Wake { device } => run.on_wake(t, device as usize)?,
@@ -838,6 +934,15 @@ pub fn run_fleet_on<E: BatchEngine>(
     } else {
         run.q.now()
     };
+    // one forced end-of-run snapshot: the drained end state (empty
+    // queues, freed blocks, closed sessions) always lands in the
+    // series regardless of cadence phase
+    if let Some(reg) = &cfg.registry {
+        if let Ok(mut r) = reg.lock() {
+            registry::sample_router(&mut r, &run.router);
+            r.snapshot(virtual_s);
+        }
+    }
     // per-tenant and aggregate cloud stats, summed across replicas
     let nrep = run.router.n_replicas();
     let mut cloud_draft_rows = 0u64;
@@ -869,8 +974,8 @@ pub fn run_fleet_on<E: BatchEngine>(
             weight: weights[t],
             requests: acc.requests,
             completed: acc.completed,
-            ttft: acc.ttft.summary(),
-            tbt: acc.tbt.summary(),
+            ttft: acc.ttft.summary().unwrap_or_default(),
+            tbt: acc.tbt.summary().unwrap_or_default(),
             slo_ttft_frac: acc.slo_ok_ttft as f64 / done as f64,
             slo_tbt_frac: acc.slo_ok_tbt as f64 / acc.tbt_eligible.max(1) as f64,
             rows_executed: tstats[t].rows_executed,

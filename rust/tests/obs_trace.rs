@@ -1,0 +1,186 @@
+//! Observability gates (artifact-free): the trace layer must be a
+//! pure observer. Same seed ⇒ byte-identical exports, tracing on vs
+//! off ⇒ bit-identical fleet reports, exports are valid JSON with
+//! balanced spans, and the metrics registry samples on its cadence
+//! with end-of-run gauges matching the drained state.
+
+use synera::config::{BatchPolicy, SyneraParams};
+use synera::metrics::stats::Summary;
+use synera::obs::export::{chrome_trace_string, events_jsonl_string, metrics_jsonl_string};
+use synera::obs::registry::{self, RegistryShared};
+use synera::obs::trace::{self, Ph, TraceShared, TraceSink};
+use synera::sim::{run_fleet, FleetConfig, FleetReport};
+use synera::util::json::Json;
+
+const TRACE_CAP: usize = 1 << 20;
+
+/// Small full-drain fleet (stop_s = 0): every request completes, so
+/// every opened span closes and gauges settle to the idle state.
+fn traced_cfg(trace: Option<TraceShared>, registry: Option<RegistryShared>) -> FleetConfig {
+    FleetConfig {
+        n_devices: 24,
+        duration_s: 3.0,
+        rate_rps: 12.0,
+        tenants: 3,
+        params: SyneraParams {
+            batch: BatchPolicy { max_sessions: 8, ..BatchPolicy::default() },
+            ..SyneraParams::default()
+        },
+        seed: 0x0B57,
+        trace,
+        registry,
+        ..FleetConfig::default()
+    }
+}
+
+fn run_traced() -> (FleetReport, TraceShared, RegistryShared) {
+    let tr = trace::shared(TraceSink::virtual_time(TRACE_CAP));
+    let reg = registry::shared(0.25);
+    let cfg = traced_cfg(Some(tr.clone()), Some(reg.clone()));
+    let rep = run_fleet(&cfg).unwrap();
+    (rep, tr, reg)
+}
+
+fn assert_summary_bits_eq(a: &Summary, b: &Summary, what: &str) {
+    assert_eq!(a.n, b.n, "{what}: n");
+    for (x, y, f) in [
+        (a.mean, b.mean, "mean"),
+        (a.p50, b.p50, "p50"),
+        (a.p95, b.p95, "p95"),
+        (a.max, b.max, "max"),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: {f} {x} vs {y}");
+    }
+}
+
+/// Same seed ⇒ byte-identical trace and metrics exports. This is the
+/// strongest determinism gate: any wall-clock or iteration-order
+/// leakage into the virtual-time event stream fails it.
+#[test]
+fn same_seed_trace_is_byte_identical() {
+    let (_, tr_a, reg_a) = run_traced();
+    let (_, tr_b, reg_b) = run_traced();
+    let (a, b) = (tr_a.lock().unwrap(), tr_b.lock().unwrap());
+    assert!(!a.is_empty(), "trace recorded events");
+    assert_eq!(a.dropped(), 0, "cap large enough for this run");
+    assert_eq!(chrome_trace_string(&a), chrome_trace_string(&b));
+    assert_eq!(events_jsonl_string(&a), events_jsonl_string(&b));
+    let (ra, rb) = (reg_a.lock().unwrap(), reg_b.lock().unwrap());
+    assert!(!ra.samples.is_empty(), "registry sampled");
+    assert_eq!(metrics_jsonl_string(&ra), metrics_jsonl_string(&rb));
+}
+
+/// The Chrome export parses as JSON, carries metadata + payload
+/// events, and every span opened on a track is closed (full drain).
+#[test]
+fn chrome_export_is_valid_and_spans_balance() {
+    let (rep, tr, _) = run_traced();
+    assert!(rep.offered > 0 && rep.completed == rep.offered, "full drain: {rep:?}");
+    let sink = tr.lock().unwrap();
+    assert_eq!(sink.span_imbalance(), 0, "all spans closed");
+
+    let doc = Json::parse(&chrome_trace_string(&sink)).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let ph_count = |code: &str| {
+        events.iter().filter(|e| e.opt("ph").and_then(|p| p.as_str().ok()) == Some(code)).count()
+    };
+    assert!(ph_count("M") > 0, "process/thread name metadata present");
+    assert!(ph_count("B") > 0 && ph_count("B") == ph_count("E"), "B/E balance");
+    assert!(ph_count("i") > 0, "instants present");
+    assert!(ph_count("X") > 0, "per-tick phase slices present");
+
+    // the request lifecycle appears: one request span per completion
+    let named = |n: &str, ph: Ph| sink.events().filter(|e| e.name == n && e.ph == ph).count();
+    assert_eq!(named("request", Ph::Begin), rep.completed, "request spans");
+    assert!(named("round", Ph::Begin) > 0, "offload rounds traced");
+    assert!(named("uplink", Ph::Begin) > 0, "uplink spans traced");
+    for n in ["arrive", "enqueue", "admit", "verify_commit", "device_commit"] {
+        assert!(named(n, Ph::Instant) > 0, "instant {n} present");
+    }
+    for n in ["wfq-drain", "paging", "pack", "engine", "commit"] {
+        assert!(named(n, Ph::Complete) > 0, "phase slice {n} present");
+    }
+}
+
+/// Tracing is a pure observer: enabling it must not perturb the
+/// simulation (identical RNG draws, identical reports).
+#[test]
+fn tracing_on_vs_off_is_bit_identical() {
+    let off = run_fleet(&traced_cfg(None, None)).unwrap();
+    let (on, _, _) = run_traced();
+    assert_eq!(off.offered, on.offered);
+    assert_eq!(off.completed, on.completed);
+    assert_eq!(off.generated_tokens, on.generated_tokens);
+    assert_eq!(off.offload_rounds, on.offload_rounds);
+    assert_eq!(off.cloud_draft_rows, on.cloud_draft_rows);
+    assert_eq!(off.virtual_s.to_bits(), on.virtual_s.to_bits(), "virtual horizon");
+    for (a, b) in off.tenants.iter().zip(&on.tenants) {
+        assert_eq!(a.completed, b.completed, "tenant {}", a.tenant);
+        assert_summary_bits_eq(&a.ttft, &b.ttft, "tenant ttft");
+        assert_summary_bits_eq(&a.tbt, &b.tbt, "tenant tbt");
+    }
+}
+
+/// Registry samples land on the virtual-time cadence, the JSONL
+/// export parses line-by-line, and end-of-run gauges match the
+/// drained scheduler state (no resident sessions, all blocks free).
+#[test]
+fn registry_cadence_and_end_state() {
+    let (rep, _, reg) = run_traced();
+    assert!(rep.completed == rep.offered, "full drain");
+    let r = reg.lock().unwrap();
+    assert!(r.samples.len() > 10, "multiple snapshots: {}", r.samples.len());
+    let mut last = f64::NEG_INFINITY;
+    for s in &r.samples {
+        assert!(s.t_s >= last, "sample times monotone");
+        last = s.t_s;
+    }
+    for line in metrics_jsonl_string(&r).lines() {
+        let j = Json::parse(line).unwrap();
+        assert!(j.opt("t_s").is_some() || j.opt("hist").is_some(), "line shape: {line}");
+    }
+    // end-of-run gauges reflect the drained state
+    let free = r.gauge("cloud.free_blocks.0").unwrap();
+    let cap = r.gauge("cloud.block_capacity.0").unwrap();
+    assert_eq!(free, cap, "all KV blocks free after drain");
+    assert_eq!(r.gauge("cloud.sessions_open.0"), Some(0.0), "no open sessions");
+    assert_eq!(r.gauge("cloud.queue_depth.0"), Some(0.0), "queue drained");
+    // only requests that offload at least once reach the router
+    let routed = r.gauge("router.routed").unwrap();
+    assert!(routed > 0.0 && routed <= rep.offered as f64, "routed {routed}");
+}
+
+/// With router replicas the placement/migration instants appear on
+/// the router track and per-replica tick slices land on distinct
+/// cloud threads.
+#[test]
+fn replicas_emit_router_and_per_replica_events() {
+    let tr = trace::shared(TraceSink::virtual_time(TRACE_CAP));
+    let cfg = FleetConfig {
+        params: SyneraParams {
+            batch: BatchPolicy {
+                max_sessions: 8,
+                replicas: 2,
+                rebalance_threshold: 4,
+                ..BatchPolicy::default()
+            },
+            ..SyneraParams::default()
+        },
+        ..traced_cfg(Some(tr.clone()), None)
+    };
+    let rep = run_fleet(&cfg).unwrap();
+    assert!(rep.completed > 0);
+    let sink = tr.lock().unwrap();
+    let places = sink
+        .events()
+        .filter(|e| e.name == "place" && e.pid == trace::PID_ROUTER)
+        .count();
+    assert!(places > 0, "router placements traced");
+    let tids: std::collections::BTreeSet<u32> = sink
+        .events()
+        .filter(|e| e.pid == trace::PID_CLOUD && e.ph == Ph::Complete)
+        .map(|e| e.tid)
+        .collect();
+    assert_eq!(tids.len(), 2, "one cloud track per replica: {tids:?}");
+}

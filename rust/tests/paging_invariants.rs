@@ -327,3 +327,62 @@ fn releasing_a_parked_session_frees_its_blocks() {
     assert_eq!(sched.engine.free_slots(), 1);
     assert_eq!(sched.engine.allocs, sched.engine.frees);
 }
+
+/// The metrics registry's scheduler gauges mirror the live paging
+/// state at every sample point, including mid-swap: no stale or
+/// invariant-violating snapshot ever lands in the export.
+#[test]
+fn registry_gauges_track_live_paging_state() {
+    use synera::obs::registry::{sample_scheduler, Registry};
+
+    let slots = 2usize;
+    let mut sched = Scheduler::with_policy(
+        MockBatchEngine::new(slots, 8, 64, 4096),
+        0x9A6F,
+        paged_policy(8),
+    );
+    for id in 0..8u64 {
+        sched
+            .submit(CloudRequest::Verify {
+                request_id: id,
+                device_id: id as u32,
+                uncached: vec![12 + (id % 5) as u32; 4],
+                draft: vec![9, 9],
+                dists: dense_dists(2, 64),
+                greedy: true,
+            })
+            .unwrap();
+    }
+    let mut reg = Registry::new(0.0);
+    let mut done = 0usize;
+    for tick in 0..500 {
+        let (events, _) = sched.tick().unwrap();
+        for e in events {
+            if let CloudEvent::VerifyDone { request_id, .. } = e {
+                sched.submit(CloudRequest::Release { request_id }).unwrap();
+                done += 1;
+            }
+        }
+        sample_scheduler(&mut reg, 0, &sched);
+        let g = |n: &str| reg.gauge(&format!("cloud.{n}.0")).unwrap();
+        // gauges equal the live accessors they mirror
+        assert_eq!(g("sessions_open"), sched.active_sessions() as f64, "tick {tick}");
+        assert_eq!(g("free_blocks"), sched.sessions().free_blocks() as f64);
+        assert_eq!(g("swap_ins"), sched.sessions().stats().swap_ins as f64);
+        assert_eq!(g("swap_outs"), sched.sessions().stats().swap_outs as f64);
+        // and satisfy the paging invariants at every sample point
+        assert!(g("sessions_resident") <= slots as f64, "residency over width");
+        assert_eq!(g("sessions_resident") + g("slots_free"), slots as f64);
+        assert!(g("free_blocks") <= g("block_capacity"));
+        if done == 8 {
+            break;
+        }
+    }
+    assert_eq!(done, 8, "workload drained");
+    sample_scheduler(&mut reg, 0, &sched);
+    let g = |n: &str| reg.gauge(&format!("cloud.{n}.0")).unwrap();
+    assert!(g("swap_outs") > 0.0, "8 sessions over 2 slots must page");
+    assert_eq!(g("sessions_open"), 0.0);
+    assert_eq!(g("free_blocks"), g("block_capacity"), "block conservation in gauges");
+    assert_eq!(g("slots_free"), slots as f64);
+}

@@ -380,3 +380,51 @@ fn fleet_with_replicas_and_rebalancing_is_deterministic() {
     // both replicas actually served work
     assert!(a.replica_iterations.iter().all(|&n| n > 0), "{:?}", a.replica_iterations);
 }
+
+/// The metrics registry's router snapshot mirrors the live tier: one
+/// gauge set per replica, router-level counters equal to `stats`, and
+/// the end-of-run sample shows the conserved (drained) state.
+#[test]
+fn registry_router_snapshot_matches_live_tier() {
+    use synera::obs::registry::{sample_router, Registry};
+
+    let mut router = router_with(2, &BatchPolicy { max_sessions: 8, ..BatchPolicy::default() });
+    let n = 6u64;
+    for id in 0..n {
+        let home = router.submit(verify_req(id, vec![12, 13], vec![9, 9])).unwrap();
+        let _ = drive_to_verify_done(&mut router, home, id);
+    }
+    // mid-run: sessions open across both replicas
+    let mut reg = Registry::new(0.0);
+    sample_router(&mut reg, &router);
+    for r in 0..2usize {
+        let g = |n: &str| reg.gauge(&format!("cloud.{n}.{r}")).unwrap();
+        let live = router.replica(r);
+        assert_eq!(g("sessions_open"), live.active_sessions() as f64, "replica {r}");
+        assert_eq!(g("free_blocks"), live.sessions().free_blocks() as f64);
+        assert_eq!(g("rows_executed"), live.stats.rows_executed as f64);
+    }
+    assert_eq!(reg.gauge("router.routed"), Some(router.stats.routed as f64));
+    assert_eq!(
+        reg.gauge("router.migrations"),
+        Some(router.stats.migrations as f64)
+    );
+    let open: f64 = (0..2)
+        .map(|r| reg.gauge(&format!("cloud.sessions_open.{r}")).unwrap())
+        .sum();
+    assert_eq!(open, n as f64, "every submitted session is open somewhere");
+
+    // drain and re-sample: the gauges must show the conserved state
+    for id in 0..n {
+        router.submit(CloudRequest::Release { request_id: id }).unwrap();
+    }
+    assert!(router.is_idle());
+    sample_router(&mut reg, &router);
+    for r in 0..2usize {
+        let g = |n: &str| reg.gauge(&format!("cloud.{n}.{r}")).unwrap();
+        assert_eq!(g("sessions_open"), 0.0, "replica {r} drained");
+        assert_eq!(g("free_blocks"), g("block_capacity"), "replica {r} blocks back");
+        assert_eq!(g("sessions_resident"), 0.0);
+        assert_replica_conserved(&router, r);
+    }
+}
