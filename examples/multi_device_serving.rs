@@ -11,7 +11,7 @@
 //! cargo run --release --example multi_device_serving -- [n_devices] [reqs/dev]
 //! ```
 
-use synera::config::Scenario;
+use synera::config::{Scenario, SloPolicy};
 use synera::coordinator::serve::{run_threaded, ServeConfig};
 use synera::runtime::artifacts_dir;
 use synera::workload::synthlang::Task;
@@ -28,6 +28,7 @@ fn main() -> anyhow::Result<()> {
         requests_per_device: requests,
         artifacts: artifacts_dir(),
         trace: None,
+        slo: SloPolicy::default(),
     };
     println!(
         "multi-device serving: {n_devices} devices × {requests} requests (pair {}, {})",

@@ -119,6 +119,7 @@ fn simulate(
                     draft: draft.clone(),
                     dists: vec![Dist::Dense(vec![1.0 / 512.0; 512]); draft.len()],
                     greedy: true,
+                    ctx: Default::default(),
                 })?,
                 Work::Generate { prompt, max_new } => sched.submit(CloudRequest::Generate {
                     request_id: a.id,
@@ -182,6 +183,7 @@ fn simulate_sessions(
             draft,
             dists,
             greedy: true,
+            ctx: Default::default(),
         })
     };
     let mut now = 0.0f64;

@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
                 draft: (0..gamma).map(|_| 200 + rng.below(128) as u32).collect(),
                 dists: vec![Dist::Dense(vec![1.0 / 512.0; 512]); gamma],
                 greedy: true,
+                ctx: Default::default(),
             })?;
         }
         let mut done = 0;

@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         draft: vec![300; 4],
         dists: vec![compress_dist(&probs, 8); 4],
         is_first: false,
+        ctx: Default::default(),
     };
     let s = time_it(100, 2000, || {
         std::hint::black_box(msg.encode());

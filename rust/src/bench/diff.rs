@@ -1,0 +1,291 @@
+//! Benchmark snapshot comparison — the logic behind the CI perf gate
+//! (`tools/bench_diff.sh` → `cargo run --bin bench_diff`).
+//!
+//! Two `BENCH_<name>.json` snapshots ([`super::write_bench_json`]) are
+//! compared leaf by leaf. Numeric leaves must agree within a relative
+//! tolerance (default 25% — sim metrics are deterministic, so the slack
+//! exists for counters that legitimately shift with small code
+//! changes); **timing** leaves (key ending in `_s`, or containing
+//! `wall` or `ms`) are reported but never gate, because CI machine
+//! noise would make them flaky. Structural drift — a missing or new
+//! key, a type change, a `schema` bump — always gates: a snapshot
+//! whose shape silently changed is not being compared at all.
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// Default relative tolerance for gating numeric leaves.
+pub const DEFAULT_TOL: f64 = 0.25;
+
+/// Outcome of one compared leaf.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Within tolerance (or exactly equal for non-numerics).
+    Ok,
+    /// Numeric drift beyond tolerance — gates the build.
+    Fail,
+    /// Timing leaf: reported, never gates.
+    Info,
+    /// Key present on one side only, or type changed — gates.
+    Shape,
+}
+
+/// One row of the delta table.
+#[derive(Debug, Clone)]
+pub struct DiffRow {
+    /// Dotted path into `results` (e.g. `points.3.p95_s`).
+    pub path: String,
+    pub baseline: Option<f64>,
+    pub candidate: Option<f64>,
+    /// Relative delta `(cand − base) / |base|`; `None` when either
+    /// side is missing/non-numeric or the baseline is zero.
+    pub rel: Option<f64>,
+    pub verdict: Verdict,
+}
+
+/// Full comparison of two snapshots.
+#[derive(Debug, Clone, Default)]
+pub struct DiffReport {
+    pub bench: String,
+    pub rows: Vec<DiffRow>,
+}
+
+impl DiffReport {
+    /// Rows that gate (numeric drift or shape change).
+    pub fn failures(&self) -> usize {
+        self.rows.iter().filter(|r| matches!(r.verdict, Verdict::Fail | Verdict::Shape)).count()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.failures() == 0
+    }
+
+    /// Deterministic delta table (rows are generated in `BTreeMap`
+    /// key order, so same inputs produce identical bytes).
+    pub fn table_string(&self) -> String {
+        let mut out = format!(
+            "{:<40} {:>14} {:>14} {:>9}  {}\n",
+            "metric", "baseline", "candidate", "delta", "verdict"
+        );
+        for r in &self.rows {
+            let num = |v: Option<f64>| v.map_or("-".to_string(), |x| format!("{x:.6}"));
+            let rel = r.rel.map_or("-".to_string(), |d| format!("{:+.1}%", d * 100.0));
+            let verdict = match r.verdict {
+                Verdict::Ok => "ok",
+                Verdict::Fail => "FAIL",
+                Verdict::Info => "info",
+                Verdict::Shape => "SHAPE",
+            };
+            out.push_str(&format!(
+                "{:<40} {:>14} {:>14} {:>9}  {}\n",
+                r.path,
+                num(r.baseline),
+                num(r.candidate),
+                rel,
+                verdict
+            ));
+        }
+        out.push_str(&format!(
+            "{} leaves compared, {} gating failure(s)\n",
+            self.rows.len(),
+            self.failures()
+        ));
+        out
+    }
+}
+
+/// Is this leaf a timing measurement (informational, never gates)?
+fn is_timing_key(key: &str) -> bool {
+    key.ends_with("_s") || key.contains("wall") || key.ends_with("_ms")
+}
+
+/// Compare two `BENCH_*.json` documents (full file contents).
+pub fn diff_snapshots(baseline: &str, candidate: &str, tol: f64) -> Result<DiffReport> {
+    let b = Json::parse(baseline).context("baseline snapshot is not valid JSON")?;
+    let c = Json::parse(candidate).context("candidate snapshot is not valid JSON")?;
+    let name = b.get("bench")?.as_str()?.to_string();
+    if c.get("bench")?.as_str()? != name {
+        bail!("snapshots are from different benches");
+    }
+    let mut rep = DiffReport { bench: name, rows: Vec::new() };
+    if b.get("schema")?.as_f64()? != c.get("schema")?.as_f64()? {
+        rep.rows.push(DiffRow {
+            path: "schema".into(),
+            baseline: b.get("schema")?.as_f64().ok(),
+            candidate: c.get("schema")?.as_f64().ok(),
+            rel: None,
+            verdict: Verdict::Shape,
+        });
+        return Ok(rep); // incomparable layouts: stop at the version gate
+    }
+    diff_value("results", b.get("results")?, c.get("results")?, tol, &mut rep.rows);
+    Ok(rep)
+}
+
+fn diff_value(path: &str, b: &Json, c: &Json, tol: f64, out: &mut Vec<DiffRow>) {
+    match (b, c) {
+        (Json::Obj(bm), Json::Obj(cm)) => {
+            // union of keys, sorted: drift on either side is visible
+            let keys: std::collections::BTreeSet<&String> =
+                bm.keys().chain(cm.keys()).collect();
+            for k in keys {
+                let p = format!("{path}.{k}");
+                match (bm.get(k), cm.get(k)) {
+                    (Some(bv), Some(cv)) => diff_value(&p, bv, cv, tol, out),
+                    (bv, cv) => out.push(DiffRow {
+                        path: p,
+                        baseline: bv.and_then(|v| v.as_f64().ok()),
+                        candidate: cv.and_then(|v| v.as_f64().ok()),
+                        rel: None,
+                        verdict: Verdict::Shape,
+                    }),
+                }
+            }
+        }
+        (Json::Arr(ba), Json::Arr(ca)) => {
+            if ba.len() != ca.len() {
+                out.push(DiffRow {
+                    path: format!("{path}.len"),
+                    baseline: Some(ba.len() as f64),
+                    candidate: Some(ca.len() as f64),
+                    rel: None,
+                    verdict: Verdict::Shape,
+                });
+                return;
+            }
+            for (i, (bv, cv)) in ba.iter().zip(ca).enumerate() {
+                diff_value(&format!("{path}.{i}"), bv, cv, tol, out);
+            }
+        }
+        (Json::Num(bx), Json::Num(cx)) => {
+            let leaf = path.rsplit('.').next().unwrap_or(path);
+            let rel = if *bx != 0.0 { Some((cx - bx) / bx.abs()) } else { None };
+            let verdict = if is_timing_key(leaf) {
+                Verdict::Info
+            } else {
+                let within = match rel {
+                    Some(d) => d.abs() <= tol,
+                    // zero baseline: require the candidate to stay
+                    // within the same tolerance of zero in absolute
+                    // terms (counters that were 0 should stay ~0)
+                    None => cx.abs() <= tol,
+                };
+                if within {
+                    Verdict::Ok
+                } else {
+                    Verdict::Fail
+                }
+            };
+            out.push(DiffRow {
+                path: path.to_string(),
+                baseline: Some(*bx),
+                candidate: Some(*cx),
+                rel,
+                verdict,
+            });
+        }
+        _ => {
+            // strings/bools/nulls must match exactly; a type change is
+            // always a shape failure
+            let same = match (b, c) {
+                (Json::Str(x), Json::Str(y)) => x == y,
+                (Json::Bool(x), Json::Bool(y)) => x == y,
+                (Json::Null, Json::Null) => true,
+                _ => false,
+            };
+            out.push(DiffRow {
+                path: path.to_string(),
+                baseline: None,
+                candidate: None,
+                rel: None,
+                verdict: if same { Verdict::Ok } else { Verdict::Shape },
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(results: &str) -> String {
+        format!("{{\"bench\":\"figX\",\"schema\":1,\"results\":{results}}}")
+    }
+
+    #[test]
+    fn identical_snapshots_pass() {
+        let s = snap("{\"throughput\": 100.0, \"points\": [{\"p95_s\": 0.5}]}");
+        let rep = diff_snapshots(&s, &s, DEFAULT_TOL).unwrap();
+        assert!(rep.passed(), "{}", rep.table_string());
+        assert_eq!(rep.bench, "figX");
+    }
+
+    #[test]
+    fn drift_beyond_tolerance_fails() {
+        let b = snap("{\"throughput\": 100.0}");
+        let c = snap("{\"throughput\": 60.0}");
+        let rep = diff_snapshots(&b, &c, 0.25).unwrap();
+        assert_eq!(rep.failures(), 1);
+        assert!(rep.table_string().contains("FAIL"));
+        // 10% drift under a 25% tolerance is fine
+        let c2 = snap("{\"throughput\": 110.0}");
+        assert!(diff_snapshots(&b, &c2, 0.25).unwrap().passed());
+    }
+
+    #[test]
+    fn timing_leaves_never_gate() {
+        let b = snap("{\"p95_s\": 0.1, \"wall_s\": 3.0}");
+        let c = snap("{\"p95_s\": 5.0, \"wall_s\": 90.0}");
+        let rep = diff_snapshots(&b, &c, 0.25).unwrap();
+        assert!(rep.passed(), "timing drift is informational: {}", rep.table_string());
+        assert!(rep.rows.iter().all(|r| r.verdict == Verdict::Info));
+    }
+
+    #[test]
+    fn shape_drift_gates() {
+        let b = snap("{\"a\": 1.0, \"b\": 2.0}");
+        let missing = snap("{\"a\": 1.0}");
+        assert!(!diff_snapshots(&b, &missing, 0.25).unwrap().passed());
+        let extra = snap("{\"a\": 1.0, \"b\": 2.0, \"c\": 3.0}");
+        assert!(!diff_snapshots(&b, &extra, 0.25).unwrap().passed());
+        let arr_b = snap("{\"pts\": [1.0, 2.0]}");
+        let arr_c = snap("{\"pts\": [1.0]}");
+        assert!(!diff_snapshots(&arr_b, &arr_c, 0.25).unwrap().passed());
+        let ty = snap("{\"a\": \"one\", \"b\": 2.0}");
+        assert!(!diff_snapshots(&b, &ty, 0.25).unwrap().passed());
+    }
+
+    #[test]
+    fn schema_bump_short_circuits() {
+        let b = snap("{\"a\": 1.0}");
+        let c = b.replace("\"schema\":1", "\"schema\":2");
+        let rep = diff_snapshots(&b, &c, 0.25).unwrap();
+        assert_eq!(rep.rows.len(), 1);
+        assert_eq!(rep.rows[0].verdict, Verdict::Shape);
+    }
+
+    #[test]
+    fn zero_baseline_uses_absolute_tolerance() {
+        let b = snap("{\"migrations\": 0.0}");
+        assert!(diff_snapshots(&b, &snap("{\"migrations\": 0.0}"), 0.25).unwrap().passed());
+        assert!(!diff_snapshots(&b, &snap("{\"migrations\": 7.0}"), 0.25).unwrap().passed());
+    }
+
+    #[test]
+    fn table_is_deterministic() {
+        let b = snap("{\"z\": 1.0, \"a\": 2.0, \"m\": {\"q\": 3.0}}");
+        let c = snap("{\"z\": 1.1, \"a\": 2.0, \"m\": {\"q\": 3.5}}");
+        let r1 = diff_snapshots(&b, &c, 0.25).unwrap().table_string();
+        let r2 = diff_snapshots(&b, &c, 0.25).unwrap().table_string();
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn different_benches_refuse_to_compare() {
+        let b = snap("{\"a\": 1.0}");
+        let c = b.replace("figX", "figY");
+        assert!(diff_snapshots(&b, &c, 0.25).is_err());
+    }
+}

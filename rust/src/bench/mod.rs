@@ -6,6 +6,8 @@
 //! benches use under `--json` so the perf trajectory is tracked in
 //! machine-readable form.
 
+pub mod diff;
+
 use std::path::PathBuf;
 use std::time::Instant;
 

@@ -1,0 +1,45 @@
+//! CI perf gate: compare two `BENCH_<name>.json` snapshots.
+//!
+//! ```text
+//! bench_diff <baseline.json> <candidate.json> [--tol 0.25]
+//! ```
+//!
+//! Prints the delta table to stderr and exits nonzero when any
+//! non-timing metric drifts beyond the tolerance or the snapshot
+//! shape changed. See `synera::bench::diff` for the rules and
+//! `tools/bench_diff.sh` for the CI wrapper that supplies the
+//! committed baseline.
+
+use anyhow::{Context, Result};
+use synera::bench::diff::{diff_snapshots, DEFAULT_TOL};
+use synera::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        synera::log!(Error, "bench_diff: {e:#}");
+        std::process::exit(2);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    // no subcommand: the first two operands are the snapshot paths
+    let mut paths = Vec::new();
+    paths.extend(args.command.clone());
+    paths.extend(args.positionals.iter().cloned());
+    let [base, cand] = paths.as_slice() else {
+        anyhow::bail!("usage: bench_diff <baseline.json> <candidate.json> [--tol 0.25]");
+    };
+    let tol = args.get_f64("tol", DEFAULT_TOL)?;
+    let b = std::fs::read_to_string(base).with_context(|| format!("reading {base}"))?;
+    let c = std::fs::read_to_string(cand).with_context(|| format!("reading {cand}"))?;
+    let rep = diff_snapshots(&b, &c, tol)?;
+    synera::log!(Info, "bench {} (tolerance {:.0}%):", rep.bench, tol * 100.0);
+    for line in rep.table_string().lines() {
+        synera::log!(Info, "{line}");
+    }
+    if !rep.passed() {
+        std::process::exit(1);
+    }
+    Ok(())
+}

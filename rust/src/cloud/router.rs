@@ -203,7 +203,11 @@ impl<E: BatchEngine> Router<E> {
             None => (self.place(tenant), true),
         };
         if placed && self.trace.is_some() {
-            let args = vec![("replica", r as f64)];
+            let mut args = vec![("replica", r as f64)];
+            if let CloudRequest::Verify { ctx, .. } = &req {
+                // causal join key: which device round this placement serves
+                args.push(("round", ctx.round as f64));
+            }
             trace::with(&self.trace, |s| s.instant(PID_ROUTER, 0, "place", id, args));
         }
         self.forward(r, tenant, req)?;

@@ -53,8 +53,8 @@ use crate::cloud::verifier::{verify_chunk, VerifyOutcome};
 use crate::config::BatchPolicy;
 use crate::model::cloud_engine::{BatchEngine, CloudEngine, SlotChunk};
 use crate::model::logits::argmax;
-use crate::net::wire::Dist;
-use crate::obs::trace::{self, TraceShared, PID_CLOUD};
+use crate::net::wire::{Dist, TraceContext};
+use crate::obs::trace::{self, Ph, TraceShared, PID_CLOUD};
 use crate::runtime::SlotKv;
 use crate::util::rng::Rng;
 use crate::workload::vocab::EOS;
@@ -74,6 +74,10 @@ pub enum CloudRequest {
         draft: Vec<u32>,
         dists: Vec<Dist>,
         greedy: bool,
+        /// Causal context from the originating device round (default =
+        /// untraced); cloud-side trace events echo its round and close
+        /// its flow arrow.
+        ctx: TraceContext,
     },
     /// A device session finished; free its slot/blocks.
     Release { request_id: u64 },
@@ -152,6 +156,8 @@ struct VerifyJob {
     rows: Vec<Vec<f32>>,
     /// Consecutive iterations this job was runnable but not scheduled.
     wait_iters: u64,
+    /// Causal context of the originating device round.
+    ctx: TraceContext,
 }
 
 /// Work classes in packing-priority order (lower = packed earlier).
@@ -387,7 +393,11 @@ impl<E: BatchEngine> Scheduler<E> {
         };
         if self.trace.is_some() {
             // WFQ queue wait = gap between this and the "admit" instant
-            self.trace_instant("enqueue", request_id, vec![("cost", request_cost(&req))]);
+            let mut args = vec![("cost", request_cost(&req))];
+            if let CloudRequest::Verify { ctx, .. } = &req {
+                args.push(("round", ctx.round as f64));
+            }
+            self.trace_instant("enqueue", request_id, args);
         }
         if let Some(t) = tenant {
             if let Some(wfq) = self.wfq.as_ref() {
@@ -834,8 +844,16 @@ impl<E: BatchEngine> Scheduler<E> {
                         vec![
                             ("accepted", outcome.accepted as f64),
                             ("draft", job.draft.len() as f64),
+                            ("round", job.ctx.round as f64),
                         ],
                     );
+                    // cloud hop of the device→cloud→device flow arrow
+                    if job.ctx.parent_span != 0 {
+                        let (tid, flow_id) = (self.trace_tid, job.ctx.parent_span);
+                        trace::with(&self.trace, |s| {
+                            s.flow(PID_CLOUD, tid, "offload", Ph::FlowStep, flow_id);
+                        });
+                    }
                 }
                 events.push(CloudEvent::VerifyDone {
                     request_id: job.request_id,
@@ -1093,7 +1111,8 @@ impl<E: BatchEngine> Scheduler<E> {
     /// slot's KV capacity ends the session gracefully (EOS correction,
     /// zero accepted) instead of failing the scheduling loop mid-tick.
     fn start_verify(&mut self, req: CloudRequest, events: &mut Vec<CloudEvent>) {
-        let CloudRequest::Verify { request_id, device_id, uncached, draft, dists, greedy } = req
+        let CloudRequest::Verify { request_id, device_id, uncached, draft, dists, greedy, ctx } =
+            req
         else {
             unreachable!("start_verify takes only verify requests");
         };
@@ -1102,10 +1121,34 @@ impl<E: BatchEngine> Scheduler<E> {
             self.trace_instant(
                 "admit",
                 request_id,
-                vec![("base_len", base_len as f64), ("draft", draft.len() as f64)],
+                vec![
+                    ("base_len", base_len as f64),
+                    ("draft", draft.len() as f64),
+                    ("round", ctx.round as f64),
+                ],
             );
         }
         if base_len + uncached.len() + draft.len() > self.engine.max_len() {
+            // the overflow verdict still commits (EOS, zero accepted):
+            // trace it like any other round so the request's timeline
+            // stays complete for `synera inspect`
+            if self.trace.is_some() {
+                self.trace_instant(
+                    "verify_commit",
+                    request_id,
+                    vec![
+                        ("accepted", 0.0),
+                        ("draft", draft.len() as f64),
+                        ("round", ctx.round as f64),
+                    ],
+                );
+                if ctx.parent_span != 0 {
+                    let (tid, flow_id) = (self.trace_tid, ctx.parent_span);
+                    trace::with(&self.trace, |s| {
+                        s.flow(PID_CLOUD, tid, "offload", Ph::FlowStep, flow_id);
+                    });
+                }
+            }
             events.push(CloudEvent::VerifyDone {
                 request_id,
                 device_id,
@@ -1128,6 +1171,7 @@ impl<E: BatchEngine> Scheduler<E> {
             consumed: 0,
             rows: Vec::new(),
             wait_iters: 0,
+            ctx,
         });
     }
 

@@ -296,11 +296,7 @@ impl SessionManager {
             let kv = self.pool.load(&table);
             self.stats.bytes_in += kv.bytes() as u64;
             self.stats.swap_ins += 1;
-            if self.trace.is_some() {
-                let tid = self.trace_tid;
-                let args = vec![("rows", kv.len as f64), ("bytes", kv.bytes() as f64)];
-                trace::with(&self.trace, |s| s.instant(PID_CLOUD, tid, "swap_in", id, args));
-            }
+            let (rows, bytes) = (kv.len as f64, kv.bytes() as f64);
             if let Err(e) = engine.import_slot(slot, &kv) {
                 // roll the half-swap back: return the slot, keep the
                 // parked image authoritative (no stranded Swapping
@@ -309,6 +305,18 @@ impl SessionManager {
                 self.sessions.get_mut(&id).expect("still present").state =
                     SessionState::Parked { table };
                 return Err(e);
+            }
+            if self.trace.is_some() {
+                let tid = self.trace_tid;
+                let wall = t0.elapsed().as_secs_f64();
+                trace::with(&self.trace, |s| {
+                    // the analyzer's paging attribution reads `s`; a
+                    // deterministic (virtual-clock) sink zeroes it like
+                    // every other wall duration
+                    let secs = if s.is_deterministic() { 0.0 } else { wall };
+                    let args = vec![("rows", rows), ("bytes", bytes), ("s", secs)];
+                    s.instant(PID_CLOUD, tid, "swap_in", id, args)
+                });
             }
         }
         self.pool.release(table);
@@ -417,8 +425,13 @@ impl SessionManager {
         self.stats.swap_s += t0.elapsed().as_secs_f64();
         if self.trace.is_some() {
             let tid = self.trace_tid;
-            let args = vec![("rows", kv.len as f64), ("bytes", kv.bytes() as f64)];
-            trace::with(&self.trace, |s| s.instant(PID_CLOUD, tid, "swap_out", id, args));
+            let wall = t0.elapsed().as_secs_f64();
+            let (rows, bytes) = (kv.len as f64, kv.bytes() as f64);
+            trace::with(&self.trace, |s| {
+                let secs = if s.is_deterministic() { 0.0 } else { wall };
+                let args = vec![("rows", rows), ("bytes", bytes), ("s", secs)];
+                s.instant(PID_CLOUD, tid, "swap_out", id, args)
+            });
         }
         self.sessions.get_mut(&id).expect("still present").state =
             SessionState::Parked { table };

@@ -174,6 +174,39 @@ impl BatchPolicy {
     }
 }
 
+/// Per-tenant latency SLO: the thresholds a request must meet and the
+/// violation budget the burn-rate monitor (`obs::registry::SloMonitor`)
+/// measures consumption against. Shared by `synera fleet` and `synera
+/// serve` via `--slo-ttft` / `--slo-tbt`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloPolicy {
+    /// Time-to-first-token target in seconds.
+    pub ttft_s: f64,
+    /// Time-between-tokens target in seconds.
+    pub tbt_s: f64,
+    /// Tolerated violation fraction (error budget): a burn rate of 1.0
+    /// means violations are arriving exactly at the budgeted rate;
+    /// above 1.0 the budget is being consumed faster than allowed.
+    pub violation_budget: f64,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy { ttft_s: 2.0, tbt_s: 0.25, violation_budget: 0.1 }
+    }
+}
+
+impl SloPolicy {
+    /// Cumulative burn: the fraction of the violation budget consumed
+    /// given an attainment level (1.0 − attainment violations observed).
+    pub fn burn(&self, attainment: f64) -> f64 {
+        if self.violation_budget <= 0.0 {
+            return 0.0;
+        }
+        ((1.0 - attainment).max(0.0)) / self.violation_budget
+    }
+}
+
 /// Synera runtime parameters (paper defaults annotated).
 #[derive(Debug, Clone)]
 pub struct SyneraParams {
@@ -306,6 +339,16 @@ mod tests {
         assert!(b.tenant_weights.is_empty(), "tenant frontend defaults off");
         assert_eq!(b.replicas, 1, "default is the single-replica stack");
         assert_eq!(b.rebalance_threshold, 0, "rebalancing defaults off");
+    }
+
+    #[test]
+    fn slo_policy_burn_is_budget_relative() {
+        let slo = SloPolicy { ttft_s: 1.0, tbt_s: 0.1, violation_budget: 0.1 };
+        assert_eq!(slo.burn(1.0), 0.0, "full attainment burns nothing");
+        assert!((slo.burn(0.9) - 1.0).abs() < 1e-12, "at-budget violations burn 1.0");
+        assert!((slo.burn(0.8) - 2.0).abs() < 1e-12, "double-budget violations burn 2.0");
+        let degenerate = SloPolicy { violation_budget: 0.0, ..slo };
+        assert_eq!(degenerate.burn(0.5), 0.0, "zero budget never divides by zero");
     }
 
     #[test]

@@ -377,6 +377,7 @@ pub fn run_synera<E: BatchEngine>(
             draft: chunk.tokens.clone(),
             dists: dists.clone(),
             is_first: cloud_len == 0,
+            ctx: Default::default(),
         };
         let up_bytes = msg.wire_bytes();
         rep.bytes_up += up_bytes as u64;
@@ -390,6 +391,7 @@ pub fn run_synera<E: BatchEngine>(
             draft: chunk.tokens.clone(),
             dists,
             greedy: params.greedy,
+            ctx: Default::default(),
         })?;
         // cost accounting (paper W): cloud-*generated/verified* tokens;
         // KV prefill of uncached context is charged like prompt prefill

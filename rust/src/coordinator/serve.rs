@@ -27,7 +27,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::cloud::scheduler::{CloudEvent, CloudRequest, Scheduler, SchedulerStats};
-use crate::config::Scenario;
+use crate::config::{Scenario, SloPolicy};
 use crate::device::codec::compress_dist;
 use crate::device::early_exit::SeqExitPolicy;
 use crate::device::offload::Selector;
@@ -37,8 +37,8 @@ use crate::model::cloud_engine::CloudEngine;
 use crate::model::device_engine::DeviceEngine;
 use crate::model::logits::argmax;
 use crate::net::link::SimLink;
-use crate::net::wire::{DownlinkMsg, UplinkMsg};
-use crate::obs::trace::{self, tenant_pid, TraceShared};
+use crate::net::wire::{DownlinkMsg, TraceContext, UplinkMsg};
+use crate::obs::trace::{self, tenant_pid, Ph, TraceShared, PID_CLOUD};
 use crate::profiling::{load_or_profile, OffloadProfile};
 use crate::runtime::Runtime;
 use crate::util::rng::Rng;
@@ -56,6 +56,9 @@ pub struct ServeConfig {
     /// Attached trace sink; a *wall-clock* sink fits this tier (real
     /// OS threads share the one clock). `None` = tracing off.
     pub trace: Option<TraceShared>,
+    /// Service-level objective shared with the fleet simulator
+    /// (`--slo-ttft`/`--slo-tbt` set both tiers identically).
+    pub slo: SloPolicy,
 }
 
 /// Wall-clock results of a serving run.
@@ -67,6 +70,15 @@ pub struct ServeReport {
     pub tokens_per_s: f64,
     pub e2e_latency: Summary,
     pub verify_rtt: Summary,
+    /// Wall-clock time to first committed token, per request.
+    pub ttft: Summary,
+    /// Fraction of completed requests with TTFT ≤ the SLO.
+    pub slo_ttft_frac: f64,
+    /// Fraction of TBT-eligible (≥2 token) requests within the SLO.
+    pub slo_tbt_frac: f64,
+    /// Whole-run burn rates ([`SloPolicy::burn`]; 1.0 = at budget).
+    pub ttft_burn: f64,
+    pub tbt_burn: f64,
     pub quality: f64,
     pub offload_rate: f64,
     /// Paged-KV swap traffic summed across cloud replicas (0/0 when
@@ -116,8 +128,12 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
                     0xC10D ^ (0x5EED ^ r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
                 };
                 let mut sched = Scheduler::with_policy(engine, seed, batch);
+                let trace_c = trace_r.clone();
                 sched.set_trace(trace_r, r as u32);
                 let mut replies: HashMap<u64, Sender<DownlinkMsg>> = HashMap::new();
+                // round index of each in-flight verify, for the
+                // `reply` instant that `synera inspect` keys on
+                let mut rounds: HashMap<u64, u32> = HashMap::new();
                 let mut open = true;
                 while open || !sched.is_idle() {
                     // drain incoming
@@ -125,6 +141,9 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
                         match rx_r.recv_timeout(Duration::from_micros(200)) {
                             Ok(ToCloud::Up(msg, reply)) => {
                                 replies.insert(msg.request_id, reply);
+                                if trace_c.is_some() {
+                                    rounds.insert(msg.request_id, msg.ctx.round);
+                                }
                                 let req = CloudRequest::Verify {
                                     request_id: msg.request_id,
                                     device_id: msg.device_id,
@@ -132,6 +151,10 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
                                     draft: msg.draft,
                                     dists: msg.dists,
                                     greedy,
+                                    // the wire context crosses the thread
+                                    // boundary with the message, so cloud
+                                    // spans stay attributable to the round
+                                    ctx: msg.ctx,
                                 };
                                 if n_tenants > 0 {
                                     // devices map onto tenants round-robin
@@ -155,6 +178,19 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
                     let (events, _) = sched.tick()?;
                     for e in events {
                         if let CloudEvent::VerifyDone { request_id, outcome, .. } = e {
+                            if trace_c.is_some() {
+                                // wall traces carry no modelled service/
+                                // downlink split: the real service time is
+                                // already the admit→verify_commit gap, and
+                                // the downlink sleep lands in the residual
+                                let round =
+                                    rounds.remove(&request_id).map_or(-1.0, |x| x as f64);
+                                let args =
+                                    vec![("round", round), ("service", 0.0), ("dl", 0.0)];
+                                trace::with(&trace_c, |s| {
+                                    s.instant(PID_CLOUD, r as u32, "reply", request_id, args)
+                                });
+                            }
                             if let Some(ch) = replies.get(&request_id) {
                                 let _ = ch.send(DownlinkMsg {
                                     request_id,
@@ -247,6 +283,15 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
         swap_outs += s.swap_outs;
     }
 
+    let frac_within = |xs: &[f64], th: f64| {
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs.iter().filter(|&&v| v <= th).count() as f64 / xs.len() as f64
+        }
+    };
+    let slo_ttft_frac = frac_within(&all.ttfts, cfg.slo.ttft_s);
+    let slo_tbt_frac = frac_within(&all.tbts, cfg.slo.tbt_s);
     Ok(ServeReport {
         completed: all.completed,
         wall_s: wall,
@@ -254,6 +299,11 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
         tokens_per_s: all.tokens as f64 / wall,
         e2e_latency: Summary::of(&all.e2e),
         verify_rtt: Summary::of(&all.rtts),
+        ttft: Summary::of(&all.ttfts),
+        slo_ttft_frac,
+        slo_tbt_frac,
+        ttft_burn: if all.ttfts.is_empty() { 0.0 } else { cfg.slo.burn(slo_ttft_frac) },
+        tbt_burn: if all.tbts.is_empty() { 0.0 } else { cfg.slo.burn(slo_tbt_frac) },
         quality: if all.completed > 0 { all.quality / all.completed as f64 } else { 0.0 },
         offload_rate: if all.chunks > 0 { all.offloads as f64 / all.chunks as f64 } else { 0.0 },
         swap_ins,
@@ -269,6 +319,9 @@ struct DeviceStats {
     quality: f64,
     e2e: Vec<f64>,
     rtts: Vec<f64>,
+    ttfts: Vec<f64>,
+    /// Per-request mean time between tokens (≥2-token requests only).
+    tbts: Vec<f64>,
     offloads: usize,
     chunks: usize,
 }
@@ -280,6 +333,8 @@ impl DeviceStats {
         self.quality += o.quality;
         self.e2e.extend(o.e2e);
         self.rtts.extend(o.rtts);
+        self.ttfts.extend(o.ttfts);
+        self.tbts.extend(o.tbts);
         self.offloads += o.offloads;
         self.chunks += o.chunks;
     }
@@ -311,7 +366,8 @@ fn device_worker(
         profile.i_th_for_budget(params.budget),
         params.clone(),
     );
-    let seq_exit = SeqExitPolicy::new(params.seq_exit_frac, params.max_new_tokens, params.early_exit);
+    let seq_exit =
+        SeqExitPolicy::new(params.seq_exit_frac, params.max_new_tokens, params.early_exit);
     let mut rng = Rng::new(0xD0 + device_id as u64);
     let exit_th = params.exit_threshold as f32;
     let mut stats = DeviceStats::default();
@@ -331,6 +387,9 @@ fn device_worker(
         let (mut sess, mut cur) = dev.prefill(&sample.prompt)?;
         let mut cloud_len = 0usize;
         let mut generated: Vec<u32> = Vec::new();
+        let mut round: u32 = 0;
+        let mut t_first: Option<Instant> = None;
+        let mut t_last = t_req;
 
         'gen: while generated.len() < params.max_new_tokens {
             let start_len = sess.len;
@@ -362,12 +421,17 @@ fn device_worker(
                     trace::with(&cfg.trace, |s| s.instant(pid, device_id, "local", req_id, args));
                 }
                 generated.extend_from_slice(&draft);
+                let now = Instant::now();
+                t_first.get_or_insert(now);
+                t_last = now;
                 if hit_eos {
                     break;
                 }
                 continue;
             }
             stats.offloads += 1;
+            let ctx = TraceContext::for_round(req_id, round);
+            round = round.wrapping_add(1);
             if cfg.trace.is_some() {
                 let args = vec![
                     ("gamma", draft.len() as f64),
@@ -375,10 +439,16 @@ fn device_worker(
                     ("p_imp", dec.p_imp),
                     ("mean_conf", dec.mean_conf),
                     ("mean_imp", dec.mean_imp),
+                    ("round", ctx.round as f64),
                 ];
                 trace::with(&cfg.trace, |s| {
                     s.instant(pid, device_id, "offload", req_id, args);
                     s.begin(pid, device_id, "round", req_id);
+                    s.flow(pid, device_id, "offload", Ph::FlowStart, ctx.parent_span);
+                    // the uplink span covers the simulated link delay;
+                    // `synera inspect` reads it as this round's uplink
+                    // network share
+                    s.begin(pid, device_id, "uplink", req_id);
                 });
             }
 
@@ -387,6 +457,7 @@ fn device_worker(
             let msg = UplinkMsg {
                 request_id: req_id,
                 device_id,
+                ctx,
                 uncached: uncached.clone(),
                 draft: draft.clone(),
                 dists,
@@ -394,6 +465,9 @@ fn device_worker(
             };
             let up_delay = link.uplink_s(msg.wire_bytes());
             std::thread::sleep(Duration::from_secs_f64(up_delay));
+            if cfg.trace.is_some() {
+                trace::with(&cfg.trace, |s| s.end(pid, device_id, "uplink", req_id));
+            }
             let (reply_tx, reply_rx) = channel();
             let t_sent = Instant::now();
             tx.send(ToCloud::Up(msg, reply_tx)).map_err(|_| anyhow!("cloud gone"))?;
@@ -458,14 +532,20 @@ fn device_worker(
             let accepted = (reply.accepted as usize).min(draft.len());
             cloud_len = start_len + accepted;
             if cfg.trace.is_some() {
-                let args = vec![("accepted", accepted as f64)];
+                let args = vec![("accepted", accepted as f64), ("round", ctx.round as f64)];
                 trace::with(&cfg.trace, |s| {
+                    // the arrow head binds (`bp:"e"`) to the still-open
+                    // round slice
+                    s.flow(pid, device_id, "offload", Ph::FlowEnd, ctx.parent_span);
                     s.end(pid, device_id, "round", req_id);
                     s.instant(pid, device_id, "device_commit", req_id, args);
                 });
             }
             if hit_eos && accepted == draft.len() {
                 generated.extend_from_slice(&draft);
+                let now = Instant::now();
+                t_first.get_or_insert(now);
+                t_last = now;
                 break 'gen; // verifier agreed with the drafted EOS
             }
             let mut adopted = false;
@@ -483,10 +563,20 @@ fn device_worker(
                 sess.rewind(start_len + accepted);
                 generated.extend(draft.iter().take(accepted));
                 if reply.next_token == EOS || generated.len() >= params.max_new_tokens {
+                    if !generated.is_empty() {
+                        let now = Instant::now();
+                        t_first.get_or_insert(now);
+                        t_last = now;
+                    }
                     break 'gen;
                 }
                 cur = dev.step(&mut sess, reply.next_token, params.early_exit, exit_th)?;
                 generated.push(reply.next_token);
+            }
+            if !generated.is_empty() {
+                let now = Instant::now();
+                t_first.get_or_insert(now);
+                t_last = now;
             }
         }
 
@@ -499,6 +589,13 @@ fn device_worker(
         stats.tokens += generated.len();
         stats.quality += crate::metrics::quality::score_sample(&sample, &generated);
         stats.e2e.push(t_req.elapsed().as_secs_f64());
+        if let Some(tf) = t_first {
+            stats.ttfts.push(tf.duration_since(t_req).as_secs_f64());
+            if generated.len() >= 2 {
+                let span = t_last.duration_since(tf).as_secs_f64();
+                stats.tbts.push(span / (generated.len() - 1) as f64);
+            }
+        }
         stats.completed += 1;
     }
     Ok(stats)

@@ -8,6 +8,7 @@
 //! synera profile   [--slm s1b --llm l13b] [--refresh]
 //! synera serve     --devices 4 --requests 8 --task xsum
 //!                  [--tenants 2 --tenant-weights 1,2] [--replicas 2]
+//!                  [--slo-ttft 2.0 --slo-tbt 0.25 --slo-budget 0.1]
 //!                  [--trace serve.trace.json]  (wall-clock Chrome trace)
 //! synera fleet     --devices 1024 --duration 60 [--rate 256]
 //!                  [--tenants 4] [--tenant-weights 1,1,2,4]
@@ -21,7 +22,12 @@
 //!                                     over the mock engine by default)
 //!                  [--trace fleet.trace.json]  (virtual-time Chrome
 //!                                     trace, loadable in Perfetto)
+//!                  [--slo-ttft 2.0 --slo-tbt 0.25 --slo-budget 0.1]
 //!                  [--metrics fleet.jsonl [--metrics-cadence 1.0]]
+//! synera inspect   fleet.trace.json [--out breakdown.jsonl]
+//!                  (critical-path analysis of a --trace file:
+//!                   per-tenant table on stderr, per-request JSONL
+//!                   breakdowns to --out or stdout)
 //! synera info
 //! ```
 //!
@@ -33,10 +39,11 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 use synera::baselines::ALL_METHODS;
-use synera::config::{BatchPolicy, Scenario};
+use synera::config::{BatchPolicy, Scenario, SloPolicy};
 use synera::coordinator::eval::{eval_method, EvalOptions};
 use synera::coordinator::pipeline::Method;
 use synera::coordinator::serve::{run_threaded, ServeConfig};
+use synera::obs::analyze;
 use synera::obs::export::{write_chrome_trace, write_metrics_jsonl};
 use synera::obs::registry;
 use synera::obs::trace::{self, TraceShared, TraceSink};
@@ -108,10 +115,11 @@ fn run() -> Result<()> {
         Some("profile") => profile(&args),
         Some("serve") => serve(&args),
         Some("fleet") => fleet(&args),
+        Some("inspect") => inspect(&args),
         _ => {
             synera::log!(
                 Error,
-                "usage: synera <info|generate|eval|profile|serve|fleet> [--opts]\n\
+                "usage: synera <info|generate|eval|profile|serve|fleet|inspect> [--opts]\n\
                  see rust/src/main.rs header for examples"
             );
             Ok(())
@@ -260,6 +268,17 @@ fn profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--slo-ttft` / `--slo-tbt` / `--slo-budget`: one policy shared by
+/// `serve` and `fleet` so attainment and burn read identically.
+fn slo_from(args: &Args) -> Result<SloPolicy> {
+    let base = SloPolicy::default();
+    Ok(SloPolicy {
+        ttft_s: args.get_f64("slo-ttft", base.ttft_s)?,
+        tbt_s: args.get_f64("slo-tbt", base.tbt_s)?,
+        violation_budget: args.get_f64("slo-budget", base.violation_budget)?,
+    })
+}
+
 fn serve(args: &Args) -> Result<()> {
     let scen = scenario_from(args)?;
     let task = Task::from_name(&args.get_or("task", "xsum")).context("bad --task")?;
@@ -269,6 +288,7 @@ fn serve(args: &Args) -> Result<()> {
         task,
         n_devices: args.get_usize("devices", 4)?,
         requests_per_device: args.get_usize("requests", 4)?,
+        slo: slo_from(args)?,
         artifacts: artifacts_dir(),
         // real OS threads share one wall clock
         trace: trace_path.as_ref().map(|_| trace::shared(TraceSink::wall_time(TRACE_CAP))),
@@ -296,6 +316,16 @@ fn serve(args: &Args) -> Result<()> {
         rep.verify_rtt.p95 * 1e3,
         rep.quality,
         rep.offload_rate,
+    );
+    synera::log!(
+        Info,
+        "ttft p50={:.0}ms p95={:.0}ms  slo: ttft {:.1}% (burn {:.2}) tbt {:.1}% (burn {:.2})",
+        rep.ttft.p50 * 1e3,
+        rep.ttft.p95 * 1e3,
+        rep.slo_ttft_frac * 100.0,
+        rep.ttft_burn,
+        rep.slo_tbt_frac * 100.0,
+        rep.tbt_burn,
     );
     synera::log!(
         Info,
@@ -358,8 +388,7 @@ fn fleet(args: &Args) -> Result<()> {
         cloud_iter_s: args.get_f64("cloud-iter-s", base.cloud_iter_s)?,
         cloud_row_s: args.get_f64("cloud-row-s", base.cloud_row_s)?,
         migrate_gbps: args.get_f64("migrate-gbps", base.migrate_gbps)?,
-        slo_ttft_s: args.get_f64("slo-ttft", base.slo_ttft_s)?,
-        slo_tbt_s: args.get_f64("slo-tbt", base.slo_tbt_s)?,
+        slo: slo_from(args)?,
         // keep the cost model's packing factor in step with the engine
         // actually selected on the --real-engine path
         cloud_model: args.get_or("llm", &base.cloud_model),
@@ -433,14 +462,14 @@ fn fleet(args: &Args) -> Result<()> {
     );
     synera::log!(
         Info,
-        "{:<7} {:>6} {:>5} {:>5} | {:>9} {:>9} {:>9} | {:>9} {:>9} | {:>7} {:>7} | {:>10} {:>10}",
+        "{:<7} {:>6} {:>5} {:>5} | {:>9} {:>9} {:>9} | {:>9} {:>9} | {:>7} {:>7} {:>6} {:>6} | {:>10} {:>10}",
         "tenant", "weight", "req", "done", "ttft p50", "ttft p95", "ttft p99", "tbt p50",
-        "tbt p95", "slo-ttft", "slo-tbt", "rows", "energy",
+        "tbt p95", "slo-ttft", "slo-tbt", "burn-t", "burn-b", "rows", "energy",
     );
     for t in &rep.tenants {
         synera::log!(
             Info,
-            "{:<7} {:>6.1} {:>5} {:>5} | {:>8.0}ms {:>8.0}ms {:>8.0}ms | {:>8.1}ms {:>8.1}ms | {:>6.1}% {:>6.1}% | {:>10} {:>9.1}J",
+            "{:<7} {:>6.1} {:>5} {:>5} | {:>8.0}ms {:>8.0}ms {:>8.0}ms | {:>8.1}ms {:>8.1}ms | {:>6.1}% {:>6.1}% {:>6.2} {:>6.2} | {:>10} {:>9.1}J",
             t.tenant,
             t.weight,
             t.requests,
@@ -452,6 +481,8 @@ fn fleet(args: &Args) -> Result<()> {
             t.tbt.p95 * 1e3,
             t.slo_ttft_frac * 100.0,
             t.slo_tbt_frac * 100.0,
+            t.ttft_burn,
+            t.tbt_burn,
             t.rows_executed,
             t.energy_j,
         );
@@ -463,6 +494,38 @@ fn fleet(args: &Args) -> Result<()> {
         let Ok(r) = reg.lock() else { bail!("metrics registry poisoned") };
         write_metrics_jsonl(path, &r)?;
         synera::log!(Info, "metrics: {} samples -> {}", r.samples.len(), path.display());
+    }
+    Ok(())
+}
+
+/// Critical-path analysis of a Chrome trace written by `--trace`
+/// (fleet or serve). Table to stderr (human); per-request JSONL
+/// breakdowns to `--out` or stdout (machine) — same stream contract
+/// as every other subcommand.
+fn inspect(args: &Args) -> Result<()> {
+    let path = args
+        .positionals
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("trace"))
+        .context("usage: synera inspect <trace.json> [--out breakdown.jsonl]")?;
+    let rep = analyze::analyze_file(path)?;
+    synera::log!(
+        Info,
+        "{path}: {} requests attributed, {} partial (incomplete event sets)",
+        rep.requests.len(),
+        rep.partial
+    );
+    for line in analyze::table_string(&rep).lines() {
+        synera::log!(Info, "{line}");
+    }
+    let jsonl = analyze::requests_jsonl_string(&rep);
+    match args.get("out") {
+        Some(out) => {
+            std::fs::write(out, &jsonl).with_context(|| format!("writing {out}"))?;
+            synera::log!(Info, "breakdowns: {} lines -> {out}", rep.requests.len());
+        }
+        None => print!("{jsonl}"),
     }
     Ok(())
 }

@@ -1,0 +1,507 @@
+//! Offline critical-path analysis of Chrome trace exports — the engine
+//! behind `synera inspect <trace.json>`.
+//!
+//! The analyzer reconstructs one timeline per request from the causal
+//! event stream ([`crate::obs::trace`], exported by
+//! [`crate::obs::export::chrome_trace_string`]) and attributes every
+//! second of request latency to exactly one of six components:
+//!
+//! * **device** — on-device drafting/prefill (time outside any offload
+//!   round),
+//! * **queue** — WFQ/admission wait on the cloud (`enqueue` → `admit`),
+//! * **paging** — KV swap work inside the round's cloud window
+//!   (`swap_in`/`swap_out` instants carry their wall seconds in an
+//!   `s` arg; a virtual-clock sim zeroes them like every other wall
+//!   duration),
+//! * **engine** — the remaining cloud window (`admit` →
+//!   `verify_commit` plus the modelled/measured service interval),
+//! * **network** — uplink span plus the reply's downlink seconds,
+//! * **stall** — the residual: device idle awaiting the verify while
+//!   no cloud phase ran for it (pipeline bubble).
+//!
+//! The decomposition is exact by construction: per round,
+//! `stall = rtt − uplink − queue − cloud_window − downlink`, and a
+//! negative residual (overlapped phases) is absorbed into `engine`, so
+//! `device + queue + paging + engine + network + stall` always equals
+//! the measured request-span latency to float rounding. In the
+//! perfect-pipeline fleet simulator the stall component is ~0 *by
+//! construction* — every cloud wait is accounted as queue/engine — so
+//! a nonzero stall in a wall-clock trace is a genuine scheduling
+//! bubble, not model noise.
+//!
+//! Requests whose events are incomplete (ring-buffer drops, a
+//! windowed `stop_s` run cutting replies off) are counted in
+//! [`InspectReport::partial`] and excluded from the breakdowns rather
+//! than silently mis-attributed.
+//!
+//! Everything is deterministic: events are keyed and sorted by
+//! `(start, request_id)`, output goes through
+//! [`crate::util::json::Json`], and same-seed sim traces produce
+//! byte-identical tables and JSONL.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context};
+
+use crate::obs::trace::PID_CLOUD;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Per-request latency attribution (all fields in seconds).
+#[derive(Debug, Clone)]
+pub struct RequestBreakdown {
+    pub request_id: u64,
+    pub tenant: usize,
+    pub device: u32,
+    /// Request-span start (trace clock).
+    pub t_start_s: f64,
+    /// Request-span duration; equals the component sum to rounding.
+    pub latency_s: f64,
+    /// Offload rounds the request performed (0 = fully local).
+    pub rounds: usize,
+    pub device_s: f64,
+    pub queue_s: f64,
+    pub paging_s: f64,
+    pub engine_s: f64,
+    pub network_s: f64,
+    pub stall_s: f64,
+}
+
+impl RequestBreakdown {
+    /// Sum of the six attribution components.
+    pub fn component_sum_s(&self) -> f64 {
+        let parts = [
+            self.device_s,
+            self.queue_s,
+            self.paging_s,
+            self.engine_s,
+            self.network_s,
+            self.stall_s,
+        ];
+        parts.iter().sum()
+    }
+}
+
+/// Per-tenant totals over complete requests.
+#[derive(Debug, Clone, Default)]
+pub struct TenantBreakdown {
+    pub tenant: usize,
+    pub requests: usize,
+    pub latency_s: f64,
+    pub device_s: f64,
+    pub queue_s: f64,
+    pub paging_s: f64,
+    pub engine_s: f64,
+    pub network_s: f64,
+    pub stall_s: f64,
+}
+
+/// The full analysis of one trace file.
+#[derive(Debug, Clone, Default)]
+pub struct InspectReport {
+    /// Complete requests, sorted by `(t_start_s, request_id)`.
+    pub requests: Vec<RequestBreakdown>,
+    /// Per-tenant totals, sorted by tenant id.
+    pub tenants: Vec<TenantBreakdown>,
+    /// Requests with missing spans/instants (dropped events or a
+    /// windowed run): counted, never silently folded in.
+    pub partial: usize,
+}
+
+/// Device-track state gathered for one request id.
+#[derive(Default)]
+struct ReqState {
+    tenant: usize,
+    device: u32,
+    tb: Option<f64>,
+    te: Option<f64>,
+    round_b: Vec<f64>,
+    round_e: Vec<f64>,
+    up_b: Vec<f64>,
+    up_e: Vec<f64>,
+}
+
+/// Cloud-track instants for one `(request_id, round)`.
+#[derive(Default)]
+struct CloudRound {
+    replica: Option<u32>,
+    enqueue: Option<f64>,
+    admit: Option<f64>,
+    commit: Option<f64>,
+    service: Option<f64>,
+    dl: Option<f64>,
+}
+
+fn f(e: &Json, key: &str) -> Option<f64> {
+    e.opt(key).and_then(|v| v.as_f64().ok())
+}
+
+fn arg(e: &Json, key: &str) -> Option<f64> {
+    e.opt("args").and_then(|a| a.opt(key)).and_then(|v| v.as_f64().ok())
+}
+
+/// Analyze a Chrome trace-event JSON document (the string form of
+/// [`crate::obs::export::chrome_trace_string`]).
+pub fn analyze_chrome_trace(text: &str) -> Result<InspectReport> {
+    let doc = Json::parse(text).context("trace file is not valid JSON")?;
+    let events = doc
+        .get("traceEvents")
+        .context("not a Chrome trace: missing traceEvents")?
+        .as_arr()?;
+
+    let mut reqs: BTreeMap<u64, ReqState> = BTreeMap::new();
+    let mut cloud: BTreeMap<(u64, u32), CloudRound> = BTreeMap::new();
+    // per-replica swap instants: (ts_s, seconds of swap work)
+    let mut swaps: BTreeMap<u32, Vec<(f64, f64)>> = BTreeMap::new();
+
+    for e in events {
+        let Some(ph) = e.opt("ph").and_then(|p| p.as_str().ok()) else { continue };
+        let Some(name) = e.opt("name").and_then(|n| n.as_str().ok()) else { continue };
+        let (Some(pid), Some(tid)) = (f(e, "pid"), f(e, "tid")) else { continue };
+        let (pid, tid) = (pid as u32, tid as u32);
+        let ts = f(e, "ts").unwrap_or(0.0) / 1e6; // µs → s
+        let id = f(e, "id").unwrap_or(0.0) as u64;
+
+        if pid >= 2 {
+            // device tracks (one process per tenant, one thread per
+            // device). Only span B/E events key a request: instants,
+            // metadata, and flow arrows (whose ids are synthetic flow
+            // ids, not request ids) must not create entries.
+            if ph != "B" && ph != "E" {
+                continue;
+            }
+            let slot = match name {
+                "request" | "round" | "uplink" => name,
+                _ => continue,
+            };
+            let r = reqs.entry(id).or_default();
+            r.tenant = (pid - 2) as usize;
+            r.device = tid;
+            match (slot, ph) {
+                ("request", "B") => r.tb = Some(ts),
+                ("request", "E") => r.te = Some(ts),
+                ("round", "B") => r.round_b.push(ts),
+                ("round", "E") => r.round_e.push(ts),
+                ("uplink", "B") => r.up_b.push(ts),
+                ("uplink", "E") => r.up_e.push(ts),
+                _ => {}
+            }
+            continue;
+        }
+        if pid == PID_CLOUD && ph == "i" {
+            match name {
+                "swap_in" | "swap_out" => {
+                    if let Some(s) = arg(e, "s") {
+                        swaps.entry(tid).or_default().push((ts, s));
+                    }
+                }
+                "enqueue" | "admit" | "verify_commit" | "reply" => {
+                    // only instants stamped with a causal round join a
+                    // request timeline (Release traffic has none)
+                    let Some(round) = arg(e, "round") else { continue };
+                    if round < 0.0 {
+                        continue;
+                    }
+                    let c = cloud.entry((id, round as u32)).or_default();
+                    c.replica = Some(tid);
+                    match name {
+                        "enqueue" => c.enqueue = Some(ts),
+                        "admit" => c.admit = Some(ts),
+                        "verify_commit" => c.commit = Some(ts),
+                        "reply" => {
+                            c.service = arg(e, "service");
+                            c.dl = arg(e, "dl");
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+                _ => {}
+            }
+        }
+        // router placement instants (pid 0) carry no latency: skipped
+    }
+
+    let mut out = InspectReport::default();
+    for (&id, r) in &reqs {
+        match breakdown_for(id, r, &cloud, &swaps) {
+            Some(b) => out.requests.push(b),
+            None => out.partial += 1,
+        }
+    }
+    // deterministic report order: by request start, then id
+    out.requests.sort_by(|a, b| {
+        a.t_start_s
+            .partial_cmp(&b.t_start_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.request_id.cmp(&b.request_id))
+    });
+
+    let mut tenants: BTreeMap<usize, TenantBreakdown> = BTreeMap::new();
+    for b in &out.requests {
+        let t = tenants.entry(b.tenant).or_insert_with(|| TenantBreakdown {
+            tenant: b.tenant,
+            ..TenantBreakdown::default()
+        });
+        t.requests += 1;
+        t.latency_s += b.latency_s;
+        t.device_s += b.device_s;
+        t.queue_s += b.queue_s;
+        t.paging_s += b.paging_s;
+        t.engine_s += b.engine_s;
+        t.network_s += b.network_s;
+        t.stall_s += b.stall_s;
+    }
+    out.tenants = tenants.into_values().collect();
+    Ok(out)
+}
+
+/// Attribute one request, or `None` if its event set is incomplete.
+fn breakdown_for(
+    id: u64,
+    r: &ReqState,
+    cloud: &BTreeMap<(u64, u32), CloudRound>,
+    swaps: &BTreeMap<u32, Vec<(f64, f64)>>,
+) -> Option<RequestBreakdown> {
+    let (tb, te) = (r.tb?, r.te?);
+    let n_rounds = r.round_b.len();
+    if r.round_e.len() != n_rounds || r.up_b.len() != n_rounds || r.up_e.len() != n_rounds {
+        return None; // a round or uplink span never closed
+    }
+    let latency = te - tb;
+    let mut b = RequestBreakdown {
+        request_id: id,
+        tenant: r.tenant,
+        device: r.device,
+        t_start_s: tb,
+        latency_s: latency,
+        rounds: n_rounds,
+        device_s: 0.0,
+        queue_s: 0.0,
+        paging_s: 0.0,
+        engine_s: 0.0,
+        network_s: 0.0,
+        stall_s: 0.0,
+    };
+    let mut rtt_total = 0.0;
+    for k in 0..n_rounds {
+        let (rb, re) = (r.round_b[k], r.round_e[k]);
+        let rtt = re - rb;
+        rtt_total += rtt;
+        let up = r.up_e[k] - r.up_b[k];
+        let c = cloud.get(&(id, k as u32))?;
+        let (eq, ta, tv) = (c.enqueue?, c.admit?, c.commit?);
+        let (service, dl) = (c.service?, c.dl?);
+        let queue = (ta - eq).max(0.0);
+        let cloud_w = (tv - ta).max(0.0) + service;
+        // swap work inside this round's cloud window, on its replica
+        let mut paging = 0.0;
+        if let Some(sw) = c.replica.and_then(|rep| swaps.get(&rep)) {
+            let hi = tv + service;
+            for &(ts, s) in sw {
+                if ts >= ta && ts <= hi {
+                    paging += s;
+                }
+            }
+        }
+        let mut engine = cloud_w - paging;
+        if engine < 0.0 {
+            // wall swap seconds can exceed the bracketing instants;
+            // paging then owns the whole window
+            paging = cloud_w;
+            engine = 0.0;
+        }
+        let mut stall = rtt - up - queue - cloud_w - dl;
+        if stall < 0.0 {
+            // overlapped phases (e.g. PI hiding part of the window):
+            // absorb into engine so the component sum stays exact
+            engine += stall;
+            stall = 0.0;
+            if engine < 0.0 {
+                b.queue_s += engine;
+                engine = 0.0;
+            }
+        }
+        b.queue_s += queue;
+        b.paging_s += paging;
+        b.engine_s += engine;
+        b.network_s += up + dl;
+        b.stall_s += stall;
+    }
+    b.device_s = latency - rtt_total;
+    Some(b)
+}
+
+/// The per-tenant critical-path table as deterministic text.
+pub fn table_string(rep: &InspectReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<7} {:>6} {:>11} | {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}\n",
+        "tenant", "reqs", "latency", "device", "queue", "paging", "engine", "network", "stall",
+    ));
+    let pct = |part: f64, whole: f64| if whole > 0.0 { 100.0 * part / whole } else { 0.0 };
+    for t in &rep.tenants {
+        out.push_str(&format!(
+            "{:<7} {:>6} {:>10.3}s | {:>8.1}% {:>8.1}% {:>8.1}% {:>8.1}% {:>8.1}% {:>8.1}%\n",
+            t.tenant,
+            t.requests,
+            t.latency_s,
+            pct(t.device_s, t.latency_s),
+            pct(t.queue_s, t.latency_s),
+            pct(t.paging_s, t.latency_s),
+            pct(t.engine_s, t.latency_s),
+            pct(t.network_s, t.latency_s),
+            pct(t.stall_s, t.latency_s),
+        ));
+    }
+    if rep.partial > 0 {
+        out.push_str(&format!("({} partial requests excluded)\n", rep.partial));
+    }
+    out
+}
+
+/// One JSON object per complete request (keys in lexicographic order,
+/// so same-seed traces inspect to byte-identical JSONL).
+pub fn requests_jsonl_string(rep: &InspectReport) -> String {
+    let mut out = String::new();
+    for b in &rep.requests {
+        let line = Json::obj(vec![
+            ("request_id", Json::num(b.request_id as f64)),
+            ("tenant", Json::num(b.tenant as f64)),
+            ("device", Json::num(b.device)),
+            ("t_start_s", Json::num(b.t_start_s)),
+            ("latency_s", Json::num(b.latency_s)),
+            ("rounds", Json::num(b.rounds as f64)),
+            ("device_s", Json::num(b.device_s)),
+            ("queue_s", Json::num(b.queue_s)),
+            ("paging_s", Json::num(b.paging_s)),
+            ("engine_s", Json::num(b.engine_s)),
+            ("network_s", Json::num(b.network_s)),
+            ("stall_s", Json::num(b.stall_s)),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Analyze a trace file on disk.
+pub fn analyze_file(path: impl AsRef<std::path::Path>) -> Result<InspectReport> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    if text.trim().is_empty() {
+        bail!("empty trace file {}", path.as_ref().display());
+    }
+    analyze_chrome_trace(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::export::chrome_trace_string;
+    use crate::obs::trace::{TraceSink, PID_CLOUD};
+
+    /// One hand-crafted request: arrive 0.0, round with 0.1s uplink,
+    /// 0.2s queue, 0.3s engine window + 0.25s service, 0.05s downlink,
+    /// 0.1s stall, finishing at 2.0 → device time fills the rest.
+    fn craft() -> TraceSink {
+        let mut s = TraceSink::virtual_time(256);
+        let (pid, dev, id) = (2, 0, 42);
+        s.set_now(0.0);
+        s.begin(pid, dev, "request", id);
+        s.set_now(0.5); // 0.5 s of drafting
+        s.instant(pid, dev, "offload", id, vec![("round", 0.0)]);
+        s.begin(pid, dev, "round", id);
+        s.begin(pid, dev, "uplink", id);
+        s.set_now(0.6); // 0.1 s uplink
+        s.end(pid, dev, "uplink", id);
+        s.instant(PID_CLOUD, 0, "enqueue", id, vec![("cost", 4.0), ("round", 0.0)]);
+        s.set_now(0.8); // 0.2 s queue wait
+        s.instant(PID_CLOUD, 0, "admit", id, vec![("round", 0.0)]);
+        s.instant(PID_CLOUD, 0, "swap_in", id, vec![("rows", 8.0), ("bytes", 64.0), ("s", 0.04)]);
+        s.set_now(1.1); // 0.3 s to the commit tick
+        s.instant(PID_CLOUD, 0, "verify_commit", id, vec![("accepted", 3.0), ("round", 0.0)]);
+        s.instant(
+            PID_CLOUD,
+            0,
+            "reply",
+            id,
+            vec![("round", 0.0), ("service", 0.25), ("dl", 0.05)],
+        );
+        s.set_now(1.5); // reply lands 0.1 s later than accounted: stall
+        s.end(pid, dev, "round", id);
+        s.instant(pid, dev, "device_commit", id, vec![("accepted", 3.0), ("round", 0.0)]);
+        s.set_now(2.0); // 0.5 s more drafting
+        s.end(pid, dev, "request", id);
+        s
+    }
+
+    #[test]
+    fn hand_crafted_trace_attributes_exactly() {
+        let rep = analyze_chrome_trace(&chrome_trace_string(&craft())).unwrap();
+        assert_eq!(rep.partial, 0);
+        assert_eq!(rep.requests.len(), 1);
+        let b = &rep.requests[0];
+        let eps = 1e-9;
+        assert!((b.latency_s - 2.0).abs() < eps);
+        assert_eq!(b.rounds, 1);
+        assert!((b.network_s - 0.15).abs() < eps, "uplink 0.1 + dl 0.05: {}", b.network_s);
+        assert!((b.queue_s - 0.2).abs() < eps, "queue: {}", b.queue_s);
+        assert!((b.paging_s - 0.04).abs() < eps, "paging: {}", b.paging_s);
+        // cloud window 0.3 + 0.25 service, minus 0.04 swap
+        assert!((b.engine_s - 0.51).abs() < eps, "engine: {}", b.engine_s);
+        // round rtt 1.0 − 0.1 up − 0.2 queue − 0.55 window − 0.05 dl
+        assert!((b.stall_s - 0.1).abs() < eps, "stall: {}", b.stall_s);
+        assert!((b.device_s - 1.0).abs() < eps, "device: {}", b.device_s);
+        assert!((b.component_sum_s() - b.latency_s).abs() < eps);
+        assert_eq!(rep.tenants.len(), 1);
+        assert_eq!(rep.tenants[0].requests, 1);
+    }
+
+    #[test]
+    fn incomplete_requests_count_as_partial() {
+        let mut s = craft();
+        // a second request whose reply never arrived (windowed run)
+        s.set_now(3.0);
+        s.begin(2, 1, "request", 77);
+        s.instant(2, 1, "offload", 77, vec![("round", 0.0)]);
+        s.begin(2, 1, "round", 77);
+        s.begin(2, 1, "uplink", 77);
+        let rep = analyze_chrome_trace(&chrome_trace_string(&s)).unwrap();
+        assert_eq!(rep.requests.len(), 1, "complete request still attributed");
+        assert_eq!(rep.partial, 1);
+        assert!(table_string(&rep).contains("1 partial"), "partial surfaced in the table");
+    }
+
+    #[test]
+    fn local_only_requests_are_pure_device_time() {
+        let mut s = TraceSink::virtual_time(64);
+        s.set_now(1.0);
+        s.begin(3, 2, "request", 5);
+        s.instant(3, 2, "local", 5, vec![("gamma", 4.0)]);
+        s.set_now(1.75);
+        s.end(3, 2, "request", 5);
+        let rep = analyze_chrome_trace(&chrome_trace_string(&s)).unwrap();
+        let b = &rep.requests[0];
+        assert_eq!(b.rounds, 0);
+        assert_eq!(b.tenant, 1, "pid 3 → tenant 1");
+        assert!((b.device_s - 0.75).abs() < 1e-9);
+        assert_eq!(b.component_sum_s(), b.latency_s);
+    }
+
+    #[test]
+    fn inspect_output_is_deterministic() {
+        let a = analyze_chrome_trace(&chrome_trace_string(&craft())).unwrap();
+        let b = analyze_chrome_trace(&chrome_trace_string(&craft())).unwrap();
+        assert_eq!(table_string(&a), table_string(&b));
+        assert_eq!(requests_jsonl_string(&a), requests_jsonl_string(&b));
+        for l in requests_jsonl_string(&a).lines() {
+            Json::parse(l).expect("jsonl line parses");
+        }
+    }
+
+    #[test]
+    fn rejects_non_trace_input() {
+        assert!(analyze_chrome_trace("not json").is_err());
+        assert!(analyze_chrome_trace("{\"foo\": 1}").is_err());
+    }
+}

@@ -81,6 +81,10 @@ fn event_json(e: &TraceEvent) -> Json {
         // process-scoped instants render as full-height markers
         fields.push(("s", Json::str("t")));
     }
+    if e.ph == Ph::FlowEnd {
+        // bind the arrow head to the enclosing slice, not the next one
+        fields.push(("bp", Json::str("e")));
+    }
     if e.id != 0 {
         fields.push(("id", Json::num(e.id as f64)));
     }
@@ -108,11 +112,43 @@ pub fn chrome_trace_string(sink: &TraceSink) -> String {
     for e in sink.events() {
         events.push(event_json(e));
     }
+    for e in drop_marker_events(sink) {
+        events.push(e);
+    }
     Json::obj(vec![
         ("traceEvents", Json::Arr(events)),
         ("displayTimeUnit", Json::str("ms")),
     ])
     .to_string()
+}
+
+/// Ring-wrap accounting (never silently truncate): when the sink
+/// dropped events, the export ends with a `trace.dropped` counter
+/// sample plus an instant so both Perfetto and offline consumers see
+/// the loss. Empty when nothing was dropped, keeping intact exports
+/// byte-identical to earlier schema versions.
+fn drop_marker_events(sink: &TraceSink) -> Vec<Json> {
+    let dropped = sink.dropped();
+    if dropped == 0 {
+        return Vec::new();
+    }
+    let ts = sink.events().last().map(|e| e.ts_s).unwrap_or(0.0) * 1e6;
+    let base = |ph: &'static str| {
+        vec![
+            ("ph", Json::str(ph)),
+            ("ts", Json::num(ts)),
+            ("pid", Json::num(PID_ROUTER)),
+            ("tid", Json::num(0)),
+            ("name", Json::str("trace.dropped")),
+            ("cat", Json::str("meta")),
+        ]
+    };
+    let mut counter = base("C");
+    counter.push(("args", Json::obj(vec![("value", Json::num(dropped as f64))])));
+    let mut instant = base("i");
+    instant.push(("s", Json::str("t")));
+    instant.push(("args", Json::obj(vec![("dropped", Json::num(dropped as f64))])));
+    vec![Json::obj(counter), Json::obj(instant)]
 }
 
 /// One JSON object per line per event, timestamps in seconds.
@@ -138,6 +174,14 @@ pub fn events_jsonl_string(sink: &TraceSink) -> String {
         out.push_str(&Json::obj(fields).to_string());
         out.push('\n');
     }
+    if sink.dropped() > 0 {
+        let line = Json::obj(vec![
+            ("name", Json::str("trace.dropped")),
+            ("value", Json::num(sink.dropped() as f64)),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
     out
 }
 
@@ -154,6 +198,13 @@ pub fn metrics_jsonl_string(reg: &Registry) -> String {
         out.push('\n');
     }
     for (name, h) in reg.hists() {
+        // full log2 bucket occupancy (not just the summary), so TBT
+        // distributions survive into offline analysis: [lo, count]
+        // pairs where lo is the bucket's lower bound in value units
+        let buckets: Vec<Json> = h
+            .nonzero_buckets()
+            .map(|(lo, count)| Json::Arr(vec![Json::num(lo), Json::num(count as f64)]))
+            .collect();
         let line = Json::obj(vec![
             ("hist", Json::Str(name.to_string())),
             ("n", Json::num(h.n as f64)),
@@ -161,6 +212,7 @@ pub fn metrics_jsonl_string(reg: &Registry) -> String {
             ("p50", h.quantile(0.5).map(Json::num).unwrap_or(Json::Null)),
             ("p95", h.quantile(0.95).map(Json::num).unwrap_or(Json::Null)),
             ("max", if h.n == 0 { Json::Null } else { Json::num(h.max) }),
+            ("buckets", Json::Arr(buckets)),
         ]);
         out.push_str(&line.to_string());
         out.push('\n');
@@ -234,5 +286,67 @@ mod tests {
         for l in lines {
             Json::parse(l).expect("line parses");
         }
+        // bucket occupancy survives into the export: one [lo, count]
+        // pair for the single recorded value
+        let hist = Json::parse(lines[1]).unwrap();
+        let buckets = hist.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), 1);
+        let pair = buckets[0].as_arr().unwrap();
+        let lo = pair[0].as_f64().unwrap();
+        assert!(lo <= 0.25 && 0.25 < 2.0 * lo, "0.25 in bucket [{lo}, {})", 2.0 * lo);
+        assert_eq!(pair[1].as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn ring_drops_surface_in_exports() {
+        let mut s = TraceSink::virtual_time(2);
+        s.set_now(1.0);
+        for i in 1..=5u64 {
+            s.instant(0, 0, "e", i, vec![]);
+        }
+        assert_eq!(s.dropped(), 3);
+        let doc = Json::parse(&chrome_trace_string(&s)).unwrap();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let dropped: Vec<&Json> = evs
+            .iter()
+            .filter(|e| matches!(e.opt("name"), Some(Json::Str(n)) if n == "trace.dropped"))
+            .collect();
+        assert_eq!(dropped.len(), 2, "counter + final instant");
+        let counter = dropped
+            .iter()
+            .find(|e| matches!(e.opt("ph"), Some(Json::Str(p)) if p == "C"))
+            .expect("counter present");
+        let v = counter.get("args").unwrap().get("value").unwrap().as_f64().unwrap();
+        assert_eq!(v, 3.0, "counter pins the drop count");
+        let jsonl = events_jsonl_string(&s);
+        let last = jsonl.lines().last().unwrap();
+        assert!(last.contains("trace.dropped") && last.contains("3"), "got: {last}");
+        // an intact sink stays marker-free (schema unchanged)
+        let mut ok = TraceSink::virtual_time(16);
+        ok.instant(0, 0, "e", 1, vec![]);
+        assert!(!chrome_trace_string(&ok).contains("trace.dropped"));
+        assert!(!events_jsonl_string(&ok).contains("trace.dropped"));
+    }
+
+    #[test]
+    fn flow_end_binds_to_enclosing_slice() {
+        let mut s = TraceSink::virtual_time(8);
+        s.set_now(0.25);
+        s.flow(2, 0, "offload", Ph::FlowStart, 0xAB);
+        s.flow(2, 0, "offload", Ph::FlowEnd, 0xAB);
+        let text = chrome_trace_string(&s);
+        let doc = Json::parse(&text).unwrap();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let f = evs
+            .iter()
+            .find(|e| matches!(e.opt("ph"), Some(Json::Str(p)) if p == "f"))
+            .expect("flow end exported");
+        assert!(matches!(f.opt("bp"), Some(Json::Str(b)) if b == "e"));
+        let s_ev = evs
+            .iter()
+            .find(|e| matches!(e.opt("ph"), Some(Json::Str(p)) if p == "s"))
+            .expect("flow start exported");
+        assert!(s_ev.opt("bp").is_none(), "bp only on the arrow head");
+        assert_eq!(s_ev.get("id").unwrap().as_f64().unwrap(), 0xAB as f64);
     }
 }

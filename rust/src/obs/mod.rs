@@ -18,6 +18,9 @@
 //!   captured by [`registry::sample_router`].
 //! * [`export`] — Chrome trace-event JSON and JSONL serializers over
 //!   [`crate::util::json::Json`] (deterministic bytes).
+//! * [`analyze`] — offline critical-path analysis of an exported
+//!   trace (`synera inspect`): per-request latency attributed to
+//!   device / queue / paging / engine / network / stall.
 //!
 //! ## Event schema
 //!
@@ -36,7 +39,19 @@
 //! | `swap_in` / `swap_out` | instant | cloud replica | paged-KV slot traffic |
 //! | `wfq-drain`, `paging`, `pack`, `engine`, `commit` | complete | cloud replica | per-tick scheduler phases |
 //! | `verify_commit` / `generated` | instant | cloud replica | verdict committed; generate finished |
+//! | `reply` | instant | cloud replica | verdict reply dispatched (args: `round`, `service`, `dl` seconds) |
 //! | `device_commit` | instant | device | verdict applied on-device (downlink end) |
+//! | `offload` | flow `s`/`f` | device | causal arrow: draft left the device / verdict landed |
+//! | `offload` | flow `t` | cloud replica | causal arrow step at `verify_commit` |
+//! | `trace.dropped` | instant + counter | router | ring-buffer overflow marker (drop count in args) |
+//!
+//! Verify-path cloud instants carry a `round` arg from the wire-level
+//! [`crate::net::wire::TraceContext`], joining them to the k-th
+//! `round` span of the originating request; `swap_in`/`swap_out`
+//! carry their wall seconds in an `s` arg (zero under a virtual
+//! clock). The SLO monitor ([`registry::SloMonitor`]) publishes
+//! `slo.ttft_attainment.<tenant>` / `slo.tbt_attainment.<tenant>` and
+//! the matching `slo.*_burn.<tenant>` burn-rate gauges each cadence.
 //!
 //! ## Perfetto how-to
 //!
@@ -56,6 +71,7 @@
 //! [`Level::Info`]; `--verbose` on the CLI raises it to
 //! [`Level::Debug`].
 
+pub mod analyze;
 pub mod export;
 pub mod registry;
 pub mod trace;

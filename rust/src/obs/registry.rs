@@ -72,6 +72,18 @@ impl Hist {
         }
     }
 
+    /// Occupied buckets as `(lower_bound, count)` pairs, ascending.
+    /// The lower bound is in value units (seconds for latency hists);
+    /// a bucket spans `[lo, 2·lo)`. This is what the metrics JSONL
+    /// exports so full distributions survive offline.
+    pub fn nonzero_buckets(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(i, &c)| ((HIST_MIN_EXP + i as f64).exp2(), c))
+    }
+
     /// Bucket-resolution quantile estimate (upper bound of the bucket
     /// holding the q-th value), `None` when empty.
     pub fn quantile(&self, q: f64) -> Option<f64> {
@@ -209,6 +221,124 @@ pub fn with<F: FnOnce(&mut Registry)>(registry: &Option<RegistryShared>, f: F) {
     }
 }
 
+// ----------------------------- SLO monitor ---------------------------------
+
+/// Per-tenant rolling window of SLO outcomes.
+#[derive(Debug, Clone, Copy, Default)]
+struct SloAcc {
+    // cumulative (whole run)
+    ttft_n: u64,
+    ttft_ok: u64,
+    tbt_n: u64,
+    tbt_ok: u64,
+    // current burn window (reset on every sample)
+    win_ttft_n: u64,
+    win_ttft_viol: u64,
+    win_tbt_n: u64,
+    win_tbt_viol: u64,
+}
+
+/// Per-tenant TTFT/TBT SLO attainment plus a rolling **burn rate**:
+/// the fraction of the violation budget consumed per sampling window
+/// (1.0 = violations arriving exactly at the budgeted rate, >1.0 =
+/// the error budget is burning down faster than allowed — the sensing
+/// half of the overload-survival control loop).
+///
+/// Drivers call [`SloMonitor::record_ttft`] / [`SloMonitor::record_tbt`]
+/// as requests finish and [`SloMonitor::sample`] on the registry
+/// cadence; sampling publishes the gauges and opens a new window.
+#[derive(Debug, Clone)]
+pub struct SloMonitor {
+    policy: crate::config::SloPolicy,
+    tenants: Vec<SloAcc>,
+}
+
+impl SloMonitor {
+    pub fn new(n_tenants: usize, policy: crate::config::SloPolicy) -> SloMonitor {
+        SloMonitor { policy, tenants: vec![SloAcc::default(); n_tenants.max(1)] }
+    }
+
+    pub fn policy(&self) -> &crate::config::SloPolicy {
+        &self.policy
+    }
+
+    fn acc(&mut self, tenant: usize) -> &mut SloAcc {
+        let last = self.tenants.len() - 1;
+        &mut self.tenants[tenant.min(last)]
+    }
+
+    /// Record one finished request's time-to-first-token.
+    pub fn record_ttft(&mut self, tenant: usize, ttft_s: f64) {
+        let ok = ttft_s <= self.policy.ttft_s;
+        let a = self.acc(tenant);
+        a.ttft_n += 1;
+        a.ttft_ok += ok as u64;
+        a.win_ttft_n += 1;
+        a.win_ttft_viol += !ok as u64;
+    }
+
+    /// Record one finished request's mean time-between-tokens.
+    pub fn record_tbt(&mut self, tenant: usize, tbt_s: f64) {
+        let ok = tbt_s <= self.policy.tbt_s;
+        let a = self.acc(tenant);
+        a.tbt_n += 1;
+        a.tbt_ok += ok as u64;
+        a.win_tbt_n += 1;
+        a.win_tbt_viol += !ok as u64;
+    }
+
+    /// Cumulative TTFT attainment ∈ [0,1] (0.0 before any completion,
+    /// matching the fleet report's convention).
+    pub fn ttft_attainment(&self, tenant: usize) -> f64 {
+        let a = &self.tenants[tenant.min(self.tenants.len() - 1)];
+        a.ttft_ok as f64 / a.ttft_n.max(1) as f64
+    }
+
+    /// Cumulative TBT attainment over TBT-eligible requests (≥2
+    /// tokens), 0.0 before any.
+    pub fn tbt_attainment(&self, tenant: usize) -> f64 {
+        let a = &self.tenants[tenant.min(self.tenants.len() - 1)];
+        a.tbt_ok as f64 / a.tbt_n.max(1) as f64
+    }
+
+    fn burn(policy: &crate::config::SloPolicy, viol: u64, n: u64) -> f64 {
+        if n == 0 || policy.violation_budget <= 0.0 {
+            return 0.0;
+        }
+        (viol as f64 / n as f64) / policy.violation_budget
+    }
+
+    /// Publish per-tenant gauges (`slo.ttft_attainment.<t>`,
+    /// `slo.tbt_attainment.<t>`, `slo.ttft_burn.<t>`,
+    /// `slo.tbt_burn.<t>`) and reset the burn window. Call on the
+    /// same cadence as [`Registry::snapshot`] so the burn window is
+    /// the sampling window.
+    pub fn sample(&mut self, reg: &mut Registry) {
+        for (t, a) in self.tenants.iter_mut().enumerate() {
+            reg.gauge_set(
+                &format!("slo.ttft_attainment.{t}"),
+                a.ttft_ok as f64 / a.ttft_n.max(1) as f64,
+            );
+            reg.gauge_set(
+                &format!("slo.tbt_attainment.{t}"),
+                a.tbt_ok as f64 / a.tbt_n.max(1) as f64,
+            );
+            reg.gauge_set(
+                &format!("slo.ttft_burn.{t}"),
+                Self::burn(&self.policy, a.win_ttft_viol, a.win_ttft_n),
+            );
+            reg.gauge_set(
+                &format!("slo.tbt_burn.{t}"),
+                Self::burn(&self.policy, a.win_tbt_viol, a.win_tbt_n),
+            );
+            a.win_ttft_n = 0;
+            a.win_ttft_viol = 0;
+            a.win_tbt_n = 0;
+            a.win_tbt_viol = 0;
+        }
+    }
+}
+
 /// Capture the standard gauges of one scheduler replica under
 /// `cloud.<gauge>.<tid>` names.
 pub fn sample_scheduler<E: BatchEngine>(reg: &mut Registry, tid: usize, s: &Scheduler<E>) {
@@ -299,5 +429,57 @@ mod tests {
         let h = Hist::default();
         assert_eq!(h.mean(), None);
         assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.nonzero_buckets().count(), 0);
+    }
+
+    #[test]
+    fn hist_buckets_cover_recorded_values() {
+        let mut h = Hist::default();
+        h.record(0.25);
+        h.record(0.3);
+        h.record(4.0);
+        let buckets: Vec<(f64, u64)> = h.nonzero_buckets().collect();
+        assert_eq!(buckets.iter().map(|&(_, c)| c).sum::<u64>(), 3, "counts conserve n");
+        for &(lo, _) in &buckets {
+            assert!(lo > 0.0);
+        }
+        // 0.25 and 0.3 share the [0.25, 0.5) bucket; 4.0 is alone
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(buckets[0], (0.25, 2));
+        assert_eq!(buckets[1], (4.0, 1));
+    }
+
+    #[test]
+    fn slo_monitor_burn_rate_is_windowed() {
+        let policy =
+            crate::config::SloPolicy { ttft_s: 1.0, tbt_s: 0.1, violation_budget: 0.25 };
+        let mut m = SloMonitor::new(2, policy);
+        let mut reg = Registry::new(0.0);
+        // window 1, tenant 0: 3 ok + 1 violation of 4 → 25% violations
+        // = exactly the budget → burn 1.0
+        for _ in 0..3 {
+            m.record_ttft(0, 0.5);
+        }
+        m.record_ttft(0, 2.0);
+        m.sample(&mut reg);
+        assert_eq!(reg.gauge("slo.ttft_attainment.0"), Some(0.75));
+        assert_eq!(reg.gauge("slo.ttft_burn.0"), Some(1.0));
+        assert_eq!(reg.gauge("slo.ttft_burn.1"), Some(0.0), "idle tenant burns nothing");
+        // window 2: all violations → burn 1/0.25 = 4; cumulative
+        // attainment decays but is not reset
+        m.record_ttft(0, 3.0);
+        m.record_ttft(0, 3.0);
+        m.sample(&mut reg);
+        assert_eq!(reg.gauge("slo.ttft_burn.0"), Some(4.0));
+        assert_eq!(reg.gauge("slo.ttft_attainment.0"), Some(0.5));
+        // TBT path is independent
+        m.record_tbt(1, 0.05);
+        m.record_tbt(1, 0.5);
+        m.sample(&mut reg);
+        assert_eq!(reg.gauge("slo.tbt_attainment.1"), Some(0.5));
+        assert_eq!(reg.gauge("slo.tbt_burn.1"), Some(2.0));
+        // empty window after sampling → burn falls back to 0
+        m.sample(&mut reg);
+        assert_eq!(reg.gauge("slo.tbt_burn.1"), Some(0.0));
     }
 }

@@ -123,6 +123,13 @@ pub enum Ph {
     Complete,
     /// Counter sample (`"C"`).
     Counter,
+    /// Flow arrow start (`"s"`): the device-side end of a causal
+    /// device→cloud link; `id` binds the arrow's events together.
+    FlowStart,
+    /// Flow arrow step (`"t"`): an intermediate hop (cloud side).
+    FlowStep,
+    /// Flow arrow end (`"f"`): the arrow's terminus (back on device).
+    FlowEnd,
 }
 
 impl Ph {
@@ -134,7 +141,15 @@ impl Ph {
             Ph::Instant => "i",
             Ph::Complete => "X",
             Ph::Counter => "C",
+            Ph::FlowStart => "s",
+            Ph::FlowStep => "t",
+            Ph::FlowEnd => "f",
         }
+    }
+
+    /// Is this one of the flow-arrow phases (`s`/`t`/`f`)?
+    pub fn is_flow(self) -> bool {
+        matches!(self, Ph::FlowStart | Ph::FlowStep | Ph::FlowEnd)
     }
 }
 
@@ -305,6 +320,28 @@ impl TraceSink {
         });
     }
 
+    /// Flow-arrow event: `ph` must be one of the flow phases and `id`
+    /// the nonzero flow id shared by the arrow's start/step/end
+    /// (`net::wire::TraceContext::flow_id`). Flow events attach to the
+    /// slice enclosing their timestamp on track `(pid, tid)`, which is
+    /// how Perfetto draws the device→cloud→device arrows.
+    pub fn flow(&mut self, pid: u32, tid: u32, name: &'static str, ph: Ph, id: u64) {
+        debug_assert!(ph.is_flow(), "flow() takes a flow phase, got {ph:?}");
+        debug_assert!(id != 0, "flow id 0 would be dropped by the exporter");
+        let ts_s = self.clock.now_s();
+        self.push(TraceEvent {
+            ts_s,
+            dur_s: 0.0,
+            ph,
+            name,
+            cat: "flow",
+            pid,
+            tid,
+            id,
+            args: Vec::new(),
+        });
+    }
+
     /// Counter sample (`value` lands in the args).
     pub fn counter(&mut self, pid: u32, tid: u32, name: &'static str, value: f64) {
         let ts_s = self.clock.now_s();
@@ -431,6 +468,19 @@ mod tests {
         assert_eq!(s.span_imbalance(), 1);
         s.end(2, 0, "request", 1);
         assert_eq!(s.span_imbalance(), 0);
+    }
+
+    #[test]
+    fn flow_events_carry_phase_and_id() {
+        let mut s = TraceSink::virtual_time(16);
+        s.set_now(1.0);
+        s.flow(2, 0, "offload", Ph::FlowStart, 0xF1);
+        s.flow(1, 0, "offload", Ph::FlowStep, 0xF1);
+        s.flow(2, 0, "offload", Ph::FlowEnd, 0xF1);
+        let phases: Vec<&str> = s.events().map(|e| e.ph.code()).collect();
+        assert_eq!(phases, vec!["s", "t", "f"]);
+        assert!(s.events().all(|e| e.id == 0xF1 && e.cat == "flow"));
+        assert_eq!(s.span_imbalance(), 0, "flows are not spans");
     }
 
     #[test]

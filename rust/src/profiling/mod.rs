@@ -162,6 +162,7 @@ pub fn profile_pair(
                 draft: draft.clone(),
                 dists,
                 greedy: true,
+                ctx: Default::default(),
             })?;
             let mut outcome = None;
             while outcome.is_none() {

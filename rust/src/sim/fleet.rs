@@ -26,7 +26,7 @@ use anyhow::{bail, Result};
 use crate::cloud::fairness::TenantStats;
 use crate::cloud::router::Router;
 use crate::cloud::scheduler::{CloudEvent, CloudRequest};
-use crate::config::{DeviceProfile, SyneraParams};
+use crate::config::{DeviceProfile, SloPolicy, SyneraParams};
 use crate::device::codec::compress_dist;
 use crate::device::early_exit::SeqExitPolicy;
 use crate::device::offload::{OffloadDecision, Selector};
@@ -36,9 +36,9 @@ use crate::metrics::energy::EnergyModel;
 use crate::metrics::stats::{LatencyRecorder, Summary};
 use crate::model::cloud_engine::BatchEngine;
 use crate::net::link::{LinkProfile, SimLink};
-use crate::net::wire::{DownlinkMsg, UplinkMsg};
-use crate::obs::registry::{self, RegistryShared};
-use crate::obs::trace::{self, tenant_pid, TraceShared};
+use crate::net::wire::{DownlinkMsg, TraceContext, UplinkMsg};
+use crate::obs::registry::{self, RegistryShared, SloMonitor};
+use crate::obs::trace::{self, tenant_pid, Ph, TraceShared, PID_CLOUD};
 use crate::profiling::OffloadProfile;
 use crate::sim::clock::EventQueue;
 use crate::testutil::MockBatchEngine;
@@ -87,10 +87,10 @@ pub struct FleetConfig {
     /// Device energy profile for the per-tenant energy column (J/token
     /// drafting cost, J/byte radio cost).
     pub device_profile: DeviceProfile,
-    /// TTFT service-level objective (s).
-    pub slo_ttft_s: f64,
-    /// Per-request mean TBT service-level objective (s).
-    pub slo_tbt_s: f64,
+    /// Service-level objective (TTFT/TBT thresholds and violation
+    /// budget) shared by the report columns and the registry's
+    /// [`SloMonitor`] burn-rate gauges.
+    pub slo: SloPolicy,
     /// Latency-sample reservoir per tenant recorder (0 = retain all).
     pub reservoir: usize,
     pub seed: u64,
@@ -123,8 +123,7 @@ impl Default for FleetConfig {
             cloud_row_s: 4e-4,
             migrate_gbps: 10.0,
             device_profile: DeviceProfile::jetson_orin_50w(),
-            slo_ttft_s: 2.0,
-            slo_tbt_s: 0.25,
+            slo: SloPolicy::default(),
             reservoir: 1 << 16,
             seed: 0xF1EE7,
             cloud_model: "l13b".into(),
@@ -150,6 +149,11 @@ pub struct TenantReport {
     /// Fraction of TBT-eligible (≥2 token) completed requests with
     /// mean TBT ≤ the SLO.
     pub slo_tbt_frac: f64,
+    /// Whole-run TTFT burn rate: fraction of the violation budget
+    /// consumed ([`SloPolicy::burn`]; 1.0 = exactly at budget).
+    pub ttft_burn: f64,
+    /// Whole-run TBT burn rate.
+    pub tbt_burn: f64,
     /// Engine token rows executed for this tenant (WFQ share evidence).
     pub rows_executed: u64,
     pub verifies_done: u64,
@@ -357,6 +361,9 @@ struct Inflight {
     t_sent: f64,
     /// `(r_star, alt)` parallel-inference bet, if one was placed.
     pi: Option<(usize, u32)>,
+    /// Trace context this round travelled under (joins the device and
+    /// cloud tracks into one causal flow per offload round).
+    ctx: TraceContext,
 }
 
 struct Active {
@@ -369,6 +376,8 @@ struct Active {
     generated: usize,
     t_first: Option<f64>,
     t_last: f64,
+    /// Offload rounds attempted so far (trace-context round counter).
+    round: u32,
     inflight: Option<Inflight>,
 }
 
@@ -387,10 +396,6 @@ struct TenantAcc {
     energy: EnergyModel,
     requests: usize,
     completed: usize,
-    slo_ok_ttft: usize,
-    /// Completed requests with ≥2 tokens (a defined inter-token gap).
-    tbt_eligible: usize,
-    slo_ok_tbt: usize,
 }
 
 struct FleetRun<'a, E: BatchEngine> {
@@ -399,6 +404,8 @@ struct FleetRun<'a, E: BatchEngine> {
     q: EventQueue<Ev>,
     devs: Vec<Dev>,
     acc: Vec<TenantAcc>,
+    /// Per-tenant SLO attainment and windowed burn-rate accounting.
+    slo: SloMonitor,
     /// Per replica: is a CloudTick scheduled or firing for it?
     cloud_active: Vec<bool>,
     /// Per replica: end of its last scheduled service period — one
@@ -450,6 +457,7 @@ impl<E: BatchEngine> FleetRun<'_, E> {
             generated: 0,
             t_first: None,
             t_last: 0.0,
+            round: 0,
             inflight: None,
         });
         let tenant = dev.model.tenant;
@@ -530,11 +538,16 @@ impl<E: BatchEngine> FleetRun<'_, E> {
         } else {
             None
         };
+        // causal context: computed unconditionally (cheap, no RNG) so
+        // tracing on/off cannot perturb the simulation
+        let ctx = TraceContext::for_round(a.req_id, a.round);
+        a.round = a.round.wrapping_add(1);
         a.inflight = Some(Inflight {
             start_len: a.seq.len(),
             draft: chunk.tokens.clone(),
             t_sent: t,
             pi,
+            ctx,
         });
         let req = CloudRequest::Verify {
             request_id: a.req_id,
@@ -543,6 +556,7 @@ impl<E: BatchEngine> FleetRun<'_, E> {
             draft: chunk.tokens,
             dists,
             greedy: self.cfg.params.greedy,
+            ctx,
         };
         self.q.push(t + up_delay, Ev::Uplink { device: device as u32, req });
         if self.cfg.trace.is_some() {
@@ -554,11 +568,16 @@ impl<E: BatchEngine> FleetRun<'_, E> {
                 ("mean_conf", dec.mean_conf),
                 ("mean_imp", dec.mean_imp),
                 ("bytes", up_bytes as f64),
+                ("round", ctx.round as f64),
             ];
             trace::with(&self.cfg.trace, |s| {
                 s.instant(pid, device as u32, "offload", id, args);
                 s.begin(pid, device as u32, "round", id);
                 s.begin(pid, device as u32, "uplink", id);
+                // flow start binds to the round slice just opened;
+                // the cloud scheduler steps it at verify_commit and
+                // the device ends it at device_commit
+                s.flow(pid, device as u32, "offload", Ph::FlowStart, ctx.parent_span);
             });
         }
         Ok(())
@@ -624,6 +643,21 @@ impl<E: BatchEngine> FleetRun<'_, E> {
                 let tenant = self.devs[device].model.tenant;
                 self.acc[tenant].energy.record_bytes(bytes as u64);
                 let dl = self.devs[device].link.downlink_s(bytes);
+                if self.cfg.trace.is_some() {
+                    // the analyzer splits this round's cloud window into
+                    // service and downlink from these args; `round` joins
+                    // the instant to the device-side offload context
+                    let round = self.devs[device]
+                        .active
+                        .as_ref()
+                        .and_then(|a| a.inflight.as_ref())
+                        .map_or(-1.0, |i| i.ctx.round as f64);
+                    let args =
+                        vec![("round", round), ("service", service), ("dl", dl)];
+                    trace::with(&self.cfg.trace, |s| {
+                        s.instant(PID_CLOUD, replica as u32, "reply", request_id, args)
+                    });
+                }
                 self.q.push(
                     t_serve + dl,
                     Ev::Reply {
@@ -665,6 +699,7 @@ impl<E: BatchEngine> FleetRun<'_, E> {
             if let Ok(mut r) = reg.lock() {
                 if r.due(t) {
                     registry::sample_router(&mut r, &self.router);
+                    self.slo.sample(&mut r);
                     r.snapshot(t);
                 }
             }
@@ -718,8 +753,14 @@ impl<E: BatchEngine> FleetRun<'_, E> {
         commit.truncate(room);
         if self.cfg.trace.is_some() {
             let (pid, id) = (tenant_pid(tenant), a.req_id);
-            let args = vec![("accepted", accepted as f64), ("committed", commit.len() as f64)];
+            let mut args =
+                vec![("accepted", accepted as f64), ("committed", commit.len() as f64)];
+            args.push(("round", inf.ctx.round as f64));
+            let flow = inf.ctx.parent_span;
             trace::with(&self.cfg.trace, |s| {
+                // flow end lands while the round slice is still open so
+                // `bp:"e"` binds the arrow head to it
+                s.flow(pid, device as u32, "offload", Ph::FlowEnd, flow);
                 s.end(pid, device as u32, "round", id);
                 s.instant(pid, device as u32, "device_commit", id, args);
             });
@@ -759,9 +800,7 @@ impl<E: BatchEngine> FleetRun<'_, E> {
         self.generated_tokens += a.generated as u64;
         let ttft = a.t_first.unwrap_or(t) - a.t_arrival;
         acc.ttft.record(ttft);
-        if ttft <= self.cfg.slo_ttft_s {
-            acc.slo_ok_ttft += 1;
-        }
+        self.slo.record_ttft(tenant, ttft);
         // requests with <2 tokens have no inter-token gap: they carry
         // no TBT sample and sit outside the TBT-SLO denominator
         // (recording 0.0 would drag percentiles down and inflate SLO
@@ -769,11 +808,8 @@ impl<E: BatchEngine> FleetRun<'_, E> {
         if let (Some(t0), n) = (a.t_first, a.generated) {
             if n >= 2 {
                 let tbt = (a.t_last - t0) / (n - 1) as f64;
-                acc.tbt.record(tbt);
-                acc.tbt_eligible += 1;
-                if tbt <= self.cfg.slo_tbt_s {
-                    acc.slo_ok_tbt += 1;
-                }
+                self.acc[tenant].tbt.record(tbt);
+                self.slo.record_tbt(tenant, tbt);
             }
         }
         self.start_next(t, device);
@@ -870,11 +906,9 @@ pub fn run_fleet_on<E: BatchEngine>(
                 ),
                 requests: 0,
                 completed: 0,
-                slo_ok_ttft: 0,
-                tbt_eligible: 0,
-                slo_ok_tbt: 0,
             })
             .collect(),
+        slo: SloMonitor::new(cfg.tenants, cfg.slo),
         cloud_active: vec![false; replicas],
         cloud_busy_until: vec![0.0; replicas],
         measured_compute,
@@ -940,6 +974,12 @@ pub fn run_fleet_on<E: BatchEngine>(
     if let Some(reg) = &cfg.registry {
         if let Ok(mut r) = reg.lock() {
             registry::sample_router(&mut r, &run.router);
+            run.slo.sample(&mut r);
+            if let Some(tr) = &cfg.trace {
+                if let Ok(s) = tr.lock() {
+                    r.gauge_set("trace.dropped", s.dropped() as f64);
+                }
+            }
             r.snapshot(virtual_s);
         }
     }
@@ -968,16 +1008,21 @@ pub fn run_fleet_on<E: BatchEngine>(
     }
     let mut tenants = Vec::with_capacity(cfg.tenants);
     for (t, acc) in run.acc.iter().enumerate() {
-        let done = acc.completed.max(1);
+        let (ttft_att, tbt_att) = (run.slo.ttft_attainment(t), run.slo.tbt_attainment(t));
+        let tbt_sum = acc.tbt.summary();
+        let tbt_has = tbt_sum.is_some();
         tenants.push(TenantReport {
             tenant: t,
             weight: weights[t],
             requests: acc.requests,
             completed: acc.completed,
             ttft: acc.ttft.summary().unwrap_or_default(),
-            tbt: acc.tbt.summary().unwrap_or_default(),
-            slo_ttft_frac: acc.slo_ok_ttft as f64 / done as f64,
-            slo_tbt_frac: acc.slo_ok_tbt as f64 / acc.tbt_eligible.max(1) as f64,
+            tbt: tbt_sum.unwrap_or_default(),
+            slo_ttft_frac: ttft_att,
+            slo_tbt_frac: tbt_att,
+            // a tenant with no samples is unburned, not fully burned
+            ttft_burn: if acc.completed > 0 { cfg.slo.burn(ttft_att) } else { 0.0 },
+            tbt_burn: if tbt_has { cfg.slo.burn(tbt_att) } else { 0.0 },
             rows_executed: tstats[t].rows_executed,
             verifies_done: tstats[t].verifies_done,
             draft_tokens_accepted: tstats[t].draft_tokens_accepted,

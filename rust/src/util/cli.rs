@@ -2,14 +2,17 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-/// Parsed command line: a subcommand plus `--key value` options.
+/// Parsed command line: a subcommand plus `--key value` options and
+/// any bare positional operands after the subcommand (e.g. the trace
+/// path in `synera inspect fleet.trace.json`).
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub command: Option<String>,
     pub opts: BTreeMap<String, String>,
     pub flags: Vec<String>,
+    pub positionals: Vec<String>,
 }
 
 impl Args {
@@ -29,7 +32,7 @@ impl Args {
             } else if out.command.is_none() {
                 out.command = Some(a);
             } else {
-                bail!("unexpected positional argument {a:?}");
+                out.positionals.push(a);
             }
         }
         Ok(out)
@@ -85,8 +88,11 @@ mod tests {
     }
 
     #[test]
-    fn rejects_double_positional() {
-        assert!(Args::parse(s(&["a", "b"])).is_err());
+    fn collects_positionals_after_subcommand() {
+        let a = Args::parse(s(&["inspect", "t.json", "--out", "o.jsonl", "u.json"])).unwrap();
+        assert_eq!(a.command.as_deref(), Some("inspect"));
+        assert_eq!(a.positionals, vec!["t.json".to_string(), "u.json".to_string()]);
+        assert_eq!(a.get("out"), Some("o.jsonl"));
     }
 
     #[test]

@@ -332,6 +332,7 @@ fn threaded_tiny_run(
                             draft: chunk.tokens.clone(),
                             dists,
                             greedy: params.greedy,
+                            ctx: Default::default(),
                         },
                         rtx,
                     ))

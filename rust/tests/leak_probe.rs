@@ -67,6 +67,7 @@ fn fig15_sim_rss() {
                 draft: (0..gamma).map(|_| 200 + rng.below(128) as u32).collect(),
                 dists: vec![Dist::Dense(vec![1.0 / 512.0; 512]); gamma],
                 greedy: true,
+                ctx: Default::default(),
             }).unwrap();
             next += 1;
         }

@@ -151,6 +151,38 @@ fn registry_cadence_and_end_state() {
     assert!(routed > 0.0 && routed <= rep.offered as f64, "routed {routed}");
 }
 
+/// Causal flow arrows join device and cloud tracks: every offload
+/// round opens a `FlowStart` on the device, the cloud commit adds a
+/// `FlowStep`, and the verdict's arrival closes with a `FlowEnd` back
+/// on the device — all sharing one synthetic flow id (high bit set so
+/// it can never collide with a request id).
+#[test]
+fn flow_arrows_join_device_and_cloud() {
+    let (rep, tr, _) = run_traced();
+    assert!(rep.offload_rounds > 0, "run offloaded");
+    let sink = tr.lock().unwrap();
+    let flows = |ph: Ph| sink.events().filter(move |e| e.name == "offload" && e.ph == ph);
+    let starts = flows(Ph::FlowStart).count();
+    let steps = flows(Ph::FlowStep).count();
+    let ends = flows(Ph::FlowEnd).count();
+    assert_eq!(starts, rep.offload_rounds as usize, "one arrow per offload round");
+    assert_eq!(ends, starts, "full drain: every arrow lands back on the device");
+    assert!(steps > 0 && steps <= starts, "cloud hop on the committed rounds: {steps}");
+    for ph in [Ph::FlowStart, Ph::FlowStep, Ph::FlowEnd] {
+        for e in flows(ph) {
+            assert!(e.id >> 63 == 1, "flow id carries the sentinel bit: {:#x}", e.id);
+            assert!(e.pid >= 2 || e.pid == trace::PID_CLOUD, "arrow on device/cloud track");
+        }
+    }
+    // start ids and end ids pair up exactly (same round, same arrow)
+    let ids = |ph: Ph| -> Vec<u64> {
+        let mut v: Vec<u64> = flows(ph).map(|e| e.id).collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(ids(Ph::FlowStart), ids(Ph::FlowEnd), "arrows open and close with one id");
+}
+
 /// With router replicas the placement/migration instants appear on
 /// the router track and per-replica tick slices land on distinct
 /// cloud threads.

@@ -153,6 +153,7 @@ fn four_x_oversubscribed_verify_sessions_all_complete() {
                 draft: vec![9, 9],
                 dists: dense_dists(2, 64),
                 greedy: true,
+                ctx: Default::default(),
             })
             .unwrap();
     };
@@ -306,6 +307,7 @@ fn releasing_a_parked_session_frees_its_blocks() {
                 draft: vec![9, 9],
                 dists: dense_dists(2, 64),
                 greedy: true,
+                ctx: Default::default(),
             })
             .unwrap();
     }
@@ -350,6 +352,7 @@ fn registry_gauges_track_live_paging_state() {
                 draft: vec![9, 9],
                 dists: dense_dists(2, 64),
                 greedy: true,
+                ctx: Default::default(),
             })
             .unwrap();
     }

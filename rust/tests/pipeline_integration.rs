@@ -89,6 +89,7 @@ fn scheduler_queues_when_slots_exhausted_and_recovers() {
                 draft: vec![200, 201, 202, 203],
                 dists: vec![Dist::Dense(vec![1.0 / 512.0; 512]); 4],
                 greedy: true,
+                ctx: Default::default(),
             })
             .unwrap();
     }
@@ -126,6 +127,7 @@ fn verify_accept_counts_within_gamma() {
             draft: vec![282, 303, 277, 284],
             dists: vec![Dist::Dense(vec![1.0 / 512.0; 512]); 4],
             greedy: true,
+            ctx: Default::default(),
         })
         .unwrap();
     let mut seen = None;

@@ -167,6 +167,7 @@ fn prop_codec_preserves_topk_mass_and_shrinks_wire() {
             draft: vec![1],
             dists,
             is_first: false,
+            ctx: Default::default(),
         };
         let dense = msg(vec![Dist::Dense(p.clone())]).wire_bytes();
         let sparse = msg(vec![d]).wire_bytes();
@@ -239,6 +240,7 @@ fn prop_wire_sizes_scale_with_content() {
             draft: vec![7; 4],
             dists: vec![Dist::TopK { ids: vec![1, 2], probs_f16: vec![0, 0] }; 4],
             is_first: false,
+            ctx: Default::default(),
         };
         if mk(n2).wire_bytes() <= mk(n1).wire_bytes() {
             return Err("bytes not monotone in payload".into());

@@ -48,6 +48,7 @@ fn verify_req(id: u64, uncached: Vec<u32>, draft: Vec<u32>) -> CloudRequest {
         draft,
         dists: dense_dists(n),
         greedy: true,
+        ctx: Default::default(),
     }
 }
 

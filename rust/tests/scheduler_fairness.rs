@@ -107,6 +107,7 @@ fn mixed_tick_coschedules_prefill_verify_and_decode() {
             draft: vec![9, 9],
             dists: dense_dists(2, 64),
             greedy: true,
+            ctx: Default::default(),
         })
         .unwrap();
     // request 3: a long prefill
@@ -159,6 +160,7 @@ fn aged_prefill_breaks_through_verify_stream() {
             draft: vec![9, 9],
             dists: dense_dists(2, 64),
             greedy: true,
+            ctx: Default::default(),
         })
         .unwrap();
     sched
@@ -179,6 +181,7 @@ fn aged_prefill_breaks_through_verify_stream() {
                             draft: vec![9, 9],
                             dists: dense_dists(2, 64),
                             greedy: true,
+                            ctx: Default::default(),
                         })
                         .unwrap();
                 }
@@ -225,6 +228,7 @@ fn verify_admission_survives_generate_flood() {
                     draft: vec![9, 9],
                     dists: dense_dists(2, 64),
                     greedy: true,
+                    ctx: Default::default(),
                 })
                 .unwrap();
         }
@@ -257,6 +261,7 @@ fn release_during_inflight_verify_defers_slot_free() {
             draft: vec![9, 9],
             dists: dense_dists(2, 64),
             greedy: true,
+            ctx: Default::default(),
         })
         .unwrap();
     let (_, _) = sched.tick().unwrap(); // round is now mid-flight
@@ -311,6 +316,7 @@ fn oversized_and_degenerate_requests_rejected_at_submit() {
             draft: vec![9, 9],
             dists: dense_dists(2, 64),
             greedy: true,
+            ctx: Default::default(),
         })
         .is_err(), "verify round larger than the slot cache");
     assert!(sched.is_idle(), "rejected requests must not be enqueued");
@@ -330,6 +336,7 @@ fn verify_session_at_kv_capacity_ends_with_eos() {
                 draft: vec![9, 9],
                 dists: dense_dists(2, 64),
                 greedy: true,
+                ctx: Default::default(),
             })
             .unwrap();
     };
@@ -362,6 +369,7 @@ fn pipelined_rounds_of_new_session_stay_serialised() {
                 draft: vec![9, 9],
                 dists: dense_dists(2, 64),
                 greedy: true,
+                ctx: Default::default(),
             })
             .unwrap();
     }
@@ -423,6 +431,7 @@ fn prop_random_traffic_drains_and_conserves_slots() {
                         draft: vec![9; gamma],
                         dists: dense_dists(gamma, 64),
                         greedy: true,
+                        ctx: Default::default(),
                     })
                     .map_err(|e| e.to_string())?;
                 expect_ver += 1;
@@ -495,6 +504,7 @@ fn paged_oversubscription_does_not_starve_decode() {
                 draft: vec![9, 9],
                 dists: dense_dists(2, 64),
                 greedy: true,
+                ctx: Default::default(),
             })
             .unwrap();
     }
@@ -517,6 +527,7 @@ fn paged_oversubscription_does_not_starve_decode() {
                             draft: vec![9, 9],
                             dists: dense_dists(2, 64),
                             greedy: true,
+                            ctx: Default::default(),
                         })
                         .unwrap();
                 }
@@ -556,6 +567,7 @@ fn wfq_admission_tracks_tenant_weights() {
                         draft: vec![9, 9],
                         dists: dense_dists(2, 64),
                         greedy: true,
+                        ctx: Default::default(),
                     },
                 )
                 .unwrap();
@@ -604,6 +616,7 @@ fn wfq_submit_validation_and_untagged_bypass() {
             draft: vec![9],
             dists: dense_dists(1, 64),
             greedy: true,
+            ctx: Default::default(),
         },
     );
     assert!(bad.is_err(), "tenant index out of range must be rejected");
@@ -621,6 +634,7 @@ fn wfq_submit_validation_and_untagged_bypass() {
                 draft: vec![9],
                 dists: dense_dists(1, 64),
                 greedy: true,
+                ctx: Default::default(),
             },
         )
         .unwrap();
@@ -670,6 +684,7 @@ fn wfq_follow_up_behind_blocked_head_does_not_deadlock() {
         draft: vec![9, 9],
         dists: dense_dists(2, 64),
         greedy: true,
+        ctx: Default::default(),
     };
     // tenant 0: two rounds of session 7, both stamped before the
     // session opens (the second would previously wait on capacity)

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# CI perf gate: diff a freshly produced BENCH_<fig>.json against the
+# baseline committed at HEAD.
+#
+#   tools/bench_diff.sh <fig> [tolerance]
+#
+# e.g. after `cd rust && cargo bench --bench fig18_sched_overhead -- --json`:
+#   tools/bench_diff.sh fig18 0.25
+#
+# Bootstrap: when HEAD carries no baseline yet, the run is reported
+# and the gate passes — commit the generated rust/BENCH_<fig>.json to
+# arm the gate for subsequent changes.
+set -euo pipefail
+
+fig="${1:?usage: tools/bench_diff.sh <fig> [tolerance]}"
+tol="${2:-0.25}"
+repo="$(cd "$(dirname "$0")/.." && pwd)"
+cand="$repo/rust/BENCH_${fig}.json"
+snap="rust/BENCH_${fig}.json"
+
+if [[ ! -f "$cand" ]]; then
+    echo "bench_diff: candidate $cand not found — run the bench with --json first" >&2
+    exit 2
+fi
+
+base="$(mktemp)"
+trap 'rm -f "$base"' EXIT
+if ! git -C "$repo" show "HEAD:$snap" > "$base" 2>/dev/null; then
+    echo "bench_diff: no baseline at HEAD:$snap — bootstrap run, gate passes." >&2
+    echo "bench_diff: commit $snap to arm the gate." >&2
+    exit 0
+fi
+
+cargo run --quiet --release --manifest-path "$repo/rust/Cargo.toml" \
+    --bin bench_diff -- "$base" "$cand" --tol "$tol"
