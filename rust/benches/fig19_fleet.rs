@@ -38,6 +38,12 @@ fn fleet_slo(rep: &FleetReport) -> (f64, f64) {
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
+    // optional shared-preamble axis: both tables run with the same
+    // prompt population (same seed ⇒ identical arrivals); 0.0 (the
+    // default) keeps this bench bit-identical to builds without
+    // prefix sharing
+    let prefix_share = args.get_f64("prefix-share", 0.0)?;
+    let prefix_len = args.get_usize("prefix-len", 32)?;
     let mut scaling_rows: Vec<Json> = Vec::new();
     let mut replica_rows: Vec<Json> = Vec::new();
     let rates = [0.125f64, 0.25, 0.5];
@@ -62,6 +68,8 @@ fn main() -> anyhow::Result<()> {
                     ..SyneraParams::default()
                 },
                 seed: 0xF19 ^ devices as u64,
+                prefix_share,
+                prefix_len,
                 ..FleetConfig::default()
             };
             let rep = run_fleet(&cfg)?;
@@ -110,6 +118,8 @@ fn main() -> anyhow::Result<()> {
                 ..SyneraParams::default()
             },
             seed: 0xF19B,
+            prefix_share,
+            prefix_len,
             ..FleetConfig::default()
         };
         let rep = run_fleet(&cfg)?;

@@ -46,6 +46,9 @@ pub struct TenantStats {
     pub verifies_done: u64,
     /// Draft tokens accepted across those rounds.
     pub draft_tokens_accepted: u64,
+    /// Prompt rows served from shared prefix blocks at admission
+    /// (prefill compute this tenant never paid for).
+    pub prefix_hit_rows: u64,
 }
 
 /// One queued item with its virtual-time stamps.

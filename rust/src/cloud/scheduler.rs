@@ -118,6 +118,13 @@ pub struct SchedulerStats {
     pub swap_outs: u64,
     pub swap_bytes: u64,
     pub swap_s: f64,
+    /// Shared-prefix cache traffic (mirrors the session manager's
+    /// [`crate::runtime::prefix::PrefixStats`]; zeros with the cache
+    /// off).
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    pub prefix_hit_rows: u64,
+    pub cow_copies: u64,
     /// Per-phase wall seconds inside `tick()` (always-on cheap timers;
     /// the Fig. 18 breakdown and the `BENCH_fig18.json` phase schema).
     /// `wfq_drain` covers the admission pass (WFQ drain + session
@@ -757,6 +764,9 @@ impl<E: BatchEngine> Scheduler<E> {
             let ri = res_by_slot[item.slot].expect("engine result for scheduled slot");
             let r = &res[ri];
             self.sessions.note_rows(p.id, r.n_rows);
+            // token ids behind the committed rows — block identity for
+            // the prefix cache (no-op with the cache off)
+            self.sessions.note_tokens(p.id, &item.tokens[..r.n_rows]);
             if let Some(&t) = self.tenant_of.get(&p.id) {
                 self.tenant_stats[t].rows_executed += r.n_rows as u64;
             }
@@ -892,6 +902,11 @@ impl<E: BatchEngine> Scheduler<E> {
         self.stats.swap_outs = sw.swap_outs;
         self.stats.swap_bytes = sw.bytes_in + sw.bytes_out;
         self.stats.swap_s = sw.swap_s;
+        let ps = self.sessions.prefix_stats();
+        self.stats.prefix_hits = ps.hits;
+        self.stats.prefix_misses = ps.misses;
+        self.stats.prefix_hit_rows = ps.hit_rows;
+        self.stats.cow_copies = ps.cow_copies;
 
         let commit_s = t_commit.elapsed().as_secs_f64();
         self.stats.phase_commit_s += commit_s;
@@ -988,16 +1003,35 @@ impl<E: BatchEngine> Scheduler<E> {
             };
             self.admit_verify_first = !self.admit_verify_first;
             if take_verify {
-                let req = new_sessions.pop_front().expect("checked non-empty");
-                let CloudRequest::Verify { request_id, .. } = &req else {
+                let mut req = new_sessions.pop_front().expect("checked non-empty");
+                let CloudRequest::Verify { request_id, uncached, .. } = &mut req else {
                     unreachable!("triaged in pass 1");
                 };
-                self.sessions.open(*request_id)?;
+                let request_id = *request_id;
+                // radix-match the round's prompt prefix: matched blocks
+                // become shared references and the verify forward pass
+                // starts at the first unmatched token (capped so ≥1
+                // uncached token always reaches the engine)
+                let matched = self.sessions.open_with_prompt(request_id, uncached)?;
+                if matched > 0 {
+                    uncached.drain(..matched);
+                    if let Some(&t) = self.tenant_of.get(&request_id) {
+                        self.tenant_stats[t].prefix_hit_rows += matched as u64;
+                    }
+                }
                 self.start_verify(req, events);
             } else {
                 match self.waiting_gen.pop_front() {
                     Some(CloudRequest::Generate { request_id, prompt, max_new }) => {
-                        self.sessions.open(request_id)?;
+                        // prefill planning skips matched blocks: the
+                        // packed prefill chunk starts at the first
+                        // unmatched token (`consumed` = matched rows)
+                        let matched = self.sessions.open_with_prompt(request_id, &prompt)?;
+                        if matched > 0 {
+                            if let Some(&t) = self.tenant_of.get(&request_id) {
+                                self.tenant_stats[t].prefix_hit_rows += matched as u64;
+                            }
+                        }
                         self.trace_instant(
                             "admit",
                             request_id,
@@ -1006,7 +1040,7 @@ impl<E: BatchEngine> Scheduler<E> {
                         self.prefilling.push(GenJob {
                             request_id,
                             prompt,
-                            consumed: 0,
+                            consumed: matched,
                             max_new,
                             generated: Vec::new(),
                             next_token: None,

@@ -20,17 +20,33 @@
 //! (`import_slot`). The victim is **swap-cost-aware LRU**: among the
 //! least-recently-scheduled resident sessions (a window capped at
 //! [`EVICT_CANDIDATES`] and at half the resident set), the one with
-//! the fewest committed KV rows is parked — it costs the least to
-//! copy out now and back in later. Sessions **pinned** by
-//! the current iteration's picks are never eviction victims, so a tick
-//! can never swap out work it is about to run. Swap traffic and copy
-//! time are charged to [`SwapStats`] (and surfaced through the
-//! scheduler's Fig. 18 overhead accounting, since swaps happen outside
-//! engine compute).
+//! the fewest **private** committed KV rows is parked — shared prefix
+//! rows never move on a swap, so only the private tail costs copy
+//! bytes. Sessions **pinned** by the current iteration's picks are
+//! never eviction victims, so a tick can never swap out work it is
+//! about to run. Swap traffic and copy time are charged to
+//! [`SwapStats`] (and surfaced through the scheduler's Fig. 18
+//! overhead accounting, since swaps happen outside engine compute).
+//!
+//! **Shared-prefix cache** (opt-in via `BatchPolicy::prefix_cache`):
+//! the manager owns a [`PrefixIndex`] over the pool. At admission
+//! ([`SessionManager::open_with_prompt`]) the incoming prompt is
+//! radix-matched and every fully-covered prefix block is mapped to an
+//! existing shared block (refcount++, zero prefill — the scheduler
+//! starts the prefill chunk at the first unmatched token). Sessions
+//! keep their shared references across parks and swap-ins; a shared
+//! block is reclaimable only at refcount 0. At park time, full private
+//! blocks with known token history are offered to the index so later
+//! admissions can share them (identical chains dedup onto one physical
+//! block). Shared blocks are immutable: any truncation into shared
+//! territory goes through [`BlockPool::cow`]. With the cache off
+//! (default) every path below is bit-identical to plain private
+//! paging.
 //!
 //! Concurrency is therefore bounded by `max_sessions` (host memory),
 //! not by the compiled batch width — the Fig. 15 latency knee moves
-//! from B to `max_sessions`.
+//! from B to `max_sessions`, and prefix sharing moves the *host
+//! memory* knee out again by the shared fraction (Fig. 15d).
 
 use std::collections::{HashMap, HashSet};
 use std::time::Instant;
@@ -41,14 +57,15 @@ use crate::config::BatchPolicy;
 use crate::model::cloud_engine::{BatchEngine, SlotOwner};
 use crate::obs::trace::{self, TraceShared, PID_CLOUD};
 use crate::runtime::paging::{BlockPool, BlockTable};
+use crate::runtime::prefix::{chain_hash, Inserted, PrefixIndex, PrefixStats, ROOT};
 use crate::runtime::SlotKv;
 
 /// Token rows per host KV block (vLLM-style fixed granularity).
 pub const BLOCK_TOKENS: usize = 16;
 
 /// Eviction candidate window cap: the victim is the **cheapest to
-/// swap** (fewest committed KV rows) among the least-recently-scheduled
-/// resident sessions. The effective window is
+/// swap** (fewest private committed KV rows) among the
+/// least-recently-scheduled resident sessions. The effective window is
 /// `min(EVICT_CANDIDATES, ⌈residents/2⌉)` — `1` would be pure LRU, and
 /// bounding by half the resident set guarantees the most recently
 /// scheduled half is always recency-protected (otherwise, on a B=4
@@ -62,7 +79,8 @@ pub const EVICT_CANDIDATES: usize = 4;
 enum SessionState {
     /// Owns engine slot `slot`; KV lives in the engine cache.
     Resident { slot: usize },
-    /// KV parked in the host block pool (empty table for new sessions).
+    /// Private-tail KV parked in the host block pool (empty table for
+    /// new sessions; shared prefix blocks are tracked separately).
     Parked { table: BlockTable },
     /// Transient mid-swap marker.
     Swapping,
@@ -76,9 +94,29 @@ struct Session {
     /// LRU stamp — bumped whenever the session is granted a slot or
     /// scheduled; the eviction victim is the smallest stamp.
     last_used: u64,
+    /// Rows `[0, shared_len)` live in `shared_blocks` (block-aligned;
+    /// always 0 with the prefix cache off).
+    shared_len: usize,
+    /// Shared prefix blocks, one pool reference each, held from match
+    /// (or park-time indexing) until close/export.
+    shared_blocks: Vec<usize>,
+    /// Committed token ids (tracked only with the cache enabled —
+    /// block identity is a function of token history).
+    tokens: Vec<u32>,
 }
 
-/// Swap-traffic accounting (paged-KV cost visibility).
+impl Session {
+    /// Committed rows not covered by shared blocks — the only rows a
+    /// park must copy.
+    fn private_rows(&self) -> usize {
+        self.len - self.shared_len
+    }
+}
+
+/// Swap-traffic accounting (paged-KV cost visibility). With prefix
+/// sharing, `bytes_out` counts only the **private** rows actually
+/// copied on a swap-out; swap-ins copy the full materialised image
+/// into the slot.
 #[derive(Debug, Clone, Default)]
 pub struct SwapStats {
     pub swap_ins: u64,
@@ -91,9 +129,9 @@ pub struct SwapStats {
 
 /// Tracks logical sessions and pages their KV between engine slots and
 /// the host [`BlockPool`]. Eviction is swap-cost-aware
-/// LRU-with-pinning: the fewest-rows session among the least recently
-/// scheduled residents (window capped at [`EVICT_CANDIDATES`] and at
-/// half the resident set) is parked, but never one the current
+/// LRU-with-pinning: the fewest-private-rows session among the least
+/// recently scheduled residents (window capped at [`EVICT_CANDIDATES`]
+/// and at half the resident set) is parked, but never one the current
 /// iteration has already picked.
 pub struct SessionManager {
     pool: BlockPool,
@@ -102,6 +140,9 @@ pub struct SessionManager {
     /// Admission cap on concurrent logical sessions.
     pub max_sessions: usize,
     stats: SwapStats,
+    /// Shared-prefix index (`None` = cache off, zero behaviour change).
+    prefix: Option<PrefixIndex>,
+    pstats: PrefixStats,
     /// Swap-event trace sink shared with the owning scheduler
     /// ([`crate::cloud::scheduler::Scheduler::set_trace`]).
     trace: Option<TraceShared>,
@@ -116,6 +157,8 @@ impl SessionManager {
             clock: 0,
             max_sessions: max_sessions.max(1),
             stats: SwapStats::default(),
+            prefix: None,
+            pstats: PrefixStats::default(),
             trace: None,
             trace_tid: 0,
         }
@@ -128,14 +171,33 @@ impl SessionManager {
         self.trace_tid = tid;
     }
 
+    /// Turn the shared-prefix cache on (block geometry follows the
+    /// pool). Idempotent; meant to be called before any session opens.
+    pub fn enable_prefix_cache(&mut self) {
+        if self.prefix.is_none() {
+            self.prefix = Some(PrefixIndex::new(self.pool.block_tokens()));
+        }
+    }
+
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Prefix-cache hit/miss/CoW counters (zeros when the cache is off).
+    pub fn prefix_stats(&self) -> PrefixStats {
+        self.pstats
+    }
+
     /// Size a manager for `engine` under `policy`: `max_sessions == 0`
     /// means "the physical slot count" (paging never triggers, pool is
     /// empty); above the slot count, the pool capacity covers the worst
     /// case — every non-resident session parked at full length, plus
-    /// one mid-swap victim — so swap-outs cannot fail. The capacity is
-    /// only a cap: block storage materialises lazily as sessions
-    /// actually park, so an oversized pool costs no host memory up
-    /// front.
+    /// one mid-swap victim — so swap-outs cannot fail. With
+    /// `policy.prefix_cache` the cap gains headroom for index-retained
+    /// chains (the index is trimmed under pressure before any park
+    /// gives up). The capacity is only a cap: block storage
+    /// materialises lazily as sessions actually park, so an oversized
+    /// pool costs no host memory up front.
     pub fn for_engine<E: BatchEngine>(engine: &E, policy: &BatchPolicy) -> SessionManager {
         let slots = engine.slots().max(1);
         let max_sessions =
@@ -143,12 +205,21 @@ impl SessionManager {
         let block_tokens = BLOCK_TOKENS.min(engine.max_len().max(1));
         let per_session = engine.max_len().div_ceil(block_tokens);
         let capacity = if max_sessions > slots {
-            (max_sessions - slots + 1) * per_session.max(1)
+            let base = (max_sessions - slots + 1) * per_session.max(1);
+            if policy.prefix_cache {
+                base + slots * per_session.max(1)
+            } else {
+                base
+            }
         } else {
             0 // sessions ≤ slots: every session can stay resident
         };
         let pool = BlockPool::new(capacity, block_tokens, engine.kv_row_width());
-        SessionManager::new(max_sessions, pool)
+        let mut mgr = SessionManager::new(max_sessions, pool);
+        if policy.prefix_cache {
+            mgr.enable_prefix_cache();
+        }
+        mgr
     }
 
     pub fn contains(&self, id: u64) -> bool {
@@ -168,6 +239,12 @@ impl SessionManager {
     /// Committed KV rows of a session (0 for unknown ids).
     pub fn len_of(&self, id: u64) -> usize {
         self.sessions.get(&id).map_or(0, |s| s.len)
+    }
+
+    /// Rows of a session covered by shared prefix blocks (0 for
+    /// unknown ids or with the cache off).
+    pub fn shared_len_of(&self, id: u64) -> usize {
+        self.sessions.get(&id).map_or(0, |s| s.shared_len)
     }
 
     /// The engine slot of a resident session.
@@ -190,6 +267,12 @@ impl SessionManager {
         self.pool.capacity()
     }
 
+    /// Pool blocks currently referenced (shared blocks count once —
+    /// the host-memory footprint the Fig. 15d sweep measures).
+    pub fn blocks_in_use(&self) -> usize {
+        self.pool.capacity() - self.pool.free_blocks()
+    }
+
     /// Open a logical session (no slot is claimed yet — the first
     /// `ensure_resident` call does that).
     pub fn open(&mut self, id: u64) -> Result<()> {
@@ -206,19 +289,63 @@ impl SessionManager {
                 state: SessionState::Parked { table: BlockTable::empty() },
                 len: 0,
                 last_used: self.clock,
+                shared_len: 0,
+                shared_blocks: Vec::new(),
+                tokens: Vec::new(),
             },
         );
         Ok(())
     }
 
-    /// Close a session, returning its slot or pool blocks. Unknown ids
-    /// are a no-op (a release may race a session that never offloaded).
+    /// Open a session and radix-match its prompt against the prefix
+    /// index. Every fully-covered prefix block becomes a shared
+    /// reference (refcount++, zero prefill); the session starts with
+    /// `matched` committed rows and the caller's prefill begins at the
+    /// first unmatched token. Matching is capped at `prompt.len() - 1`
+    /// so at least one token always remains for the engine to execute
+    /// (both prefill and verify need a live row to produce logits).
+    /// Returns the matched row count — always 0 with the cache off,
+    /// where this is exactly [`SessionManager::open`].
+    pub fn open_with_prompt(&mut self, id: u64, prompt: &[u32]) -> Result<usize> {
+        self.open(id)?;
+        let Some(idx) = self.prefix.as_mut() else { return Ok(0) };
+        let hits = if prompt.len() < 2 {
+            Vec::new()
+        } else {
+            idx.match_prefix(prompt, prompt.len() - 1)
+        };
+        if hits.is_empty() {
+            self.pstats.misses += 1;
+            return Ok(0);
+        }
+        let matched = hits.len() * self.pool.block_tokens();
+        for h in &hits {
+            self.pool.share(h.block);
+        }
+        self.pstats.hits += 1;
+        self.pstats.hit_rows += matched as u64;
+        let sess = self.sessions.get_mut(&id).expect("opened above");
+        sess.shared_blocks = hits.iter().map(|h| h.block).collect();
+        sess.shared_len = matched;
+        sess.len = matched;
+        sess.tokens = prompt[..matched].to_vec();
+        Ok(matched)
+    }
+
+    /// Close a session, returning its slot or pool blocks. Shared
+    /// references are dropped; a shared block is reclaimed only when
+    /// the index and every other session have also dropped it. Unknown
+    /// ids are a no-op (a release may race a session that never
+    /// offloaded).
     pub fn close<E: BatchEngine>(&mut self, id: u64, engine: &mut E) {
         let Some(sess) = self.sessions.remove(&id) else { return };
         match sess.state {
             SessionState::Resident { slot } => engine.free_slot(slot),
             SessionState::Parked { table } => self.pool.release(table),
             SessionState::Swapping => unreachable!("close during an in-flight swap"),
+        }
+        for blk in sess.shared_blocks {
+            self.pool.unref(blk);
         }
     }
 
@@ -229,11 +356,74 @@ impl SessionManager {
         }
     }
 
-    /// Set the committed length (verification rollback).
-    pub fn set_len(&mut self, id: u64, len: usize) {
-        if let Some(s) = self.sessions.get_mut(&id) {
-            s.len = len;
+    /// Record the token ids behind freshly committed rows — block
+    /// identity is a function of token history, so the prefix cache
+    /// can only index blocks whose tokens are fully known. No-op with
+    /// the cache off.
+    pub fn note_tokens(&mut self, id: u64, tokens: &[u32]) {
+        if self.prefix.is_none() {
+            return;
         }
+        if let Some(s) = self.sessions.get_mut(&id) {
+            s.tokens.extend_from_slice(tokens);
+        }
+    }
+
+    /// Set the committed length (verification rollback). Truncating
+    /// into shared territory drops the references on no-longer-covered
+    /// shared blocks; a parked session whose surviving rows end midway
+    /// through a shared block privatises that boundary block via
+    /// copy-on-write, so the shared original stays bit-identical for
+    /// its other holders. (The scheduler only rolls back *resident*
+    /// sessions and never below the verified prefix, so the CoW branch
+    /// is a correctness backstop, not a hot path.)
+    pub fn set_len(&mut self, id: u64, len: usize) {
+        let Some(s) = self.sessions.get_mut(&id) else { return };
+        s.len = len;
+        s.tokens.truncate(len);
+        if len >= s.shared_len {
+            return;
+        }
+        let bt = self.pool.block_tokens();
+        let keep = len / bt; // full shared blocks still covered
+        let boundary = len - keep * bt;
+        // blocks wholly past `len` lose their session reference
+        let dropped = s.shared_blocks.split_off(keep + usize::from(boundary > 0));
+        if let SessionState::Parked { table } = &mut s.state {
+            // every private-tail row sat at ≥ old shared_len > len: gone
+            let old = std::mem::take(table);
+            if boundary > 0 {
+                // rows [keep*bt, len) live in the boundary shared
+                // block — privatise it (CoW) into the new table. If
+                // the pool is exhausted the block id moves into the
+                // table still shared: parked tables are never written
+                // in place, so aliasing is read-only and safe.
+                let blk = s.shared_blocks.pop().expect("boundary block");
+                let owned = match self.pool.cow(blk) {
+                    Ok((fresh, copied)) => {
+                        if copied {
+                            self.pstats.cow_copies += 1;
+                        }
+                        fresh
+                    }
+                    Err(_) => blk,
+                };
+                *table = BlockTable { blocks: vec![owned], len: boundary };
+            }
+            for b in old.blocks {
+                self.pool.unref(b);
+            }
+        } else if boundary > 0 {
+            // resident: the surviving rows live in the slot; the
+            // boundary block is no longer fully covered and cannot
+            // stay in the shared prefix
+            let blk = s.shared_blocks.pop().expect("boundary block");
+            self.pool.unref(blk);
+        }
+        for b in dropped {
+            self.pool.unref(b);
+        }
+        s.shared_len = s.shared_blocks.len() * bt;
     }
 
     /// Make `id` resident and return its slot, swapping a parked
@@ -261,24 +451,25 @@ impl SessionManager {
         if engine.free_slots() == 0 {
             // Swap-cost-aware LRU: gather the EVICT_CANDIDATES least
             // recently scheduled unpinned resident sessions, then park
-            // the one with the fewest committed KV rows — it is the
-            // cheapest to swap back in when its next round arrives.
-            // (Stable (last_used, id) ordering: HashMap iteration order
-            // must not leak into policy.)
+            // the one with the fewest **private** committed KV rows —
+            // shared prefix rows never move on a swap, so it is the
+            // cheapest to copy out now and back in later. (Stable
+            // (last_used, id) ordering: HashMap iteration order must
+            // not leak into policy.)
             let mut cands: Vec<(u64, u64, usize)> = self
                 .sessions
                 .iter()
                 .filter(|(vid, s)| {
                     !pinned.contains(vid) && matches!(s.state, SessionState::Resident { .. })
                 })
-                .map(|(&vid, s)| (s.last_used, vid, s.len))
+                .map(|(&vid, s)| (s.last_used, vid, s.private_rows()))
                 .collect();
             cands.sort_unstable_by_key(|&(used, vid, _)| (used, vid));
             let window = EVICT_CANDIDATES.min(cands.len().div_ceil(2)).max(1);
             cands.truncate(window);
             let victim = cands
                 .iter()
-                .min_by_key(|&&(used, vid, len)| (len, used, vid))
+                .min_by_key(|&&(used, vid, priv_rows)| (priv_rows, used, vid))
                 .map(|&(_, vid, _)| vid);
             let Some(vid) = victim else { return Ok(None) };
             if !self.park(vid, engine)? {
@@ -292,8 +483,15 @@ impl SessionManager {
             unreachable!("non-resident session must be parked");
         };
         let slot = engine.alloc_slot(SlotOwner::Request(id)).expect("slot freed above");
-        if table.len > 0 {
-            let kv = self.pool.load(&table);
+        if sess.len > 0 {
+            // materialise shared prefix + private tail into one image
+            let kv = if sess.shared_blocks.is_empty() {
+                self.pool.load(&table)
+            } else {
+                let mut blocks = sess.shared_blocks.clone();
+                blocks.extend_from_slice(&table.blocks);
+                self.pool.load_blocks(&blocks, sess.len)
+            };
             self.stats.bytes_in += kv.bytes() as u64;
             self.stats.swap_ins += 1;
             let (rows, bytes) = (kv.len as f64, kv.bytes() as f64);
@@ -328,27 +526,41 @@ impl SessionManager {
     }
 
     /// Remove a session and hand back its committed KV image — the
-    /// swap-out half of a cross-replica migration. The slot or pool
-    /// blocks it held are returned to this manager; the caller owns the
-    /// bytes (typically to `import` them on another replica's manager).
+    /// swap-out half of a cross-replica migration. The image is a
+    /// fresh deep copy (shared prefix rows are **materialised**, never
+    /// aliased across replicas — block identity stops at this
+    /// manager's pool); the slot, pool blocks and shared references it
+    /// held are returned to this manager, and the caller owns the
+    /// bytes (typically to `import` them on another replica's
+    /// manager).
     pub fn export<E: BatchEngine>(&mut self, id: u64, engine: &mut E) -> Result<SlotKv> {
         let Some(sess) = self.sessions.remove(&id) else {
             bail!("export of unknown session {id}");
         };
-        match sess.state {
+        let kv = match sess.state {
             SessionState::Resident { slot } => {
                 let kv = engine.export_slot(slot);
                 debug_assert_eq!(kv.len, sess.len, "engine/session committed-length divergence");
                 engine.free_slot(slot);
-                Ok(kv)
+                kv
             }
             SessionState::Parked { table } => {
-                let kv = self.pool.load(&table);
+                let kv = if sess.shared_blocks.is_empty() {
+                    self.pool.load(&table)
+                } else {
+                    let mut blocks = sess.shared_blocks.clone();
+                    blocks.extend_from_slice(&table.blocks);
+                    self.pool.load_blocks(&blocks, sess.len)
+                };
                 self.pool.release(table);
-                Ok(kv)
+                kv
             }
             SessionState::Swapping => unreachable!("export during an in-flight swap"),
+        };
+        for blk in sess.shared_blocks {
+            self.pool.unref(blk);
         }
+        Ok(kv)
     }
 
     /// Can this manager accept an imported session of `rows` committed
@@ -360,10 +572,13 @@ impl SessionManager {
     }
 
     /// Adopt a migrated session: land its KV in a free engine slot when
-    /// one exists, else park it in the host pool. Never evicts — the
-    /// router checks [`SessionManager::can_import`] first, and a failed
-    /// import leaves this manager untouched so the source replica can
-    /// restore the session.
+    /// one exists, else park it in the host pool. The adopted KV is
+    /// fully private — token history did not ride the wire, so the
+    /// rows have no content identity here and are never offered to the
+    /// prefix index. Never evicts — the router checks
+    /// [`SessionManager::can_import`] first, and a failed import
+    /// leaves this manager untouched so the source replica can restore
+    /// the session.
     pub fn import<E: BatchEngine>(&mut self, id: u64, kv: &SlotKv, engine: &mut E) -> Result<()> {
         if self.sessions.contains_key(&id) {
             bail!("import of already-open session {id}");
@@ -386,31 +601,56 @@ impl SessionManager {
         } else {
             bail!("no slot and no pool room for an imported session of {} rows", kv.len);
         };
-        self.sessions
-            .insert(id, Session { state, len: kv.len, last_used: self.clock });
+        self.sessions.insert(
+            id,
+            Session {
+                state,
+                len: kv.len,
+                last_used: self.clock,
+                shared_len: 0,
+                shared_blocks: Vec::new(),
+                tokens: Vec::new(),
+            },
+        );
         Ok(())
     }
 
     /// Swap a resident session's KV out to the host pool and free its
-    /// slot. Returns `false` (session left resident) when the pool
-    /// cannot hold the rows.
+    /// slot. Only the **private tail** (rows past the shared prefix)
+    /// is copied and charged to [`SwapStats`] — shared blocks already
+    /// live in the pool. With the prefix cache on, freshly parked full
+    /// private blocks whose token history is known are offered to the
+    /// index so the next admission with this prefix matches them.
+    /// Returns `false` (session left resident) when the pool cannot
+    /// hold the rows.
     fn park<E: BatchEngine>(&mut self, id: u64, engine: &mut E) -> Result<bool> {
         let t0 = Instant::now();
-        let Some(sess) = self.sessions.get_mut(&id) else {
-            bail!("park of unknown session {id}");
-        };
-        let SessionState::Resident { slot } = sess.state else {
-            bail!("park of non-resident session {id}");
+        let (slot, shared_len, need) = {
+            let Some(sess) = self.sessions.get(&id) else {
+                bail!("park of unknown session {id}");
+            };
+            let SessionState::Resident { slot } = sess.state else {
+                bail!("park of non-resident session {id}");
+            };
+            (slot, sess.shared_len, self.pool.blocks_for(sess.private_rows()))
         };
         // capacity check before the (potentially large) export copy —
-        // the committed length is known without touching the engine
-        if self.pool.free_blocks() < self.pool.blocks_for(sess.len) {
-            return Ok(false);
+        // the private length is known without touching the engine
+        if self.pool.free_blocks() < need {
+            // shed cold index-only chains before giving up
+            if let Some(idx) = self.prefix.as_mut() {
+                idx.trim(&mut self.pool, need);
+            }
+            if self.pool.free_blocks() < need {
+                return Ok(false);
+            }
         }
         let kv = engine.export_slot(slot);
+        let sess = self.sessions.get_mut(&id).expect("looked up above");
         debug_assert_eq!(kv.len, sess.len, "engine/session committed-length divergence");
+        let tail = if shared_len > 0 { kv.tail(shared_len) } else { kv };
         sess.state = SessionState::Swapping;
-        let table = match self.pool.store(&kv) {
+        let table = match self.pool.store(&tail) {
             Ok(table) => table,
             Err(e) => {
                 // undo the half-swap: the session stays resident
@@ -421,20 +661,75 @@ impl SessionManager {
         };
         engine.free_slot(slot);
         self.stats.swap_outs += 1;
-        self.stats.bytes_out += kv.bytes() as u64;
+        self.stats.bytes_out += tail.bytes() as u64;
         self.stats.swap_s += t0.elapsed().as_secs_f64();
         if self.trace.is_some() {
             let tid = self.trace_tid;
             let wall = t0.elapsed().as_secs_f64();
-            let (rows, bytes) = (kv.len as f64, kv.bytes() as f64);
+            let (rows, bytes) = (tail.len as f64, tail.bytes() as f64);
             trace::with(&self.trace, |s| {
                 let secs = if s.is_deterministic() { 0.0 } else { wall };
                 let args = vec![("rows", rows), ("bytes", bytes), ("s", secs)];
                 s.instant(PID_CLOUD, tid, "swap_out", id, args)
             });
         }
+        let table = self.index_parked_blocks(id, table);
         self.sessions.get_mut(&id).expect("still present").state =
             SessionState::Parked { table };
         Ok(true)
+    }
+
+    /// Offer the full private blocks of a freshly parked table to the
+    /// prefix index, reclassifying indexed blocks from the private
+    /// table into the session's shared prefix. Returns the table of
+    /// the remaining (unindexed) private tail. No-op with the cache
+    /// off or when the session's token history is incomplete (e.g.
+    /// migrated-in sessions, whose rows have no known identity).
+    fn index_parked_blocks(&mut self, id: u64, mut table: BlockTable) -> BlockTable {
+        let Some(idx) = self.prefix.as_mut() else { return table };
+        let sess = self.sessions.get_mut(&id).expect("parking session");
+        if sess.tokens.len() != sess.len {
+            return table; // identity unknown — keep everything private
+        }
+        let bt = self.pool.block_tokens();
+        // chain hash of the existing shared prefix, recomputed from
+        // token history (cheap, and avoids carrying a stale cached
+        // hash across truncations)
+        let mut chain = ROOT;
+        for b in 0..(sess.shared_len / bt) {
+            chain = chain_hash(chain, &sess.tokens[b * bt..(b + 1) * bt]);
+        }
+        let full = table.len / bt; // trailing partial block stays private
+        let mut moved = 0;
+        while moved < full {
+            let lo = sess.shared_len + moved * bt;
+            let toks = &sess.tokens[lo..lo + bt];
+            let blk = table.blocks[moved];
+            match idx.insert(chain, toks, blk, &mut self.pool) {
+                Inserted::New(h) => {
+                    // the table's reference transfers to the shared
+                    // set; the index took its own on insert
+                    sess.shared_blocks.push(blk);
+                    chain = h;
+                }
+                Inserted::Existing { hash, block } => {
+                    // identical chain ⇒ identical KV rows from
+                    // position 0: dedup onto the canonical block and
+                    // drop our freshly stored copy
+                    self.pool.share(block);
+                    self.pool.unref(blk);
+                    sess.shared_blocks.push(block);
+                    chain = hash;
+                }
+                Inserted::Skipped => break,
+            }
+            moved += 1;
+        }
+        if moved > 0 {
+            sess.shared_len += moved * bt;
+            table.blocks.drain(..moved);
+            table.len -= moved * bt;
+        }
+        table
     }
 }

@@ -128,6 +128,11 @@ pub struct BatchPolicy {
     /// (queued + in-flight + open sessions) exceeds this. `0` =
     /// rebalancing off.
     pub rebalance_threshold: usize,
+    /// Shared-prefix KV cache (`runtime::prefix`): content-hashed
+    /// block identity with radix matching at admission and
+    /// copy-on-write paging. Off by default — with `false` the paging
+    /// stack is behaviorally bit-identical to private-only paging.
+    pub prefix_cache: bool,
 }
 
 impl Default for BatchPolicy {
@@ -140,6 +145,7 @@ impl Default for BatchPolicy {
             tenant_weights: Vec::new(),
             replicas: 1,
             rebalance_threshold: 0,
+            prefix_cache: false,
         }
     }
 }
@@ -339,6 +345,7 @@ mod tests {
         assert!(b.tenant_weights.is_empty(), "tenant frontend defaults off");
         assert_eq!(b.replicas, 1, "default is the single-replica stack");
         assert_eq!(b.rebalance_threshold, 0, "rebalancing defaults off");
+        assert!(!b.prefix_cache, "prefix sharing defaults off (bit-identical paging)");
     }
 
     #[test]

@@ -18,6 +18,10 @@
 //!                                     = load-gap migration threshold)
 //!                  [--cloud-iter-s 2e-3 --cloud-row-s 4e-4]
 //!                  [--migrate-gbps 10]
+//!                  [--prefix-share 0.3 --prefix-len 32]  (fraction of
+//!                                     arrivals carrying a shared
+//!                                     preamble; >0 turns on the
+//!                                     cloud's prefix cache)
 //!                  [--real-engine]   (virtual-clock sim; artifact-free
 //!                                     over the mock engine by default)
 //!                  [--trace fleet.trace.json]  (virtual-time Chrome
@@ -388,6 +392,8 @@ fn fleet(args: &Args) -> Result<()> {
         cloud_iter_s: args.get_f64("cloud-iter-s", base.cloud_iter_s)?,
         cloud_row_s: args.get_f64("cloud-row-s", base.cloud_row_s)?,
         migrate_gbps: args.get_f64("migrate-gbps", base.migrate_gbps)?,
+        prefix_share: args.get_f64("prefix-share", base.prefix_share)?,
+        prefix_len: args.get_usize("prefix-len", base.prefix_len)?,
         slo: slo_from(args)?,
         // keep the cost model's packing factor in step with the engine
         // actually selected on the --real-engine path
@@ -462,14 +468,14 @@ fn fleet(args: &Args) -> Result<()> {
     );
     synera::log!(
         Info,
-        "{:<7} {:>6} {:>5} {:>5} | {:>9} {:>9} {:>9} | {:>9} {:>9} | {:>7} {:>7} {:>6} {:>6} | {:>10} {:>10}",
+        "{:<7} {:>6} {:>5} {:>5} | {:>9} {:>9} {:>9} | {:>9} {:>9} | {:>7} {:>7} {:>6} {:>6} | {:>10} {:>8} {:>10}",
         "tenant", "weight", "req", "done", "ttft p50", "ttft p95", "ttft p99", "tbt p50",
-        "tbt p95", "slo-ttft", "slo-tbt", "burn-t", "burn-b", "rows", "energy",
+        "tbt p95", "slo-ttft", "slo-tbt", "burn-t", "burn-b", "rows", "pfx-rows", "energy",
     );
     for t in &rep.tenants {
         synera::log!(
             Info,
-            "{:<7} {:>6.1} {:>5} {:>5} | {:>8.0}ms {:>8.0}ms {:>8.0}ms | {:>8.1}ms {:>8.1}ms | {:>6.1}% {:>6.1}% {:>6.2} {:>6.2} | {:>10} {:>9.1}J",
+            "{:<7} {:>6.1} {:>5} {:>5} | {:>8.0}ms {:>8.0}ms {:>8.0}ms | {:>8.1}ms {:>8.1}ms | {:>6.1}% {:>6.1}% {:>6.2} {:>6.2} | {:>10} {:>8} {:>9.1}J",
             t.tenant,
             t.weight,
             t.requests,
@@ -484,6 +490,7 @@ fn fleet(args: &Args) -> Result<()> {
             t.ttft_burn,
             t.tbt_burn,
             t.rows_executed,
+            t.prefix_hit_rows,
             t.energy_j,
         );
     }

@@ -361,6 +361,13 @@ pub fn sample_scheduler<E: BatchEngine>(reg: &mut Registry, tid: usize, s: &Sche
     reg.gauge_set(&g("rows_per_tick"), rows_per_tick);
     reg.gauge_set(&g("swap_ins"), s.sessions().stats().swap_ins as f64);
     reg.gauge_set(&g("swap_outs"), s.sessions().stats().swap_outs as f64);
+    // shared-prefix cache traffic (zeros with the cache off) — these
+    // live under `paging.` because block identity is a paging-layer
+    // property, not a scheduler one
+    let ps = s.sessions().prefix_stats();
+    reg.gauge_set(&format!("paging.prefix_hits.{tid}"), ps.hits as f64);
+    reg.gauge_set(&format!("paging.prefix_misses.{tid}"), ps.misses as f64);
+    reg.gauge_set(&format!("paging.cow_copies.{tid}"), ps.cow_copies as f64);
 }
 
 /// Capture every replica of a router plus the router-level placement

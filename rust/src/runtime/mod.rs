@@ -20,9 +20,11 @@ pub mod engine;
 pub mod kv;
 pub mod meta;
 pub mod paging;
+pub mod prefix;
 pub mod weights;
 
 pub use engine::{ExecOut, Model, Runtime};
 pub use kv::KvCache;
 pub use meta::{artifacts_dir, ExecMeta, ModelMeta, ZooMeta};
 pub use paging::{BlockPool, BlockTable, SlotKv};
+pub use prefix::{PrefixIndex, PrefixStats};

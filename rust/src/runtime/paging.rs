@@ -11,6 +11,17 @@
 //! list and there is no fragmentation; a session's blocks need not be
 //! contiguous — its [`BlockTable`] records the ordering.
 //!
+//! Blocks are **refcounted** rather than exclusively owned: a freshly
+//! stored block starts at refcount 1, [`BlockPool::share`] lets the
+//! prefix cache ([`crate::runtime::prefix`]) hand the same physical
+//! block to many sessions, and [`BlockPool::unref`] only returns a
+//! block to the free list when the last reference drops. Shared blocks
+//! are immutable by convention; a writer that must diverge goes
+//! through [`BlockPool::cow`], which copies the block iff someone else
+//! still references it. Dropping a reference that is already at zero
+//! remains a hard error ("double free of block N") so accounting bugs
+//! surface as panics, never as silent aliasing.
+//!
 //! The pool is engine-agnostic: it stores whatever
 //! `BatchEngine::export_slot` produced and hands it back verbatim, so
 //! a swapped-out-then-in session's KV is bit-identical by construction
@@ -44,6 +55,18 @@ impl SlotKv {
     pub fn bytes(&self) -> usize {
         (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
     }
+
+    /// Copy of rows `[from, len)` — the private tail of a session whose
+    /// first `from` rows live in shared prefix blocks.
+    pub fn tail(&self, from: usize) -> SlotKv {
+        assert!(from <= self.len, "tail start {from} past {} rows", self.len);
+        SlotKv {
+            len: self.len - from,
+            row: self.row,
+            k: self.k[from * self.row..].to_vec(),
+            v: self.v[from * self.row..].to_vec(),
+        }
+    }
 }
 
 /// Block table of one parked session: ordered block ids plus the row
@@ -62,7 +85,8 @@ impl BlockTable {
     }
 }
 
-/// Fixed-size host KV block pool with a free-list allocator.
+/// Fixed-size host KV block pool with a free-list allocator and
+/// per-block reference counts.
 ///
 /// Backing storage grows **lazily**: `capacity` is a hard cap on live
 /// blocks, but bytes are only committed when a block is first handed
@@ -73,14 +97,13 @@ pub struct BlockPool {
     block_tokens: usize,
     /// Floats per token row (per K/V plane).
     row: usize,
-    /// Storage for the blocks materialised so far (`used.len()` blocks).
+    /// Storage for the blocks materialised so far (`refs.len()` blocks).
     k: Vec<f32>,
     v: Vec<f32>,
     /// Free ids among materialised blocks (LIFO).
     free: Vec<usize>,
-    /// Allocation bitmap over materialised blocks — turns double frees
-    /// into panics instead of silent aliasing.
-    used: Vec<bool>,
+    /// Reference count per materialised block; 0 = on the free list.
+    refs: Vec<u32>,
     capacity: usize,
 }
 
@@ -93,7 +116,7 @@ impl BlockPool {
             k: Vec::new(),
             v: Vec::new(),
             free: Vec::new(),
-            used: Vec::new(),
+            refs: Vec::new(),
             capacity,
         }
     }
@@ -105,7 +128,7 @@ impl BlockPool {
     /// Blocks still available: recycled ones plus never-materialised
     /// headroom under the capacity cap.
     pub fn free_blocks(&self) -> usize {
-        self.free.len() + (self.capacity - self.used.len())
+        self.free.len() + (self.capacity - self.refs.len())
     }
 
     pub fn block_tokens(&self) -> usize {
@@ -121,7 +144,35 @@ impl BlockPool {
         len.div_ceil(self.block_tokens)
     }
 
-    /// Copy `kv` into freshly allocated blocks (swap-out).
+    /// Current reference count of a block (0 = free).
+    pub fn ref_count(&self, blk: usize) -> u32 {
+        self.refs[blk]
+    }
+
+    /// Pop a block off the free list or materialise a fresh one under
+    /// the capacity cap; the block comes back with refcount 1.
+    fn alloc_block(&mut self) -> Result<usize> {
+        let blk = match self.free.pop() {
+            Some(blk) => blk,
+            None => {
+                if self.refs.len() >= self.capacity {
+                    bail!("block pool exhausted: capacity {}", self.capacity);
+                }
+                let blk = self.refs.len();
+                let n = self.block_tokens * self.row;
+                self.k.resize(self.k.len() + n, 0.0);
+                self.v.resize(self.v.len() + n, 0.0);
+                self.refs.push(0);
+                blk
+            }
+        };
+        debug_assert!(self.refs[blk] == 0, "free list handed out a live block");
+        self.refs[blk] = 1;
+        Ok(blk)
+    }
+
+    /// Copy `kv` into freshly allocated blocks (swap-out). Every block
+    /// starts with refcount 1, owned by the returned table.
     pub fn store(&mut self, kv: &SlotKv) -> Result<BlockTable> {
         if kv.row != self.row {
             bail!("kv row width {} != pool row width {}", kv.row, self.row);
@@ -132,20 +183,7 @@ impl BlockPool {
         }
         let mut blocks = Vec::with_capacity(need);
         for b in 0..need {
-            let blk = match self.free.pop() {
-                Some(blk) => blk,
-                None => {
-                    // materialise a fresh block under the capacity cap
-                    let blk = self.used.len();
-                    let n = self.block_tokens * self.row;
-                    self.k.resize(self.k.len() + n, 0.0);
-                    self.v.resize(self.v.len() + n, 0.0);
-                    self.used.push(false);
-                    blk
-                }
-            };
-            debug_assert!(!self.used[blk], "free list handed out a live block");
-            self.used[blk] = true;
+            let blk = self.alloc_block()?;
             let rows_here = (kv.len - b * self.block_tokens).min(self.block_tokens);
             let n = rows_here * self.row;
             let src = b * self.block_tokens * self.row;
@@ -157,17 +195,57 @@ impl BlockPool {
         Ok(BlockTable { blocks, len: kv.len })
     }
 
-    /// Materialise a parked session's rows (swap-in).
-    pub fn load(&self, table: &BlockTable) -> SlotKv {
+    /// Take an additional reference on a live block (prefix sharing).
+    pub fn share(&mut self, blk: usize) {
+        assert!(self.refs[blk] > 0, "share of freed block {blk}");
+        self.refs[blk] += 1;
+    }
+
+    /// Drop one reference; the block is reclaimed onto the free list
+    /// only when the count reaches 0. Dropping a reference on a block
+    /// already at zero panics (accounting bugs surface as test
+    /// failures, not aliasing).
+    pub fn unref(&mut self, blk: usize) {
+        assert!(self.refs[blk] > 0, "double free of block {blk}");
+        self.refs[blk] -= 1;
+        if self.refs[blk] == 0 {
+            self.free.push(blk);
+        }
+    }
+
+    /// Copy-on-write: make `blk` safe for exclusive mutation. If the
+    /// caller holds the only reference the block is returned as-is;
+    /// otherwise its contents are copied into a fresh block, the
+    /// caller's reference moves to the copy, and `true` reports that a
+    /// copy happened (the original keeps its remaining references and
+    /// stays bit-identical).
+    pub fn cow(&mut self, blk: usize) -> Result<(usize, bool)> {
+        assert!(self.refs[blk] > 0, "cow of freed block {blk}");
+        if self.refs[blk] == 1 {
+            return Ok((blk, false));
+        }
+        let fresh = self.alloc_block()?;
+        let n = self.block_tokens * self.row;
+        let (src, dst) = (blk * n, fresh * n);
+        self.k.copy_within(src..src + n, dst);
+        self.v.copy_within(src..src + n, dst);
+        self.refs[blk] -= 1;
+        Ok((fresh, true))
+    }
+
+    /// Materialise `len` rows spread across `blocks` in order (the
+    /// last block may be partial). Works for any block-id sequence, so
+    /// a session's shared prefix and private tail can be concatenated.
+    pub fn load_blocks(&self, blocks: &[usize], len: usize) -> SlotKv {
         let mut kv = SlotKv {
-            len: table.len,
+            len,
             row: self.row,
-            k: vec![0.0; table.len * self.row],
-            v: vec![0.0; table.len * self.row],
+            k: vec![0.0; len * self.row],
+            v: vec![0.0; len * self.row],
         };
-        for (b, &blk) in table.blocks.iter().enumerate() {
-            assert!(self.used[blk], "load from a freed block");
-            let rows_here = (table.len - b * self.block_tokens).min(self.block_tokens);
+        for (b, &blk) in blocks.iter().enumerate() {
+            assert!(self.refs[blk] > 0, "load from a freed block");
+            let rows_here = (len - b * self.block_tokens).min(self.block_tokens);
             let n = rows_here * self.row;
             let src = blk * self.block_tokens * self.row;
             let dst = b * self.block_tokens * self.row;
@@ -177,13 +255,16 @@ impl BlockPool {
         kv
     }
 
-    /// Return a table's blocks to the free list. Freeing a block twice
-    /// panics (accounting bugs surface as test failures, not aliasing).
+    /// Materialise a parked session's rows (swap-in).
+    pub fn load(&self, table: &BlockTable) -> SlotKv {
+        self.load_blocks(&table.blocks, table.len)
+    }
+
+    /// Drop the table's reference on each of its blocks. Blocks still
+    /// shared elsewhere survive; exclusively-owned ones are reclaimed.
     pub fn release(&mut self, table: BlockTable) {
         for blk in table.blocks {
-            assert!(self.used[blk], "double free of block {blk}");
-            self.used[blk] = false;
-            self.free.push(blk);
+            self.unref(blk);
         }
     }
 }
@@ -273,5 +354,73 @@ mod tests {
         assert_eq!(pool.free_blocks(), 2);
         assert_eq!(pool.load(&t), SlotKv::empty(2));
         pool.release(t);
+    }
+
+    #[test]
+    fn shared_block_survives_until_last_unref() {
+        let mut pool = BlockPool::new(4, 2, 2);
+        let kv = sample_kv(2, 2, 3.0);
+        let t = pool.store(&kv).unwrap();
+        let blk = t.blocks[0];
+        pool.share(blk);
+        pool.share(blk);
+        assert_eq!(pool.ref_count(blk), 3);
+        pool.release(t); // ref 3 → 2, block still live
+        assert_eq!(pool.ref_count(blk), 2);
+        assert_eq!(pool.load_blocks(&[blk], 2), kv);
+        pool.unref(blk);
+        assert_eq!(pool.free_blocks(), 3);
+        pool.unref(blk); // last reference → reclaimed
+        assert_eq!(pool.ref_count(blk), 0);
+        assert_eq!(pool.free_blocks(), 4);
+    }
+
+    #[test]
+    fn cow_is_in_place_for_sole_owner() {
+        let mut pool = BlockPool::new(4, 2, 2);
+        let t = pool.store(&sample_kv(2, 2, 0.0)).unwrap();
+        let (blk, copied) = pool.cow(t.blocks[0]).unwrap();
+        assert_eq!(blk, t.blocks[0]);
+        assert!(!copied);
+        pool.release(t);
+    }
+
+    #[test]
+    fn cow_copies_and_leaves_original_bit_identical() {
+        let mut pool = BlockPool::new(4, 2, 2);
+        let kv = sample_kv(2, 2, 9.0);
+        let t = pool.store(&kv).unwrap();
+        let orig = t.blocks[0];
+        pool.share(orig); // second reference forces a real copy
+        let (fresh, copied) = pool.cow(orig).unwrap();
+        assert!(copied);
+        assert_ne!(fresh, orig);
+        assert_eq!(pool.ref_count(orig), 1);
+        assert_eq!(pool.ref_count(fresh), 1);
+        assert_eq!(pool.load_blocks(&[orig], 2), kv);
+        assert_eq!(pool.load_blocks(&[fresh], 2), kv);
+        pool.unref(fresh);
+        pool.release(t);
+        assert_eq!(pool.free_blocks(), 4);
+    }
+
+    #[test]
+    fn cow_under_exhaustion_is_an_error() {
+        let mut pool = BlockPool::new(1, 2, 2);
+        let t = pool.store(&sample_kv(2, 2, 0.0)).unwrap();
+        pool.share(t.blocks[0]);
+        assert!(pool.cow(t.blocks[0]).is_err());
+        pool.unref(t.blocks[0]);
+        pool.release(t);
+    }
+
+    #[test]
+    fn tail_slices_rows() {
+        let kv = sample_kv(5, 3, 0.0);
+        let tail = kv.tail(2);
+        assert_eq!(tail.len, 3);
+        assert_eq!(tail.k, kv.k[6..]);
+        assert_eq!(tail.v, kv.v[6..]);
+        assert_eq!(kv.tail(5), SlotKv::empty(3));
     }
 }

@@ -1,0 +1,359 @@
+//! Shared-prefix KV cache: content-hashed block identity plus a
+//! radix-style prefix index over the [`BlockPool`].
+//!
+//! Fleet workloads overwhelmingly share system prompts and few-shot
+//! preambles, but plain paging (PR 2) stores every session's KV
+//! privately — the same preamble is prefilled and resident once *per
+//! session*. This module gives pool blocks a **content identity**: the
+//! chain hash of all token ids from position 0 through the end of the
+//! block (a rolling FNV-1a seeded by the covering prefix's hash). Two
+//! blocks with the same chain hash cover the same token sequence from
+//! the same starting context, so their KV rows are interchangeable and
+//! one physical block can serve every session that shares the prefix.
+//!
+//! The [`PrefixIndex`] is the radix structure over those identities:
+//! each entry points at its parent entry (the chain hash of the prefix
+//! one block shorter), so matching an incoming prompt is a walk from
+//! the root taking one full block per step. **Only full blocks are
+//! indexable** — a partially filled block has no stable identity yet —
+//! which makes "radix matching never matches a partial block" true by
+//! construction. Hash collisions are handled safely, not assumed away:
+//! a match requires the stored token ids and parent to compare equal,
+//! and an insert that collides with a different chain is skipped.
+//!
+//! Ownership: the index holds exactly one pool reference per entry
+//! (taken via [`BlockPool::share`] at insert, dropped via
+//! [`BlockPool::unref`] at trim), in addition to whatever references
+//! matching sessions hold. A shared block is therefore reclaimed only
+//! after the index *and* every session drop it — refcount 0 — and
+//! mutation of shared rows goes through [`BlockPool::cow`]. Under
+//! memory pressure [`PrefixIndex::trim`] evicts leaf entries in
+//! least-recently-hit order (deterministic: ties break on hash), so
+//! interior entries — prefixes other cached chains extend — are never
+//! orphaned.
+
+use std::collections::HashMap;
+
+use crate::runtime::paging::BlockPool;
+
+/// Chain hash of the empty prefix (the radix root).
+pub const ROOT: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Rolling content hash of one full block given the chain hash of the
+/// prefix it extends: FNV-1a over the token-id bytes, seeded by
+/// `parent`. Identity covers the whole chain — the same token ids
+/// after a *different* prefix hash differently.
+pub fn chain_hash(parent: u64, tokens: &[u32]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = parent;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+/// One matched full block: its chain hash and the pool block that
+/// holds its KV rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixHit {
+    pub hash: u64,
+    pub block: usize,
+}
+
+/// Outcome of offering a block to the index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Inserted {
+    /// Entry created; the index now holds one reference on `block`.
+    New(u64),
+    /// An equivalent chain entry already exists — the caller should
+    /// dedup onto `block` (drop its own copy, share this one).
+    Existing { hash: u64, block: usize },
+    /// Hash collision with a different chain, or the parent entry was
+    /// trimmed; the block stays private and unindexed.
+    Skipped,
+}
+
+/// Prefix-cache counters, surfaced as `paging.prefix_*` gauges.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PrefixStats {
+    /// Admissions that matched ≥ 1 full block.
+    pub hits: u64,
+    /// Admissions (with the cache enabled) that matched nothing.
+    pub misses: u64,
+    /// Total prompt rows covered by matched shared blocks.
+    pub hit_rows: u64,
+    /// Shared blocks privatised by copy-on-write.
+    pub cow_copies: u64,
+}
+
+struct Entry {
+    /// Chain hash of the covering prefix ([`ROOT`] for the first block).
+    parent: u64,
+    /// Exact token ids this block covers (collision guard).
+    tokens: Vec<u32>,
+    /// Pool block holding the KV rows.
+    block: usize,
+    /// Logical clock of the last match (LRU trim order).
+    last_hit: u64,
+    /// Live child entries; only leaves (0) are trimmable.
+    children: u32,
+}
+
+/// Radix-style index from chain hash → shared pool block.
+pub struct PrefixIndex {
+    entries: HashMap<u64, Entry>,
+    block_tokens: usize,
+    clock: u64,
+}
+
+impl PrefixIndex {
+    pub fn new(block_tokens: usize) -> PrefixIndex {
+        assert!(block_tokens > 0, "degenerate block geometry");
+        PrefixIndex { entries: HashMap::new(), block_tokens, clock: 0 }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Indexed entries (== pool references held by the index).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Walk the radix chain over `prompt`, matching one **full** block
+    /// per step, never past `max_rows`. Returns the matched blocks in
+    /// prefix order; the caller takes its own pool reference on each
+    /// (`share`) before using them. Matched entries are touched for
+    /// LRU purposes.
+    pub fn match_prefix(&mut self, prompt: &[u32], max_rows: usize) -> Vec<PrefixHit> {
+        let bt = self.block_tokens;
+        let cap = max_rows.min(prompt.len());
+        let mut hits = Vec::new();
+        let mut parent = ROOT;
+        let mut off = 0;
+        while off + bt <= cap {
+            let want = &prompt[off..off + bt];
+            let h = chain_hash(parent, want);
+            match self.entries.get_mut(&h) {
+                Some(e) if e.parent == parent && e.tokens == want => {
+                    self.clock += 1;
+                    e.last_hit = self.clock;
+                    hits.push(PrefixHit { hash: h, block: e.block });
+                    parent = h;
+                    off += bt;
+                }
+                _ => break,
+            }
+        }
+        hits
+    }
+
+    /// Offer one full block (covering `tokens`, extending the chain at
+    /// `parent`) to the index. On [`Inserted::New`] the index takes its
+    /// own reference on `block`; on [`Inserted::Existing`] the caller
+    /// should switch to the returned block and drop its own copy.
+    pub fn insert(
+        &mut self,
+        parent: u64,
+        tokens: &[u32],
+        block: usize,
+        pool: &mut BlockPool,
+    ) -> Inserted {
+        assert_eq!(tokens.len(), self.block_tokens, "only full blocks are indexable");
+        let h = chain_hash(parent, tokens);
+        if let Some(e) = self.entries.get_mut(&h) {
+            return if e.parent == parent && e.tokens == tokens {
+                self.clock += 1;
+                e.last_hit = self.clock;
+                Inserted::Existing { hash: h, block: e.block }
+            } else {
+                Inserted::Skipped
+            };
+        }
+        if parent != ROOT {
+            // chain integrity: never index a block whose covering
+            // prefix is not itself indexed (it could never be matched)
+            match self.entries.get_mut(&parent) {
+                Some(p) => p.children += 1,
+                None => return Inserted::Skipped,
+            }
+        }
+        pool.share(block);
+        self.clock += 1;
+        self.entries
+            .insert(h, Entry { parent, tokens: tokens.to_vec(), block, last_hit: self.clock, children: 0 });
+        Inserted::New(h)
+    }
+
+    /// Evict leaf entries (least-recently-hit first, hash-tie-broken —
+    /// deterministic regardless of map iteration order) until the pool
+    /// has `need` free blocks or nothing droppable remains. Dropping an
+    /// entry releases only the *index's* reference; blocks still held
+    /// by sessions stay live and simply stop matching new admissions.
+    pub fn trim(&mut self, pool: &mut BlockPool, need: usize) {
+        while pool.free_blocks() < need && !self.entries.is_empty() {
+            let mut leaves: Vec<(u64, u64)> = self
+                .entries
+                .iter()
+                .filter(|(_, e)| e.children == 0)
+                .map(|(&h, e)| (e.last_hit, h))
+                .collect();
+            if leaves.is_empty() {
+                return;
+            }
+            leaves.sort_unstable();
+            for (_, h) in leaves {
+                if pool.free_blocks() >= need {
+                    return;
+                }
+                let e = self.entries.remove(&h).expect("leaf collected this round");
+                if e.parent != ROOT {
+                    if let Some(p) = self.entries.get_mut(&e.parent) {
+                        p.children -= 1;
+                    }
+                }
+                pool.unref(e.block);
+            }
+        }
+    }
+
+    /// Drop every entry, releasing the index's pool references.
+    pub fn clear(&mut self, pool: &mut BlockPool) {
+        for (_, e) in self.entries.drain() {
+            pool.unref(e.block);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::paging::SlotKv;
+
+    fn kv(len: usize, row: usize, salt: f32) -> SlotKv {
+        SlotKv {
+            len,
+            row,
+            k: (0..len * row).map(|i| i as f32 + salt).collect(),
+            v: (0..len * row).map(|i| -(i as f32) - salt).collect(),
+        }
+    }
+
+    #[test]
+    fn chain_hash_depends_on_parent_and_tokens() {
+        let a = chain_hash(ROOT, &[1, 2, 3, 4]);
+        let b = chain_hash(ROOT, &[1, 2, 3, 5]);
+        let c = chain_hash(a, &[1, 2, 3, 4]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, chain_hash(ROOT, &[1, 2, 3, 4]));
+    }
+
+    #[test]
+    fn insert_then_match_walks_the_chain() {
+        let mut pool = BlockPool::new(8, 4, 2);
+        let mut idx = PrefixIndex::new(4);
+        let prompt: Vec<u32> = (10..20).collect(); // 2 full blocks + 2 spare
+        let t = pool.store(&kv(8, 2, 0.0)).unwrap();
+        let h0 = match idx.insert(ROOT, &prompt[0..4], t.blocks[0], &mut pool) {
+            Inserted::New(h) => h,
+            other => panic!("expected New, got {other:?}"),
+        };
+        assert!(matches!(
+            idx.insert(h0, &prompt[4..8], t.blocks[1], &mut pool),
+            Inserted::New(_)
+        ));
+        let hits = idx.match_prefix(&prompt, prompt.len());
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].block, t.blocks[0]);
+        assert_eq!(hits[1].block, t.blocks[1]);
+        // a diverging prompt matches only the common prefix
+        let mut other = prompt.clone();
+        other[5] = 999;
+        assert_eq!(idx.match_prefix(&other, other.len()).len(), 1);
+        // index holds one ref per entry on top of the table's
+        assert_eq!(pool.ref_count(t.blocks[0]), 2);
+        idx.clear(&mut pool);
+        pool.release(t);
+        assert_eq!(pool.free_blocks(), 8);
+    }
+
+    #[test]
+    fn partial_blocks_never_match() {
+        let mut pool = BlockPool::new(8, 4, 2);
+        let mut idx = PrefixIndex::new(4);
+        let prompt: Vec<u32> = (10..18).collect();
+        let t = pool.store(&kv(8, 2, 0.0)).unwrap();
+        idx.insert(ROOT, &prompt[0..4], t.blocks[0], &mut pool);
+        // max_rows caps below a full second step — and a 7-token probe
+        // can cover only one full block
+        assert_eq!(idx.match_prefix(&prompt, 7).len(), 1);
+        assert_eq!(idx.match_prefix(&prompt[..7], prompt.len()).len(), 1);
+        assert_eq!(idx.match_prefix(&prompt[..3], prompt.len()).len(), 0);
+        idx.clear(&mut pool);
+        pool.release(t);
+    }
+
+    #[test]
+    fn existing_entry_dedups_instead_of_duplicating() {
+        let mut pool = BlockPool::new(8, 4, 2);
+        let mut idx = PrefixIndex::new(4);
+        let toks: Vec<u32> = (1..5).collect();
+        let a = pool.store(&kv(4, 2, 0.0)).unwrap();
+        let b = pool.store(&kv(4, 2, 0.0)).unwrap();
+        let h = match idx.insert(ROOT, &toks, a.blocks[0], &mut pool) {
+            Inserted::New(h) => h,
+            other => panic!("expected New, got {other:?}"),
+        };
+        match idx.insert(ROOT, &toks, b.blocks[0], &mut pool) {
+            Inserted::Existing { hash, block } => {
+                assert_eq!(hash, h);
+                assert_eq!(block, a.blocks[0]);
+            }
+            other => panic!("expected Existing, got {other:?}"),
+        }
+        // no reference was taken on b's block
+        assert_eq!(pool.ref_count(b.blocks[0]), 1);
+        idx.clear(&mut pool);
+        pool.release(a);
+        pool.release(b);
+    }
+
+    #[test]
+    fn trim_drops_lru_leaves_first_and_never_interior_entries() {
+        let mut pool = BlockPool::new(4, 2, 2);
+        let mut idx = PrefixIndex::new(2);
+        // chain A: two blocks; chain B: one block → pool full (refs
+        // held by the index only once tables are released)
+        let a = pool.store(&kv(4, 2, 0.0)).unwrap();
+        let b = pool.store(&kv(2, 2, 9.0)).unwrap();
+        let ha = match idx.insert(ROOT, &[1, 2], a.blocks[0], &mut pool) {
+            Inserted::New(h) => h,
+            other => panic!("{other:?}"),
+        };
+        idx.insert(ha, &[3, 4], a.blocks[1], &mut pool);
+        idx.insert(ROOT, &[7, 8], b.blocks[0], &mut pool);
+        pool.release(a);
+        pool.release(b);
+        assert_eq!(pool.free_blocks(), 1);
+        // touch chain B so chain A's leaf is the LRU
+        idx.match_prefix(&[7, 8], 2);
+        idx.trim(&mut pool, 2);
+        assert_eq!(pool.free_blocks(), 2);
+        // the interior entry (ha) must have survived its leaf; chain B intact
+        assert_eq!(idx.match_prefix(&[1, 2, 3, 4], 4).len(), 1);
+        assert_eq!(idx.match_prefix(&[7, 8], 2).len(), 1);
+        // asking for everything drops the whole index
+        idx.trim(&mut pool, 4);
+        assert!(idx.is_empty());
+        assert_eq!(pool.free_blocks(), 4);
+    }
+}

@@ -43,7 +43,7 @@ use crate::profiling::OffloadProfile;
 use crate::sim::clock::EventQueue;
 use crate::testutil::MockBatchEngine;
 use crate::util::rng::Rng;
-use crate::workload::synthlang::TASKS;
+use crate::workload::synthlang::{shared_preamble, TASKS};
 use crate::workload::trace::{mmpp_trace, poisson_trace, BurstProfile};
 use crate::workload::vocab::{EOS, N_VALS, VAL0, VOCAB};
 
@@ -93,6 +93,18 @@ pub struct FleetConfig {
     pub slo: SloPolicy,
     /// Latency-sample reservoir per tenant recorder (0 = retain all).
     pub reservoir: usize,
+    /// Fraction of arrivals whose prompt is prefixed with a shared
+    /// preamble ([`crate::workload::synthlang::shared_preamble`]);
+    /// `> 0` also turns on the cloud's prefix cache
+    /// (`BatchPolicy::prefix_cache`). `0.0` leaves the arrival trace
+    /// and the paging path bit-identical to a build without prefix
+    /// sharing: the preamble RNG stream is never created and no extra
+    /// draws occur.
+    pub prefix_share: f64,
+    /// Shared-preamble length in tokens (only read when
+    /// `prefix_share > 0`); multiples of the 16-token KV block size
+    /// dedup fully.
+    pub prefix_len: usize,
     pub seed: u64,
     /// Cloud model label for the cost model's packing factor.
     pub cloud_model: String,
@@ -125,6 +137,8 @@ impl Default for FleetConfig {
             device_profile: DeviceProfile::jetson_orin_50w(),
             slo: SloPolicy::default(),
             reservoir: 1 << 16,
+            prefix_share: 0.0,
+            prefix_len: 32,
             seed: 0xF1EE7,
             cloud_model: "l13b".into(),
             trace: None,
@@ -158,6 +172,9 @@ pub struct TenantReport {
     pub rows_executed: u64,
     pub verifies_done: u64,
     pub draft_tokens_accepted: u64,
+    /// Prompt rows served from shared prefix blocks at admission
+    /// (rows the cloud never had to prefill).
+    pub prefix_hit_rows: u64,
     /// Device-side energy for this tenant's fleet slice: drafting
     /// J/token plus radio J/byte over uplink, downlink and migration
     /// traffic ([`crate::metrics::energy::EnergyModel`]).
@@ -862,11 +879,20 @@ pub fn run_fleet_on<E: BatchEngine>(
     if engines.len() != replicas {
         bail!("{} engines for {} configured replicas", engines.len(), replicas);
     }
+    if !(0.0..=1.0).contains(&cfg.prefix_share) || !cfg.prefix_share.is_finite() {
+        bail!("prefix_share must be in [0, 1], got {}", cfg.prefix_share);
+    }
+    if cfg.prefix_share > 0.0 && cfg.prefix_len == 0 {
+        bail!("prefix_share > 0 needs prefix_len >= 1");
+    }
 
     let t_wall = Instant::now();
     let mut policy = cfg.params.batch.clone();
     policy.tenant_weights = weights.clone();
     policy.replicas = replicas;
+    if cfg.prefix_share > 0.0 {
+        policy.prefix_cache = true;
+    }
     // replica 0 keeps the exact pre-router seed, so an R = 1 fleet is
     // event-for-event identical to the single-scheduler driver it
     // replaced (gated by `same_seed_gives_bit_identical_reports`)
@@ -930,8 +956,23 @@ pub fn run_fleet_on<E: BatchEngine>(
             poisson_trace(cfg.seed ^ 0x7ACE, cfg.n_devices, cfg.rate_rps, cfg.duration_s, &TASKS)
         }
     };
+    // shared-preamble injection: a dedicated RNG stream (never created
+    // at share 0, so the trace above stays draw-for-draw identical)
+    // decides per arrival whether it carries a preamble and from which
+    // family, then prepends the deterministic preamble tokens
+    let mut pre_rng =
+        (cfg.prefix_share > 0.0).then(|| Rng::new(cfg.seed ^ 0x5052_4546_4958)); // "PREFIX"
+    const PREAMBLE_FAMILIES: u64 = 4;
     for ev in trace {
-        run.q.push(ev.at_s, Ev::Arrive { device: ev.device as u32, prompt: ev.sample.prompt });
+        let mut prompt = ev.sample.prompt;
+        if let Some(rng) = pre_rng.as_mut() {
+            if rng.f64() < cfg.prefix_share {
+                let mut p = shared_preamble(rng.below(PREAMBLE_FAMILIES), cfg.prefix_len);
+                p.extend_from_slice(&prompt);
+                prompt = p;
+            }
+        }
+        run.q.push(ev.at_s, Ev::Arrive { device: ev.device as u32, prompt });
     }
 
     // drain the event heap; the cap is a runaway-loop backstop, far
@@ -1004,6 +1045,7 @@ pub fn run_fleet_on<E: BatchEngine>(
             tstats[t].rows_executed += ts.rows_executed;
             tstats[t].verifies_done += ts.verifies_done;
             tstats[t].draft_tokens_accepted += ts.draft_tokens_accepted;
+            tstats[t].prefix_hit_rows += ts.prefix_hit_rows;
         }
     }
     let mut tenants = Vec::with_capacity(cfg.tenants);
@@ -1026,6 +1068,7 @@ pub fn run_fleet_on<E: BatchEngine>(
             rows_executed: tstats[t].rows_executed,
             verifies_done: tstats[t].verifies_done,
             draft_tokens_accepted: tstats[t].draft_tokens_accepted,
+            prefix_hit_rows: tstats[t].prefix_hit_rows,
             energy_j: acc.energy.total_joules(),
         });
     }

@@ -278,6 +278,23 @@ fn gen_sensorqa(rng: &mut Rng) -> Sample {
     Sample { task: Task::Sensorqa, prompt, answer: vec![mode, UNIT] }
 }
 
+/// Seed salt for [`shared_preamble`]; disjoint from every `sample_seed`
+/// stream so preamble tokens never correlate with sample bodies.
+const PREAMBLE_SALT: u64 = 0x5052_4541_4D42_4C45; // "PREAMBLE"
+
+/// Deterministic shared preamble of `len` tokens for preamble family
+/// `family` — a stand-in for the system prompts / few-shot headers that
+/// real serving traffic repeats verbatim across requests. Same
+/// `(family, len)` ⇒ identical token sequence on every call, so two
+/// requests drawing the same family share a byte-identical prompt
+/// prefix that the cloud's prefix cache can deduplicate. Tokens are
+/// plain value tokens: prepending a preamble never changes what a
+/// sample's answer means, only where its body starts.
+pub fn shared_preamble(family: u64, len: usize) -> Vec<u32> {
+    let mut rng = Rng::new(hash2(WORLD_SEED, family, PREAMBLE_SALT));
+    (0..len).map(|_| VAL0 + rng.below(N_VALS) as u32).collect()
+}
+
 /// Cross-language entry point: same `(task, split, index)` → same sample
 /// as `synthlang.generate` in Python. `split`: 0 = train, 1 = eval.
 pub fn generate(task: Task, split: u64, index: u64) -> Sample {
@@ -327,6 +344,20 @@ mod tests {
                 assert!(!s.answer.is_empty());
             }
         }
+    }
+
+    #[test]
+    fn shared_preamble_is_deterministic_and_family_keyed() {
+        let a = shared_preamble(0, 32);
+        let b = shared_preamble(0, 32);
+        let c = shared_preamble(1, 32);
+        assert_eq!(a, b, "same family ⇒ identical preamble");
+        assert_ne!(a, c, "families produce distinct preambles");
+        assert_eq!(a.len(), 32);
+        assert!(a.iter().all(|&t| t >= VAL0 && t < VAL0 + N_VALS as u32));
+        // longer request for the same family shares the short one as a prefix
+        let long = shared_preamble(0, 48);
+        assert_eq!(&long[..32], &a[..]);
     }
 
     #[test]

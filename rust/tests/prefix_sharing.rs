@@ -1,0 +1,581 @@
+//! Shared-prefix KV cache gates (artifact-free): refcount conservation
+//! over the [`BlockPool`]/[`PrefixIndex`] pair under randomized
+//! admit/park/release traffic, copy-on-write divergence that leaves the
+//! canonical block bit-identical for its other holders, full-block-only
+//! radix matching, migration round trips without cross-replica
+//! aliasing, same-seed fleet determinism with sharing enabled, and the
+//! Fig 15d knee direction (host blocks per admitted session fall as the
+//! prefix-share ratio rises).
+
+use std::collections::{HashMap, HashSet};
+
+use synera::cloud::scheduler::{CloudRequest, Scheduler};
+use synera::cloud::sessions::{SessionManager, BLOCK_TOKENS};
+use synera::config::{BatchPolicy, SyneraParams};
+use synera::model::cloud_engine::{BatchEngine, SlotChunk, SlotOwner};
+use synera::net::wire::Dist;
+use synera::runtime::prefix::{chain_hash, Inserted, ROOT};
+use synera::runtime::{BlockPool, PrefixIndex, SlotKv};
+use synera::sim::{run_fleet, FleetConfig};
+use synera::testutil::{check, usize_in, MockBatchEngine, MOCK_KV_ROW};
+
+fn dense_dists(n: usize, vocab: usize) -> Vec<Dist> {
+    vec![Dist::Dense(vec![1.0 / vocab as f32; vocab]); n]
+}
+
+fn shared_policy(max_sessions: usize) -> BatchPolicy {
+    BatchPolicy { max_sessions, prefix_cache: true, ..BatchPolicy::default() }
+}
+
+/// Reference KV image: what the mock engine commits for `tokens` from
+/// position 0 (content + position addressed, so any session holding the
+/// same chain at the same positions holds bit-identical rows).
+fn reference_kv(tokens: &[u32]) -> SlotKv {
+    let mut eng = MockBatchEngine::new(1, tokens.len().max(1), 64, tokens.len().max(1));
+    let slot = eng.alloc_slot(SlotOwner::Request(999)).unwrap();
+    eng.run_batch(&[SlotChunk { slot, tokens: tokens.to_vec() }]).unwrap();
+    eng.export_slot(slot)
+}
+
+/// Deterministic per-family prompt material (distinct families never
+/// share a first block, so their chains never collide).
+fn family_tokens(family: u64, len: usize) -> Vec<u32> {
+    (0..len).map(|i| 9 + ((family * 17 + i as u64) % 31) as u32).collect()
+}
+
+/// Property: randomized admit / park / release traffic over the raw
+/// pool + index pair conserves references exactly — the pool's live
+/// block set always equals the union of per-session private blocks,
+/// per-session shared blocks and index-held canonicals, with the shadow
+/// refcount matching `ref_count` block by block. Full teardown returns
+/// every block to the free list.
+#[test]
+fn prop_pool_and_index_conserve_refcounts() {
+    struct Sess {
+        tokens: Vec<u32>,
+        shared: Vec<usize>,
+        table: Option<synera::runtime::BlockTable>,
+    }
+    check("prefix pool/index refcount conservation", |rng| {
+        let bt = 4usize;
+        let cap = 1024usize; // far past any reachable footprint: store never exhausts
+        let row = 2usize;
+        let mut pool = BlockPool::new(cap, bt, row);
+        let mut idx = PrefixIndex::new(bt);
+        let mut refs: HashMap<usize, u32> = HashMap::new();
+        let mut idx_blocks: HashSet<usize> = HashSet::new();
+        let mut sessions: Vec<Sess> = Vec::new();
+
+        let audit = |pool: &BlockPool,
+                     refs: &HashMap<usize, u32>,
+                     idx_blocks: &HashSet<usize>,
+                     sessions: &[Sess]|
+         -> Result<(), String> {
+            let in_use = pool.capacity() - pool.free_blocks();
+            if in_use != refs.len() {
+                return Err(format!("{in_use} blocks in use, shadow says {}", refs.len()));
+            }
+            for (&b, &r) in refs {
+                if pool.ref_count(b) != r {
+                    return Err(format!("block {b}: refs {} vs shadow {r}", pool.ref_count(b)));
+                }
+            }
+            let mut live: HashSet<usize> = idx_blocks.clone();
+            for s in sessions {
+                live.extend(s.shared.iter().copied());
+                if let Some(t) = &s.table {
+                    live.extend(t.blocks.iter().copied());
+                }
+            }
+            if live.len() != refs.len() {
+                return Err(format!(
+                    "live set {} != private+shared+index {}",
+                    refs.len(),
+                    live.len()
+                ));
+            }
+            Ok(())
+        };
+
+        for _ in 0..usize_in(rng, 20, 80) {
+            match rng.below(3) {
+                // admit: radix-match a family prompt, take shared refs
+                0 => {
+                    let family = rng.below(3);
+                    let len = usize_in(rng, 2, 5) * bt;
+                    let tokens = family_tokens(family, len);
+                    let mut shared = Vec::new();
+                    for hit in idx.match_prefix(&tokens, tokens.len() - 1) {
+                        pool.share(hit.block);
+                        *refs.get_mut(&hit.block).expect("matched block live") += 1;
+                        shared.push(hit.block);
+                    }
+                    // partial blocks are never matched — and the final
+                    // block is withheld so at least one row is left
+                    assert!(shared.len() * bt <= tokens.len() - 1);
+                    sessions.push(Sess { tokens, shared, table: None });
+                }
+                // park the session's tail, then offer full blocks to
+                // the index (dedup onto canonicals where chains meet)
+                1 => {
+                    let parked: Vec<usize> = (0..sessions.len())
+                        .filter(|&i| sessions[i].table.is_none())
+                        .collect();
+                    if parked.is_empty() {
+                        continue;
+                    }
+                    let si = parked[usize_in(rng, 0, parked.len() - 1)];
+                    let s = &mut sessions[si];
+                    let matched = s.shared.len() * bt;
+                    let rows = s.tokens.len() - matched;
+                    let kv = SlotKv {
+                        len: rows,
+                        row,
+                        k: vec![si as f32; rows * row],
+                        v: vec![-(si as f32); rows * row],
+                    };
+                    let mut table = pool.store(&kv).map_err(|e| e.to_string())?;
+                    for &b in &table.blocks {
+                        refs.insert(b, 1);
+                    }
+                    let mut parent = ROOT;
+                    for c in s.tokens[..matched].chunks(bt) {
+                        parent = chain_hash(parent, c);
+                    }
+                    let mut off = matched;
+                    while off + bt <= s.tokens.len() && !table.blocks.is_empty() {
+                        let want = &s.tokens[off..off + bt];
+                        let blk = table.blocks.remove(0);
+                        match idx.insert(parent, want, blk, &mut pool) {
+                            Inserted::New(h) => {
+                                *refs.get_mut(&blk).unwrap() += 1;
+                                idx_blocks.insert(blk);
+                                s.shared.push(blk);
+                                parent = h;
+                            }
+                            Inserted::Existing { hash, block } => {
+                                pool.share(block);
+                                *refs.get_mut(&block).unwrap() += 1;
+                                pool.unref(blk);
+                                refs.remove(&blk);
+                                s.shared.push(block);
+                                parent = hash;
+                            }
+                            Inserted::Skipped => {
+                                table.blocks.insert(0, blk);
+                                break;
+                            }
+                        }
+                        off += bt;
+                    }
+                    table.len = s.tokens.len() - s.shared.len() * bt;
+                    s.table = Some(table);
+                }
+                // release: drop shared refs and the private tail
+                _ => {
+                    if sessions.is_empty() {
+                        continue;
+                    }
+                    let s = sessions.swap_remove(usize_in(rng, 0, sessions.len() - 1));
+                    for b in s.shared {
+                        pool.unref(b);
+                        let r = refs.get_mut(&b).expect("shared block live");
+                        *r -= 1;
+                        if *r == 0 {
+                            refs.remove(&b);
+                        }
+                    }
+                    if let Some(t) = s.table {
+                        for &b in &t.blocks {
+                            let r = refs.get_mut(&b).expect("private block live");
+                            *r -= 1;
+                            if *r == 0 {
+                                refs.remove(&b);
+                            }
+                        }
+                        pool.release(t);
+                    }
+                }
+            }
+            audit(&pool, &refs, &idx_blocks, &sessions)?;
+        }
+        while let Some(s) = sessions.pop() {
+            for b in s.shared {
+                pool.unref(b);
+            }
+            if let Some(t) = s.table {
+                pool.release(t);
+            }
+        }
+        idx.clear(&mut pool);
+        if pool.free_blocks() != cap {
+            return Err(format!("teardown leak: {} free of {cap}", pool.free_blocks()));
+        }
+        Ok(())
+    });
+}
+
+/// Radix matching only ever covers whole blocks, and never the entire
+/// prompt: a prompt of exactly the indexed length still leaves its last
+/// block (and at least one token) to the engine.
+#[test]
+fn admission_matching_never_covers_partial_blocks() {
+    let mut eng = MockBatchEngine::new(1, 32, 64, 256);
+    let mut mgr = SessionManager::for_engine(&eng, &shared_policy(6));
+    let pinned: HashSet<u64> = HashSet::new();
+    let prompt = family_tokens(0, 2 * BLOCK_TOKENS);
+
+    // seed the index: run the prompt in session 1, then park it by
+    // making session 2 resident (1 physical slot)
+    mgr.open(1).unwrap();
+    let slot = mgr.ensure_resident(1, &mut eng, &pinned).unwrap().unwrap();
+    eng.run_batch(&[SlotChunk { slot, tokens: prompt.clone() }]).unwrap();
+    mgr.note_rows(1, prompt.len());
+    mgr.note_tokens(1, &prompt);
+    mgr.open(2).unwrap();
+    mgr.ensure_resident(2, &mut eng, &pinned).unwrap().unwrap();
+    assert!(mgr.slot_of(1).is_none(), "session 1 parked");
+    let seeded = mgr.blocks_in_use();
+    assert!(seeded >= 2, "both full prompt blocks parked and indexed");
+
+    // identical prompt: the final block is withheld so the engine sees
+    // at least one token — exactly one block (16 rows) matches
+    let m = mgr.open_with_prompt(3, &prompt).unwrap();
+    assert_eq!(m, BLOCK_TOKENS, "never the whole prompt");
+    assert_eq!(mgr.shared_len_of(3), BLOCK_TOKENS);
+
+    // a one-block prompt can never match (15 usable rows < one block)
+    let m = mgr.open_with_prompt(4, &prompt[..BLOCK_TOKENS]).unwrap();
+    assert_eq!(m, 0, "partial block never matched");
+    assert_eq!(mgr.shared_len_of(4), 0);
+
+    // a block-and-a-bit prompt matches the block, not the bit
+    let m = mgr.open_with_prompt(5, &prompt[..BLOCK_TOKENS + 5]).unwrap();
+    assert_eq!(m, BLOCK_TOKENS, "matched length is a whole-block multiple");
+
+    let ps = mgr.prefix_stats();
+    assert_eq!((ps.hits, ps.misses), (2, 1));
+    assert_eq!(ps.hit_rows, 2 * BLOCK_TOKENS as u64);
+    // sharing allocates nothing: every admission above reuses the two
+    // canonical blocks session 1 parked
+    assert_eq!(mgr.blocks_in_use(), seeded);
+}
+
+/// Copy-on-write divergence: truncating a parked session into a shared
+/// block privatises the boundary block, and every other holder of the
+/// canonical chain still swaps in bit-identical rows afterwards.
+#[test]
+fn cow_divergence_leaves_canonical_blocks_bit_identical() {
+    let mut eng = MockBatchEngine::new(1, 64, 64, 256);
+    let mut mgr = SessionManager::for_engine(&eng, &shared_policy(6));
+    let pinned: HashSet<u64> = HashSet::new();
+    let pre = family_tokens(1, 2 * BLOCK_TOKENS); // 2 full blocks
+    let mut full = pre.clone();
+    full.extend(family_tokens(2, 8)); // private tail past the preamble
+    let pre_ref = reference_kv(&pre);
+    let full_ref = reference_kv(&full);
+
+    // session 1 commits preamble + tail, parks (indexing the preamble)
+    mgr.open(1).unwrap();
+    let slot = mgr.ensure_resident(1, &mut eng, &pinned).unwrap().unwrap();
+    eng.run_batch(&[SlotChunk { slot, tokens: full.clone() }]).unwrap();
+    mgr.note_rows(1, full.len());
+    mgr.note_tokens(1, &full);
+    mgr.open(2).unwrap();
+    mgr.ensure_resident(2, &mut eng, &pinned).unwrap().unwrap();
+    assert_eq!(mgr.shared_len_of(1), 2 * BLOCK_TOKENS, "preamble indexed at park");
+
+    // session 3 admits onto the shared preamble (refcount only)
+    let matched = mgr.open_with_prompt(3, &full).unwrap();
+    assert_eq!(matched, 2 * BLOCK_TOKENS);
+
+    // diverge: roll session 1 back to 24 rows — 8 rows into the second
+    // shared block. The boundary block must be privatised via CoW, not
+    // edited in place.
+    let cut = BLOCK_TOKENS + 8;
+    mgr.set_len(1, cut);
+    assert_eq!(mgr.prefix_stats().cow_copies, 1, "boundary block was copied");
+    assert_eq!(mgr.len_of(1), cut);
+    assert_eq!(mgr.shared_len_of(1), BLOCK_TOKENS, "only the intact block stays shared");
+
+    // the canonical chain session 3 holds is untouched: swapping it in
+    // materialises the exact preamble image
+    let slot3 = mgr.ensure_resident(3, &mut eng, &pinned).unwrap().unwrap();
+    let got = eng.export_slot(slot3);
+    assert_eq!(got.len, 2 * BLOCK_TOKENS);
+    assert_eq!(got, pre_ref, "shared original not bit-identical after CoW");
+
+    // and the truncated session swaps back in with its surviving rows
+    // (served partly from the CoW copy) bit-identical to the original
+    let slot1 = mgr.ensure_resident(1, &mut eng, &pinned).unwrap().unwrap();
+    let got = eng.export_slot(slot1);
+    assert_eq!(got.len, cut);
+    assert_eq!(got.k[..], full_ref.k[..cut * MOCK_KV_ROW]);
+    assert_eq!(got.v[..], full_ref.v[..cut * MOCK_KV_ROW]);
+}
+
+/// Two identical waves of shared-preamble verify traffic: every block
+/// allocated by a wave is returned when its sessions release, leaving
+/// only the index-held canonicals — the steady-state footprint does not
+/// grow wave over wave, and the second wave's admissions all hit.
+#[test]
+fn shared_traffic_conserves_blocks_across_waves() {
+    let pre = family_tokens(3, 2 * BLOCK_TOKENS);
+    let mut sched = Scheduler::with_policy(
+        MockBatchEngine::new(2, 8, 64, 4096),
+        0x5A17,
+        shared_policy(8),
+    );
+    let wave = |sched: &mut Scheduler<MockBatchEngine>, base: u64| {
+        for i in 0..8u64 {
+            let mut uncached = pre.clone();
+            uncached.extend(vec![40 + i as u32; 4]);
+            sched
+                .submit(CloudRequest::Verify {
+                    request_id: base + i,
+                    device_id: (base + i) as u32,
+                    uncached,
+                    draft: vec![9, 9],
+                    dists: dense_dists(2, 64),
+                    greedy: true,
+                    ctx: Default::default(),
+                })
+                .unwrap();
+        }
+        let mut done = 0usize;
+        for _ in 0..3_000 {
+            let (events, _) = sched.tick().unwrap();
+            done += events.len();
+            if done == 8 {
+                break;
+            }
+        }
+        assert_eq!(done, 8, "wave drained");
+        for i in 0..8u64 {
+            sched.submit(CloudRequest::Release { request_id: base + i }).unwrap();
+        }
+    };
+    wave(&mut sched, 0);
+    let after_one = sched.sessions().blocks_in_use();
+    assert!(after_one > 0, "index keeps the canonical preamble blocks");
+    let hits_one = sched.sessions().prefix_stats().hits;
+
+    wave(&mut sched, 100);
+    assert_eq!(
+        sched.sessions().blocks_in_use(),
+        after_one,
+        "second wave leaks no blocks past the shared canonicals"
+    );
+    let ps = sched.sessions().prefix_stats();
+    assert!(
+        ps.hits >= hits_one + 8,
+        "wave 2 admissions all hit the populated index ({} -> {})",
+        hits_one,
+        ps.hits
+    );
+    assert_eq!(sched.engine.free_slots(), 2);
+    assert_eq!(sched.engine.allocs, sched.engine.frees);
+}
+
+/// Migration of a shared-prefix session: the exported image is a deep
+/// copy (materialised, never aliased), it round-trips bit-identically
+/// through a second scheduler, and the donor's canonical blocks keep
+/// serving its remaining sessions untouched.
+#[test]
+fn shared_prefix_migration_round_trips_without_aliasing() {
+    let pre = family_tokens(4, 2 * BLOCK_TOKENS);
+    let pre_ref = reference_kv(&pre);
+    let mut a = Scheduler::with_policy(
+        MockBatchEngine::new(2, 8, 64, 4096),
+        0x417A,
+        shared_policy(6),
+    );
+    let submit = |s: &mut Scheduler<MockBatchEngine>, id: u64| {
+        let mut uncached = pre.clone();
+        uncached.extend(vec![50 + id as u32; 4]);
+        s.submit(CloudRequest::Verify {
+            request_id: id,
+            device_id: id as u32,
+            uncached,
+            draft: vec![9, 9],
+            dists: dense_dists(2, 64),
+            greedy: true,
+            ctx: Default::default(),
+        })
+        .unwrap();
+    };
+    let drain = |s: &mut Scheduler<MockBatchEngine>, n: usize| {
+        let mut done = 0usize;
+        for _ in 0..2_000 {
+            let (events, _) = s.tick().unwrap();
+            done += events.len();
+            if done == n {
+                return;
+            }
+        }
+        panic!("verify wave did not drain");
+    };
+    // first wave populates the index (3 sessions over 2 slots must
+    // park); a second round over the same sessions then guarantees a
+    // full-length park — every preamble block indexed — before the
+    // second wave admits onto it
+    for id in 0..3u64 {
+        submit(&mut a, id);
+    }
+    drain(&mut a, 3);
+    for id in 0..3u64 {
+        a.submit(CloudRequest::Verify {
+            request_id: id,
+            device_id: id as u32,
+            uncached: vec![30 + id as u32; 2],
+            draft: vec![9, 9],
+            dists: dense_dists(2, 64),
+            greedy: true,
+            ctx: Default::default(),
+        })
+        .unwrap();
+    }
+    drain(&mut a, 3);
+    for id in 3..6u64 {
+        submit(&mut a, id);
+    }
+    drain(&mut a, 3);
+    let migrant =
+        (3..6u64).find(|&id| a.sessions().shared_len_of(id) > 0).expect("a session admitted onto the shared preamble");
+    let rows = a.sessions().len_of(migrant);
+    assert!(rows > 2 * BLOCK_TOKENS);
+
+    let (kv, tenant) = a.export_session(migrant).unwrap();
+    assert_eq!(kv.len, rows, "export materialises the full image, shared rows included");
+    assert_eq!(kv.k[..pre_ref.k.len()], pre_ref.k[..], "shared rows exported by value");
+    let orig = kv.clone();
+
+    let mut b = Scheduler::with_policy(
+        MockBatchEngine::new(2, 8, 64, 4096),
+        0x417B,
+        shared_policy(6),
+    );
+    assert!(b.can_import(kv.len));
+    b.import_session(migrant, tenant, &kv).unwrap();
+    // defacing the wire image after import must not reach either side:
+    // the adopter copied it, the donor never shared it
+    let mut defaced = kv;
+    defaced.k[0] += 1.0;
+    let (kv2, t2) = b.export_session(migrant).unwrap();
+    assert_eq!(kv2, orig, "migration round trip not bit-identical");
+    assert_eq!(t2, tenant);
+
+    // donor canonicals survive: another admitted session still exports
+    // the exact preamble rows
+    let stay = (3..6u64)
+        .find(|&id| id != migrant && a.sessions().shared_len_of(id) > 0)
+        .expect("another shared-prefix session remains on the donor");
+    let (kv3, _) = a.export_session(stay).unwrap();
+    assert_eq!(kv3.k[..pre_ref.k.len()], pre_ref.k[..], "donor canonical blocks untouched");
+}
+
+/// Same seed + sharing enabled ⇒ bit-identical fleet reports (the
+/// preamble RNG and radix cache add no nondeterminism), the sharing
+/// axis genuinely engages, and share 0 reports zero prefix traffic.
+#[test]
+fn fleet_with_sharing_is_deterministic() {
+    let cfg = FleetConfig {
+        n_devices: 32,
+        duration_s: 3.0,
+        rate_rps: 48.0, // saturating: cloud sessions contend and park
+        stop_s: 12.0,
+        tenants: 2,
+        params: SyneraParams {
+            batch: BatchPolicy { max_sessions: 8, ..BatchPolicy::default() },
+            ..SyneraParams::default()
+        },
+        reservoir: 1024,
+        seed: 0x5AFE,
+        prefix_share: 0.8,
+        prefix_len: 32,
+        ..FleetConfig::default()
+    };
+    let a = run_fleet(&cfg).unwrap();
+    let b = run_fleet(&cfg).unwrap();
+    assert!(a.offered > 0 && a.completed > 0, "{a:?}");
+    assert_eq!(a.offered, b.offered);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.generated_tokens, b.generated_tokens);
+    assert_eq!((a.swap_ins, a.swap_outs, a.swap_bytes), (b.swap_ins, b.swap_outs, b.swap_bytes));
+    assert_eq!(a.virtual_s.to_bits(), b.virtual_s.to_bits());
+    let mut hit_rows = 0u64;
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(x.completed, y.completed);
+        assert_eq!(x.rows_executed, y.rows_executed);
+        assert_eq!(x.prefix_hit_rows, y.prefix_hit_rows);
+        assert_eq!(x.ttft.p95.to_bits(), y.ttft.p95.to_bits());
+        hit_rows += x.prefix_hit_rows;
+    }
+    assert!(hit_rows > 0, "shared preambles must produce admission hits under contention");
+
+    // share 0: no preamble stream, no prefix traffic anywhere
+    let z = run_fleet(&FleetConfig { prefix_share: 0.0, ..cfg }).unwrap();
+    assert!(z.tenants.iter().all(|t| t.prefix_hit_rows == 0), "share 0 stays inert");
+}
+
+/// Fig 15d knee direction: at a fixed session population and identical
+/// per-session KV footprint, raising the fraction of sessions that
+/// carry a common preamble strictly lowers the host blocks held —
+/// park-time dedup collapses the shared chains onto canonicals.
+#[test]
+fn host_blocks_fall_as_prefix_share_rises() {
+    let blocks_at = |sharing: usize| -> (usize, u64) {
+        let n = 16u64;
+        let mut sched = Scheduler::with_policy(
+            MockBatchEngine::new(2, 16, 64, 4096),
+            0xF15D,
+            shared_policy(n as usize),
+        );
+        let pre = family_tokens(5, 4 * BLOCK_TOKENS);
+        for id in 0..n {
+            // same total length either way: 4 preamble-or-unique blocks
+            // plus a one-block unique tail — savings are dedup, not
+            // shorter prompts
+            let mut prompt: Vec<u32> = if (id as usize) < sharing {
+                pre.clone()
+            } else {
+                vec![10 + id as u32; 4 * BLOCK_TOKENS]
+            };
+            prompt.extend(vec![44 + id as u32; BLOCK_TOKENS]);
+            sched
+                .submit(CloudRequest::Verify {
+                    request_id: id,
+                    device_id: id as u32,
+                    uncached: prompt,
+                    draft: vec![9, 9],
+                    dists: dense_dists(2, 64),
+                    greedy: true,
+                    ctx: Default::default(),
+                })
+                .unwrap();
+        }
+        let mut done = 0usize;
+        for _ in 0..5_000 {
+            let (events, _) = sched.tick().unwrap();
+            done += events.len();
+            if done == n as usize {
+                break;
+            }
+        }
+        assert_eq!(done, n as usize, "all first verify rounds complete");
+        assert!(sched.stats.swap_outs > 0, "16 sessions over 2 slots must page");
+        assert_eq!(sched.sessions().prefix_stats().cow_copies, 0, "parking never copies");
+        (sched.sessions().blocks_in_use(), sched.stats.prefix_hit_rows)
+    };
+    let (b0, _) = blocks_at(0);
+    let (b8, _) = blocks_at(8);
+    let (b16, _) = blocks_at(16);
+    assert!(
+        b8 < b0,
+        "host blocks must fall when half the fleet shares a preamble ({b0} -> {b8})"
+    );
+    assert!(
+        b16 < b8,
+        "and fall further when the whole fleet shares it ({b8} -> {b16})"
+    );
+}

@@ -7,6 +7,11 @@
 # e.g. after `cd rust && cargo bench --bench fig18_sched_overhead -- --json`:
 #   tools/bench_diff.sh fig18 0.25
 #
+# CI gates fig19 (fleet scaling) and fig15 (the artifact-free 15d
+# prefix-share sweep; 15a-c only appear on artifact-bearing machines,
+# and a shape change from their absence is expected there) at the
+# default 25% tolerance.
+#
 # Bootstrap: when HEAD carries no baseline yet, the run is reported
 # and the gate passes — commit the generated rust/BENCH_<fig>.json to
 # arm the gate for subsequent changes.
