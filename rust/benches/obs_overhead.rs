@@ -1,23 +1,31 @@
 //! Observability overhead guard: with tracing disabled the obs layer
-//! must cost nothing measurable. Two checks:
+//! must cost nothing measurable, and with tail-based sampling on it
+//! must stay close to the full-retention trace. Checks:
 //!
 //! 1. micro: per-call cost of the disabled `trace::with` hot path
 //!    (one `Option` branch — should be ~1 ns);
-//! 2. macro: the same fleet simulation run with `trace: None` vs a
-//!    live sink, reporting the wall-clock ratio. The disabled run is
-//!    the shipping configuration; the enabled run bounds what `--trace`
-//!    costs on top.
+//! 2. micro: per-event cost of the sampler staging path (stage +
+//!    wholesale discard at completion), the hot loop a sampled fleet
+//!    adds over the plain ring push;
+//! 3. macro: the same fleet simulation run with `trace: None`, a full
+//!    ring sink, and a sampled sink, reporting the wall-clock ratios.
 //!
-//! Reported, not asserted: bench wall times are too noisy for a hard
-//! CI gate, but the micro number makes regressions obvious at a
-//! glance (a disabled-path regression shows up as 10-100× here).
+//! Wall times are reported, not asserted — bench timing is too noisy
+//! for a hard CI gate. `--json` writes `BENCH_obs.json`: the timing
+//! leaves (`*_s`, `*wall*`) stay informational in `bench_diff`, while
+//! the sampler's deterministic retention counters gate at the default
+//! tolerance, so a retention-policy regression (suddenly keeping or
+//! dropping a different population) fails CI even though timing can't.
 
 use std::hint::black_box;
 use std::time::Instant;
 
-use synera::bench::{f2, fmt_s, Table};
+use synera::bench::{f2, fmt_s, write_bench_json, Table};
+use synera::obs::sampler::SamplerConfig;
 use synera::obs::trace::{self, TraceShared, TraceSink};
 use synera::sim::{run_fleet, FleetConfig};
+use synera::util::cli::Args;
+use synera::util::json::Json;
 
 /// Best-of-`reps` fleet wall time under the given trace config.
 fn fleet_wall(trace: Option<TraceShared>, reps: usize) -> anyhow::Result<f64> {
@@ -40,7 +48,16 @@ fn fleet_wall(trace: Option<TraceShared>, reps: usize) -> anyhow::Result<f64> {
     Ok(best)
 }
 
+fn sampled_sink() -> TraceShared {
+    trace::shared(
+        TraceSink::virtual_time(1 << 20)
+            .with_sampler(SamplerConfig { head_every: 64, tail_k: 32, seed: 0 }),
+    )
+}
+
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+
     // micro: disabled trace::with is one None branch per call
     let off: Option<TraceShared> = None;
     let iters = 50_000_000u64;
@@ -52,18 +69,66 @@ fn main() -> anyhow::Result<()> {
     }
     let per_call = t0.elapsed().as_secs_f64() / iters as f64;
 
-    // macro: identical fleet run with the sink absent vs live
+    // micro: the sampler staging path — stage a request's events, then
+    // discard them wholesale at completion (the common fate under
+    // 1-in-64 head sampling). 8 events per request ≈ the fleet shape.
+    let staged_iters = 200_000u64;
+    let events_per_req = 8u64;
+    let sh = sampled_sink();
+    let t0 = Instant::now();
+    trace::with(&Some(sh.clone()), |s| {
+        for req in 1..=staged_iters {
+            for _ in 0..events_per_req {
+                s.instant(2, 0, "stage", req, Vec::new());
+            }
+            s.complete_request(req, 0.001, false);
+        }
+    });
+    let per_staged_event = t0.elapsed().as_secs_f64() / (staged_iters * events_per_req) as f64;
+
+    // macro: identical fleet run with the sink absent, full, sampled
     let wall_off = fleet_wall(None, 3)?;
-    let wall_on = fleet_wall(Some(trace::shared(TraceSink::virtual_time(1 << 20))), 3)?;
+    let wall_full = fleet_wall(Some(trace::shared(TraceSink::virtual_time(1 << 20))), 3)?;
+    let sampled = sampled_sink();
+    let wall_sampled = fleet_wall(Some(sampled.clone()), 3)?;
+    // deterministic retention counters from the *last* rep (same seed
+    // every rep, so any rep reads identically)
+    let st = sampled.lock().unwrap().sampler_stats().expect("sampler attached");
 
     let mut t = Table::new(
-        "obs overhead: tracing disabled must be free",
+        "obs overhead: tracing disabled must be free, sampling near-free",
         &["check", "value"],
     );
     t.row(&["disabled trace::with / call".into(), fmt_s(per_call)]);
+    t.row(&["sampler staging / event".into(), fmt_s(per_staged_event)]);
     t.row(&["fleet wall, trace off".into(), fmt_s(wall_off)]);
-    t.row(&["fleet wall, trace on".into(), fmt_s(wall_on)]);
-    t.row(&["on/off ratio".into(), f2(wall_on / wall_off)]);
+    t.row(&["fleet wall, full trace".into(), fmt_s(wall_full)]);
+    t.row(&["fleet wall, sampled trace".into(), fmt_s(wall_sampled)]);
+    t.row(&["full/off ratio".into(), f2(wall_full / wall_off)]);
+    t.row(&["sampled/full ratio".into(), f2(wall_sampled / wall_full)]);
+    t.row(&["sampled retained events".into(), st.retained_events.to_string()]);
+    t.row(&["sampled discarded events".into(), st.discarded_events.to_string()]);
     t.print();
+
+    if args.has_flag("json") {
+        let results = Json::obj(vec![
+            ("disabled_with_s", Json::num(per_call)),
+            ("staging_event_s", Json::num(per_staged_event)),
+            ("wall_off_s", Json::num(wall_off)),
+            ("wall_full_s", Json::num(wall_full)),
+            ("wall_sampled_s", Json::num(wall_sampled)),
+            ("full_vs_off_wall", Json::num(wall_full / wall_off)),
+            ("sampled_vs_full_wall", Json::num(wall_sampled / wall_full)),
+            // deterministic (same-seed) retention counters: these gate
+            ("sampler_completed", Json::num(st.completed as f64)),
+            ("sampler_head_retained", Json::num(st.head_retained as f64)),
+            ("sampler_tail_retained", Json::num(st.tail_retained as f64)),
+            ("sampler_retained_events", Json::num(st.retained_events as f64)),
+            ("sampler_discarded_events", Json::num(st.discarded_events as f64)),
+            ("sampler_peak_staged_events", Json::num(st.peak_staged_events as f64)),
+        ]);
+        let path = write_bench_json("obs", results)?;
+        synera::log!(Info, "wrote {}", path.display());
+    }
     Ok(())
 }

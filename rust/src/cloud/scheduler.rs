@@ -1165,7 +1165,10 @@ impl<E: BatchEngine> Scheduler<E> {
         if base_len + uncached.len() + draft.len() > self.engine.max_len() {
             // the overflow verdict still commits (EOS, zero accepted):
             // trace it like any other round so the request's timeline
-            // stays complete for `synera inspect`
+            // stays complete for `synera inspect`. A force-ended
+            // request is a partial outcome — tail-interesting, so the
+            // sampler must keep its full event set however fast it ran
+            trace::with(&self.trace, |s| s.mark_interesting(request_id));
             if self.trace.is_some() {
                 self.trace_instant(
                     "verify_commit",

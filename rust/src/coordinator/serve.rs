@@ -32,7 +32,7 @@ use crate::device::codec::compress_dist;
 use crate::device::early_exit::SeqExitPolicy;
 use crate::device::offload::Selector;
 use crate::device::parallel::{alternative_token, predict_rejection};
-use crate::metrics::stats::Summary;
+use crate::metrics::stats::{QuantileSketch, Summary};
 use crate::model::cloud_engine::CloudEngine;
 use crate::model::device_engine::DeviceEngine;
 use crate::model::logits::argmax;
@@ -283,27 +283,25 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
         swap_outs += s.swap_outs;
     }
 
-    let frac_within = |xs: &[f64], th: f64| {
-        if xs.is_empty() {
-            0.0
-        } else {
-            xs.iter().filter(|&&v| v <= th).count() as f64 / xs.len() as f64
-        }
-    };
-    let slo_ttft_frac = frac_within(&all.ttfts, cfg.slo.ttft_s);
-    let slo_tbt_frac = frac_within(&all.tbts, cfg.slo.tbt_s);
+    // SLO fractions come from exact per-worker counters; percentiles
+    // from the merged sketches (merge is exact — the roll-up equals
+    // one sketch fed every worker's stream)
+    let slo_ttft_frac =
+        if all.slo_ttft_n > 0 { all.slo_ttft_ok as f64 / all.slo_ttft_n as f64 } else { 0.0 };
+    let slo_tbt_frac =
+        if all.slo_tbt_n > 0 { all.slo_tbt_ok as f64 / all.slo_tbt_n as f64 } else { 0.0 };
     Ok(ServeReport {
         completed: all.completed,
         wall_s: wall,
         throughput_rps: all.completed as f64 / wall,
         tokens_per_s: all.tokens as f64 / wall,
-        e2e_latency: Summary::of(&all.e2e),
-        verify_rtt: Summary::of(&all.rtts),
-        ttft: Summary::of(&all.ttfts),
+        e2e_latency: all.e2e.summary().unwrap_or_default(),
+        verify_rtt: all.rtts.summary().unwrap_or_default(),
+        ttft: all.ttfts.summary().unwrap_or_default(),
         slo_ttft_frac,
         slo_tbt_frac,
-        ttft_burn: if all.ttfts.is_empty() { 0.0 } else { cfg.slo.burn(slo_ttft_frac) },
-        tbt_burn: if all.tbts.is_empty() { 0.0 } else { cfg.slo.burn(slo_tbt_frac) },
+        ttft_burn: if all.slo_ttft_n == 0 { 0.0 } else { cfg.slo.burn(slo_ttft_frac) },
+        tbt_burn: if all.slo_tbt_n == 0 { 0.0 } else { cfg.slo.burn(slo_tbt_frac) },
         quality: if all.completed > 0 { all.quality / all.completed as f64 } else { 0.0 },
         offload_rate: if all.chunks > 0 { all.offloads as f64 / all.chunks as f64 } else { 0.0 },
         swap_ins,
@@ -312,16 +310,24 @@ pub fn run_threaded(cfg: &ServeConfig) -> Result<ServeReport> {
     })
 }
 
+/// Per-worker accumulators: latency distributions live in
+/// [`QuantileSketch`]es (bounded memory per thread, exact cross-worker
+/// merge) plus exact SLO counters — the serving tier no longer carries
+/// one `Vec<f64>` per latency metric per device thread.
 #[derive(Default)]
 struct DeviceStats {
     completed: usize,
     tokens: usize,
     quality: f64,
-    e2e: Vec<f64>,
-    rtts: Vec<f64>,
-    ttfts: Vec<f64>,
+    e2e: QuantileSketch,
+    rtts: QuantileSketch,
+    ttfts: QuantileSketch,
     /// Per-request mean time between tokens (≥2-token requests only).
-    tbts: Vec<f64>,
+    tbts: QuantileSketch,
+    slo_ttft_ok: u64,
+    slo_ttft_n: u64,
+    slo_tbt_ok: u64,
+    slo_tbt_n: u64,
     offloads: usize,
     chunks: usize,
 }
@@ -331,10 +337,14 @@ impl DeviceStats {
         self.completed += o.completed;
         self.tokens += o.tokens;
         self.quality += o.quality;
-        self.e2e.extend(o.e2e);
-        self.rtts.extend(o.rtts);
-        self.ttfts.extend(o.ttfts);
-        self.tbts.extend(o.tbts);
+        self.e2e.merge(&o.e2e);
+        self.rtts.merge(&o.rtts);
+        self.ttfts.merge(&o.ttfts);
+        self.tbts.merge(&o.tbts);
+        self.slo_ttft_ok += o.slo_ttft_ok;
+        self.slo_ttft_n += o.slo_ttft_n;
+        self.slo_tbt_ok += o.slo_tbt_ok;
+        self.slo_tbt_n += o.slo_tbt_n;
         self.offloads += o.offloads;
         self.chunks += o.chunks;
     }
@@ -521,7 +531,7 @@ fn device_worker(
                     (reply, None)
                 }
             };
-            stats.rtts.push(t_sent.elapsed().as_secs_f64());
+            stats.rtts.record(t_sent.elapsed().as_secs_f64());
             let down = DownlinkMsg {
                 request_id: req_id,
                 accepted: reply.accepted,
@@ -588,14 +598,30 @@ fn device_worker(
         }
         stats.tokens += generated.len();
         stats.quality += crate::metrics::quality::score_sample(&sample, &generated);
-        stats.e2e.push(t_req.elapsed().as_secs_f64());
+        let e2e = t_req.elapsed().as_secs_f64();
+        stats.e2e.record(e2e);
+        let mut slo_miss = false;
         if let Some(tf) = t_first {
-            stats.ttfts.push(tf.duration_since(t_req).as_secs_f64());
+            let ttft = tf.duration_since(t_req).as_secs_f64();
+            stats.ttfts.record(ttft);
+            stats.slo_ttft_n += 1;
+            stats.slo_ttft_ok += (ttft <= cfg.slo.ttft_s) as u64;
+            slo_miss |= ttft > cfg.slo.ttft_s;
             if generated.len() >= 2 {
                 let span = t_last.duration_since(tf).as_secs_f64();
-                stats.tbts.push(span / (generated.len() - 1) as f64);
+                let tbt = span / (generated.len() - 1) as f64;
+                stats.tbts.record(tbt);
+                stats.slo_tbt_n += 1;
+                stats.slo_tbt_ok += (tbt <= cfg.slo.tbt_s) as u64;
+                slo_miss |= tbt > cfg.slo.tbt_s;
             }
+        } else {
+            // no token ever committed: an SLO-relevant failure mode
+            slo_miss = true;
         }
+        // settle the request with the sampler (no-op without one):
+        // SLO-missing and token-free requests are tail-interesting
+        trace::with(&cfg.trace, |s| s.complete_request(req_id, e2e, slo_miss));
         stats.completed += 1;
     }
     Ok(stats)

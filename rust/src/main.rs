@@ -10,6 +10,10 @@
 //!                  [--tenants 2 --tenant-weights 1,2] [--replicas 2]
 //!                  [--slo-ttft 2.0 --slo-tbt 0.25 --slo-budget 0.1]
 //!                  [--trace serve.trace.json]  (wall-clock Chrome trace)
+//!                  [--trace-sample 64 --trace-tail-k 32]  (tail-based
+//!                                     retention: keep 1-in-N head
+//!                                     samples + every SLO-miss/error
+//!                                     + the k slowest requests)
 //! synera fleet     --devices 1024 --duration 60 [--rate 256]
 //!                  [--tenants 4] [--tenant-weights 1,1,2,4]
 //!                  [--max-sessions 64] [--burst] [--seed N]
@@ -28,7 +32,19 @@
 //!                                     trace, loadable in Perfetto)
 //!                  [--slo-ttft 2.0 --slo-tbt 0.25 --slo-budget 0.1]
 //!                  [--metrics fleet.jsonl [--metrics-cadence 1.0]]
+//!                  [--trace-sample 64 --trace-tail-k 32]  (tail-based
+//!                                     retention, as under serve)
+//!                  [--flight-dir dumps/ [--flight-burn 2.0]]  (flight
+//!                                     recorder: when a tenant's SLO
+//!                                     burn crosses the threshold,
+//!                                     snapshot the retained trace to
+//!                                     a Chrome-trace dump in the dir)
 //! synera inspect   fleet.trace.json [--out breakdown.jsonl]
+//!                  [--summary]       (per-component p50/p95/p99
+//!                                     latency attribution table)
+//!                  [--slo-miss-only] (keep only requests whose
+//!                                     trace-derived TTFT/TBT miss the
+//!                                     --slo-ttft/--slo-tbt policy)
 //!                  (critical-path analysis of a --trace file:
 //!                   per-tenant table on stderr, per-request JSONL
 //!                   breakdowns to --out or stdout)
@@ -50,6 +66,7 @@ use synera::coordinator::serve::{run_threaded, ServeConfig};
 use synera::obs::analyze;
 use synera::obs::export::{write_chrome_trace, write_metrics_jsonl};
 use synera::obs::registry;
+use synera::obs::sampler::SamplerConfig;
 use synera::obs::trace::{self, TraceShared, TraceSink};
 use synera::profiling;
 use synera::runtime::{artifacts_dir, Runtime};
@@ -283,10 +300,30 @@ fn slo_from(args: &Args) -> Result<SloPolicy> {
     })
 }
 
+/// `--trace-sample` / `--trace-tail-k`: tail-based retention policy
+/// shared by `serve` and `fleet`. Returns `None` (retain everything,
+/// today's behaviour) unless at least one knob is set. `--trace-tail-k`
+/// defaults to 32 once head sampling is on; SLO-miss/error retention is
+/// unconditional whenever a sampler is attached.
+fn sampler_from(args: &Args, seed: u64) -> Result<Option<SamplerConfig>> {
+    let head_every = args.get_usize("trace-sample", 0)? as u64;
+    let tail_k = args.get_usize("trace-tail-k", if head_every > 0 { 32 } else { 0 })?;
+    Ok((head_every > 0 || tail_k > 0).then_some(SamplerConfig { head_every, tail_k, seed }))
+}
+
+/// Build a trace sink, attaching the retention sampler when configured.
+fn sink_with(sink: TraceSink, sampler: Option<SamplerConfig>) -> TraceShared {
+    trace::shared(match sampler {
+        Some(cfg) => sink.with_sampler(cfg),
+        None => sink,
+    })
+}
+
 fn serve(args: &Args) -> Result<()> {
     let scen = scenario_from(args)?;
     let task = Task::from_name(&args.get_or("task", "xsum")).context("bad --task")?;
     let trace_path = args.get("trace").map(PathBuf::from);
+    let sampler = sampler_from(args, scen.params.seed)?;
     let cfg = ServeConfig {
         scenario: scen,
         task,
@@ -295,7 +332,9 @@ fn serve(args: &Args) -> Result<()> {
         slo: slo_from(args)?,
         artifacts: artifacts_dir(),
         // real OS threads share one wall clock
-        trace: trace_path.as_ref().map(|_| trace::shared(TraceSink::wall_time(TRACE_CAP))),
+        trace: trace_path
+            .as_ref()
+            .map(|_| sink_with(TraceSink::wall_time(TRACE_CAP), sampler)),
     };
     synera::log!(
         Debug,
@@ -354,6 +393,28 @@ fn write_trace_file(path: &std::path::Path, trace: &Option<TraceShared>) -> Resu
         sink.dropped(),
         path.display()
     );
+    if sink.dropped() > 0 {
+        synera::log!(
+            Warn,
+            "trace: ring overflowed — {} events were dropped and the export is incomplete \
+             (raise the capacity or enable --trace-sample to bound retention)",
+            sink.dropped()
+        );
+    }
+    if let Some(st) = sink.sampler_stats() {
+        synera::log!(
+            Info,
+            "trace sampler: {}/{} requests retained ({} head, {} tail-interesting), \
+             {} events kept, {} discarded, peak staging {} events",
+            st.retained_requests,
+            st.completed,
+            st.head_retained,
+            st.tail_retained,
+            st.retained_events,
+            st.discarded_events,
+            st.peak_staged_events,
+        );
+    }
     Ok(())
 }
 
@@ -374,6 +435,12 @@ fn fleet(args: &Args) -> Result<()> {
     let trace_path = args.get("trace").map(PathBuf::from);
     let metrics_path = args.get("metrics").map(PathBuf::from);
     let metrics_cadence = args.get_f64("metrics-cadence", 1.0)?;
+    let seed = args.get_usize("seed", base.seed as usize)? as u64;
+    let sampler = sampler_from(args, seed)?;
+    let flight_dir = args.get("flight-dir").map(PathBuf::from);
+    // The flight recorder snapshots the trace buffer, so a sink must
+    // exist even when no --trace export was asked for.
+    let want_trace = trace_path.is_some() || flight_dir.is_some();
     let cfg = FleetConfig {
         n_devices,
         duration_s: args.get_f64("duration", 60.0)?,
@@ -386,7 +453,7 @@ fn fleet(args: &Args) -> Result<()> {
         tenants,
         tenant_weights: BatchPolicy::tenant_weights_from(tenants, args.get("tenant-weights"))?,
         params,
-        seed: args.get_usize("seed", base.seed as usize)? as u64,
+        seed,
         // modelled cloud service time (satellite knobs: sweep the
         // service curve without recompiling)
         cloud_iter_s: args.get_f64("cloud-iter-s", base.cloud_iter_s)?,
@@ -400,8 +467,13 @@ fn fleet(args: &Args) -> Result<()> {
         cloud_model: args.get_or("llm", &base.cloud_model),
         // the simulator stamps events in virtual time (byte-identical
         // same-seed traces); a snapshot every `metrics_cadence` virtual s
-        trace: trace_path.as_ref().map(|_| trace::shared(TraceSink::virtual_time(TRACE_CAP))),
-        registry: metrics_path.as_ref().map(|_| registry::shared(metrics_cadence)),
+        trace: want_trace.then(|| sink_with(TraceSink::virtual_time(TRACE_CAP), sampler)),
+        // the flight recorder reads per-tenant burn gauges, so it
+        // needs a registry even without a --metrics export
+        registry: (metrics_path.is_some() || flight_dir.is_some())
+            .then(|| registry::shared(metrics_cadence)),
+        flight_dir,
+        flight_burn: args.get_f64("flight-burn", base.flight_burn)?,
         ..base
     };
     synera::log!(
@@ -515,16 +587,32 @@ fn inspect(args: &Args) -> Result<()> {
         .first()
         .map(String::as_str)
         .or_else(|| args.get("trace"))
-        .context("usage: synera inspect <trace.json> [--out breakdown.jsonl]")?;
-    let rep = analyze::analyze_file(path)?;
+        .context("usage: synera inspect <trace.json> [--out breakdown.jsonl] [--summary] [--slo-miss-only]")?;
+    let mut rep = analyze::analyze_file(path)?;
     synera::log!(
         Info,
         "{path}: {} requests attributed, {} partial (incomplete event sets)",
         rep.requests.len(),
         rep.partial
     );
+    if args.has_flag("slo-miss-only") {
+        let policy = slo_from(args)?;
+        rep = analyze::slo_miss_only(&rep, &policy);
+        synera::log!(
+            Info,
+            "slo-miss-only: {} requests miss ttft≤{:.3}s / tbt≤{:.3}s",
+            rep.requests.len(),
+            policy.ttft_s,
+            policy.tbt_s
+        );
+    }
     for line in analyze::table_string(&rep).lines() {
         synera::log!(Info, "{line}");
+    }
+    if args.has_flag("summary") {
+        for line in analyze::summary_table_string(&rep).lines() {
+            synera::log!(Info, "{line}");
+        }
     }
     let jsonl = analyze::requests_jsonl_string(&rep);
     match args.get("out") {

@@ -5,9 +5,18 @@
 //! reservoir** mode (Vitter's Algorithm R) keeps a uniform sample of
 //! fixed size, so [`Summary::of`] over the reservoir tracks the exact
 //! percentiles within sampling tolerance at O(capacity) memory.
+//!
+//! [`QuantileSketch`] is the fleet-scale successor to the reservoir:
+//! a DDSketch-style log-bucketed histogram with a *guaranteed*
+//! relative error (the reservoir's error is probabilistic and
+//! tail-hostile), an **exact** `merge` (bucket counts add — the
+//! cross-replica / cross-tenant roll-up loses nothing, unlike
+//! reservoir re-sampling), and deterministic serialization.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Summary statistics over a set of f64 observations.
@@ -173,6 +182,203 @@ impl LatencyRecorder {
     }
 }
 
+/// Smallest magnitude the sketch resolves; anything at or below it
+/// (including zero and negative inputs — latencies are non-negative)
+/// lands in a dedicated zero bucket and reads back as `0.0`.
+const SKETCH_MIN: f64 = 1e-9;
+
+/// Mergeable log-bucketed quantile sketch (DDSketch-style).
+///
+/// Values are binned into geometric buckets `(γ^(k−1), γ^k]` with
+/// `γ = (1+α)/(1−α)`; a bucket reads back as `2γ^k/(γ+1)`, its
+/// midpoint in log space, so every reported quantile is within a
+/// **relative error of α** of the exact order statistic. `n`, `sum`,
+/// `sum²`, `min` and `max` are carried exactly, so [`summary`]
+/// produces exact mean/std/min/max alongside α-bounded percentiles.
+///
+/// Contracts:
+/// * **merge is exact** — bucket counts add, so merging per-replica
+///   or per-device sketches equals one sketch fed the whole stream
+///   (quantiles identical; `sum`/`mean` agree to float addition
+///   order). Both sides must share the same α.
+/// * **deterministic** — no RNG; same record order ⇒ bit-identical
+///   state and [`to_json`] bytes.
+/// * **bounded** — bucket count grows with the log of the value
+///   range, not with `n` (~229 buckets per decade at α = 0.01).
+///
+/// [`summary`]: QuantileSketch::summary
+/// [`to_json`]: QuantileSketch::to_json
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    alpha: f64,
+    gamma: f64,
+    ln_gamma: f64,
+    /// Bucket index `k = ceil(ln(x)/ln γ)` → count, for `x > SKETCH_MIN`.
+    buckets: BTreeMap<i32, u64>,
+    /// Count of values ≤ [`SKETCH_MIN`] (reads back as exactly 0.0).
+    zeros: u64,
+    n: u64,
+    sum: f64,
+    sumsq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for QuantileSketch {
+    /// The fleet default: α = 1% relative error.
+    fn default() -> Self {
+        QuantileSketch::new(0.01)
+    }
+}
+
+impl QuantileSketch {
+    /// Sketch with relative-error bound `alpha` (clamped to
+    /// `[1e-4, 0.25]` — below that buckets explode, above it the
+    /// "sketch" stops meaning anything).
+    pub fn new(alpha: f64) -> Self {
+        let alpha = alpha.clamp(1e-4, 0.25);
+        let gamma = (1.0 + alpha) / (1.0 - alpha);
+        QuantileSketch {
+            alpha,
+            gamma,
+            ln_gamma: gamma.ln(),
+            buckets: BTreeMap::new(),
+            zeros: 0,
+            n: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// The guaranteed relative-error bound α.
+    pub fn relative_error(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn record(&mut self, x: f64) {
+        if x.is_nan() {
+            return; // refuse to poison the moments
+        }
+        self.n += 1;
+        self.sum += x;
+        self.sumsq += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if x > SKETCH_MIN {
+            let k = (x.ln() / self.ln_gamma).ceil() as i32;
+            *self.buckets.entry(k).or_insert(0) += 1;
+        } else {
+            self.zeros += 1;
+        }
+    }
+
+    /// Fold `other` into `self`. Bucket counts add, so the merged
+    /// sketch answers quantiles exactly as if it had seen both
+    /// streams. Panics on an α mismatch — differently-binned sketches
+    /// are not comparable, and silently blending them would corrupt
+    /// the error bound.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        assert!(
+            (self.alpha - other.alpha).abs() < 1e-12,
+            "QuantileSketch::merge: alpha mismatch ({} vs {})",
+            self.alpha,
+            other.alpha
+        );
+        for (&k, &c) in &other.buckets {
+            *self.buckets.entry(k).or_insert(0) += c;
+        }
+        self.zeros += other.zeros;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.sumsq += other.sumsq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of observations recorded.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Live bucket count — the sketch's actual memory footprint.
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// The q-quantile (`q ∈ [0, 1]`), `None` when empty. Within a
+    /// relative error of α of the exact order statistic, except the
+    /// zero bucket which reads back as exactly `0.0`.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.n == 0 {
+            return None;
+        }
+        // nearest-rank, matching Summary::of's v[round((n-1)·q)]
+        let rank = ((self.n - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        if rank < self.zeros {
+            return Some(0.0);
+        }
+        let mut seen = self.zeros;
+        for (&k, &c) in &self.buckets {
+            seen += c;
+            if rank < seen {
+                // log-space midpoint of (γ^(k−1), γ^k]
+                let est = 2.0 * self.gamma.powi(k) / (self.gamma + 1.0);
+                // exact extremes beat the bucket estimate at the edges
+                return Some(est.clamp(self.min, self.max));
+            }
+        }
+        Some(self.max) // unreachable unless counts desynced; fail soft
+    }
+
+    /// Summary with exact `n`/`mean`/`min`/`max`/`std` and α-bounded
+    /// percentiles; `None` when nothing was recorded.
+    pub fn summary(&self) -> Option<Summary> {
+        if self.n == 0 {
+            return None;
+        }
+        let n = self.n as f64;
+        let mean = self.sum / n;
+        let var = (self.sumsq / n - mean * mean).max(0.0);
+        Some(Summary {
+            n: self.n as usize,
+            mean,
+            min: self.min,
+            max: self.max,
+            p50: self.quantile(0.50).unwrap_or(0.0),
+            p95: self.quantile(0.95).unwrap_or(0.0),
+            p99: self.quantile(0.99).unwrap_or(0.0),
+            std: var.sqrt(),
+        })
+    }
+
+    /// Deterministic serialization: buckets in key order, counts as
+    /// `[k, count]` pairs. Same state ⇒ identical bytes, so merged
+    /// sketches can be compared structurally across replicas.
+    pub fn to_json(&self) -> Json {
+        let buckets = Json::arr(
+            self.buckets
+                .iter()
+                .map(|(&k, &c)| Json::arr([Json::num(k as f64), Json::num(c as f64)])),
+        );
+        Json::obj(vec![
+            ("alpha", Json::num(self.alpha)),
+            ("n", Json::num(self.n as f64)),
+            ("zeros", Json::num(self.zeros as f64)),
+            ("sum", Json::num(self.sum)),
+            ("sumsq", Json::num(self.sumsq)),
+            ("min", Json::num(if self.n == 0 { 0.0 } else { self.min })),
+            ("max", Json::num(if self.n == 0 { 0.0 } else { self.max })),
+            ("buckets", buckets),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -281,5 +487,93 @@ mod tests {
         let s = a.summary().unwrap();
         assert_eq!(s.n, 2);
         assert_eq!(s.mean, 2.0);
+    }
+
+    #[test]
+    fn sketch_bounds_relative_error() {
+        // same heavy-tailed u² stream the reservoir test uses, but the
+        // sketch's bound is deterministic, not probabilistic
+        let mut rng = crate::util::rng::Rng::new(0xA11);
+        let mut exact = Vec::new();
+        let mut sk = QuantileSketch::new(0.01);
+        for _ in 0..100_000 {
+            let u = rng.f64();
+            let v = u * u;
+            exact.push(v);
+            sk.record(v);
+        }
+        let e = Summary::of(&exact);
+        let s = sk.summary().unwrap();
+        assert_eq!(s.n, e.n);
+        assert!((s.mean - e.mean).abs() < 1e-9, "mean is exact");
+        assert_eq!(s.min, e.min);
+        assert_eq!(s.max, e.max);
+        for (pe, ps, name) in [(e.p50, s.p50, "p50"), (e.p95, s.p95, "p95"), (e.p99, s.p99, "p99")]
+        {
+            let rel = (pe - ps).abs() / pe.max(1e-12);
+            assert!(rel <= 0.011, "{name}: exact {pe} vs sketch {ps} (rel {rel:.4})");
+        }
+    }
+
+    #[test]
+    fn sketch_merge_equals_single_stream() {
+        let mut rng = crate::util::rng::Rng::new(0x5C);
+        let (mut a, mut b, mut whole) =
+            (QuantileSketch::default(), QuantileSketch::default(), QuantileSketch::default());
+        for i in 0..20_000 {
+            let v = rng.exp(1.0) + 1e-3;
+            whole.record(v);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        // quantiles depend only on bucket counts → exactly equal
+        for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), whole.quantile(q), "q={q}");
+        }
+        assert_eq!(a.to_json().get("zeros").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn sketch_serialization_is_deterministic() {
+        let fill = || {
+            let mut s = QuantileSketch::default();
+            for i in 0..5_000 {
+                s.record((i % 313) as f64 * 1e-3);
+            }
+            s.to_json().to_string()
+        };
+        assert_eq!(fill(), fill());
+    }
+
+    #[test]
+    fn sketch_zero_and_negative_land_in_zero_bucket() {
+        let mut s = QuantileSketch::default();
+        s.record(0.0);
+        s.record(-1.0);
+        s.record(1e-12);
+        s.record(2.0);
+        assert_eq!(s.count(), 4);
+        assert_eq!(s.quantile(0.0), Some(0.0));
+        assert_eq!(s.quantile(1.0), Some(2.0));
+        assert_eq!(s.bucket_count(), 1, "only the 2.0 sample holds a log bucket");
+    }
+
+    #[test]
+    fn sketch_quantiles_monotone_and_bounded_memory() {
+        let mut s = QuantileSketch::new(0.01);
+        for i in 1..=100_000u64 {
+            s.record(i as f64 * 1e-4); // 4 decades
+        }
+        let q: Vec<f64> = [0.1, 0.5, 0.9, 0.95, 0.99]
+            .iter()
+            .map(|&q| s.quantile(q).unwrap())
+            .collect();
+        assert!(q.windows(2).all(|w| w[0] <= w[1]), "monotone: {q:?}");
+        assert!(s.bucket_count() < 1200, "4 decades at α=1%: {}", s.bucket_count());
     }
 }

@@ -71,6 +71,19 @@ impl TraceContext {
     pub fn flow_id(request_id: u64, round: u32) -> u64 {
         (1u64 << 63) | (request_id << 16) | (round as u64 & 0xFFFF)
     }
+
+    /// Inverse of [`flow_id`](Self::flow_id): the request id a flow id
+    /// belongs to, or `None` when `id` is not in the flow namespace
+    /// (high bit clear — a raw request/session id or 0). The trace
+    /// sampler uses this to attribute flow-arrow events to the request
+    /// whose round they annotate.
+    pub fn request_of_flow(id: u64) -> Option<u64> {
+        if id >> 63 == 1 {
+            Some((id & !(1u64 << 63)) >> 16)
+        } else {
+            None
+        }
+    }
 }
 
 /// Device → cloud verification request (paper Fig. 7).
@@ -367,6 +380,19 @@ mod tests {
         for ctx in [a, b, c] {
             assert!(ctx.parent_span & (1 << 63) != 0, "own id namespace");
         }
+    }
+
+    #[test]
+    fn flow_id_round_trips_to_request_id() {
+        for req in [0u64, 1, 7, (3 << 32) | 7, (16383u64 << 32) | 1000] {
+            for round in [0u32, 1, 9, 65535] {
+                let id = TraceContext::flow_id(req, round);
+                assert_eq!(TraceContext::request_of_flow(id), Some(req), "req {req} round {round}");
+            }
+        }
+        // raw request ids are not in the flow namespace
+        assert_eq!(TraceContext::request_of_flow(0), None);
+        assert_eq!(TraceContext::request_of_flow((3 << 32) | 7), None);
     }
 
     #[test]

@@ -65,9 +65,28 @@ pub struct RequestBreakdown {
     pub engine_s: f64,
     pub network_s: f64,
     pub stall_s: f64,
+    /// Trace-derived time to first committed token (first `local` /
+    /// `device_commit` instant minus request start); `None` when the
+    /// request never committed a token. Commit instants mark chunk
+    /// *ends*, so this upper-bounds the driver's own TTFT by at most
+    /// one chunk — good enough for SLO-miss filtering.
+    pub ttft_s: Option<f64>,
+    /// Trace-derived mean time between tokens over commit instants;
+    /// `None` for requests with fewer than two committed tokens.
+    pub tbt_s: Option<f64>,
 }
 
 impl RequestBreakdown {
+    /// Does this request miss `policy` on trace-derived TTFT/TBT? A
+    /// request that never committed a token counts as a miss.
+    pub fn slo_miss(&self, policy: &crate::config::SloPolicy) -> bool {
+        match self.ttft_s {
+            None => true,
+            Some(ttft) => {
+                ttft > policy.ttft_s || self.tbt_s.is_some_and(|tbt| tbt > policy.tbt_s)
+            }
+        }
+    }
     /// Sum of the six attribution components.
     pub fn component_sum_s(&self) -> f64 {
         let parts = [
@@ -153,6 +172,10 @@ pub fn analyze_chrome_trace(text: &str) -> Result<InspectReport> {
     let mut cloud: BTreeMap<(u64, u32), CloudRound> = BTreeMap::new();
     // per-replica swap instants: (ts_s, seconds of swap work)
     let mut swaps: BTreeMap<u32, Vec<(f64, f64)>> = BTreeMap::new();
+    // token-commit instants per request: (ts_s, tokens committed) —
+    // kept apart from `reqs` so a stray instant cannot conjure a
+    // request entry that would then be miscounted as partial
+    let mut commits: BTreeMap<u64, Vec<(f64, f64)>> = BTreeMap::new();
 
     for e in events {
         let Some(ph) = e.opt("ph").and_then(|p| p.as_str().ok()) else { continue };
@@ -167,6 +190,20 @@ pub fn analyze_chrome_trace(text: &str) -> Result<InspectReport> {
             // device). Only span B/E events key a request: instants,
             // metadata, and flow arrows (whose ids are synthetic flow
             // ids, not request ids) must not create entries.
+            if ph == "i" && (name == "local" || name == "device_commit") {
+                // token-commit instants feed the TTFT/TBT derivation;
+                // `local` commits `gamma` tokens, `device_commit` the
+                // round's `committed` (sim) or `accepted` (serve) count
+                let tokens = if name == "local" {
+                    arg(e, "gamma").unwrap_or(0.0)
+                } else {
+                    arg(e, "committed").or_else(|| arg(e, "accepted")).unwrap_or(0.0)
+                };
+                if tokens > 0.0 {
+                    commits.entry(id).or_default().push((ts, tokens));
+                }
+                continue;
+            }
             if ph != "B" && ph != "E" {
                 continue;
             }
@@ -223,7 +260,7 @@ pub fn analyze_chrome_trace(text: &str) -> Result<InspectReport> {
 
     let mut out = InspectReport::default();
     for (&id, r) in &reqs {
-        match breakdown_for(id, r, &cloud, &swaps) {
+        match breakdown_for(id, r, &cloud, &swaps, commits.get(&id).map(Vec::as_slice)) {
             Some(b) => out.requests.push(b),
             None => out.partial += 1,
         }
@@ -235,9 +272,14 @@ pub fn analyze_chrome_trace(text: &str) -> Result<InspectReport> {
             .unwrap_or(std::cmp::Ordering::Equal)
             .then(a.request_id.cmp(&b.request_id))
     });
+    out.tenants = tenant_totals(&out.requests);
+    Ok(out)
+}
 
+/// Per-tenant totals over a request set, sorted by tenant id.
+fn tenant_totals(requests: &[RequestBreakdown]) -> Vec<TenantBreakdown> {
     let mut tenants: BTreeMap<usize, TenantBreakdown> = BTreeMap::new();
-    for b in &out.requests {
+    for b in requests {
         let t = tenants.entry(b.tenant).or_insert_with(|| TenantBreakdown {
             tenant: b.tenant,
             ..TenantBreakdown::default()
@@ -251,8 +293,17 @@ pub fn analyze_chrome_trace(text: &str) -> Result<InspectReport> {
         t.network_s += b.network_s;
         t.stall_s += b.stall_s;
     }
-    out.tenants = tenants.into_values().collect();
-    Ok(out)
+    tenants.into_values().collect()
+}
+
+/// Restrict a report to requests missing `policy` on trace-derived
+/// TTFT/TBT (the `--slo-miss-only` inspect filter); per-tenant totals
+/// are recomputed over the surviving set, `partial` is carried over.
+pub fn slo_miss_only(rep: &InspectReport, policy: &crate::config::SloPolicy) -> InspectReport {
+    let requests: Vec<RequestBreakdown> =
+        rep.requests.iter().filter(|b| b.slo_miss(policy)).cloned().collect();
+    let tenants = tenant_totals(&requests);
+    InspectReport { requests, tenants, partial: rep.partial }
 }
 
 /// Attribute one request, or `None` if its event set is incomplete.
@@ -261,6 +312,7 @@ fn breakdown_for(
     r: &ReqState,
     cloud: &BTreeMap<(u64, u32), CloudRound>,
     swaps: &BTreeMap<u32, Vec<(f64, f64)>>,
+    commits: Option<&[(f64, f64)]>,
 ) -> Option<RequestBreakdown> {
     let (tb, te) = (r.tb?, r.te?);
     let n_rounds = r.round_b.len();
@@ -281,7 +333,19 @@ fn breakdown_for(
         engine_s: 0.0,
         network_s: 0.0,
         stall_s: 0.0,
+        ttft_s: None,
+        tbt_s: None,
     };
+    if let Some(cs) = commits {
+        // commit instants are scanned in export order ⇒ ascending ts
+        let (t_first, _) = cs[0];
+        let (t_last, _) = cs[cs.len() - 1];
+        let tokens: f64 = cs.iter().map(|&(_, n)| n).sum();
+        b.ttft_s = Some(t_first - tb);
+        if tokens >= 2.0 {
+            b.tbt_s = Some((t_last - t_first) / (tokens - 1.0));
+        }
+    }
     let mut rtt_total = 0.0;
     for k in 0..n_rounds {
         let (rb, re) = (r.round_b[k], r.round_e[k]);
@@ -359,12 +423,51 @@ pub fn table_string(rep: &InspectReport) -> String {
     out
 }
 
+/// Aggregate per-component attribution across all reconstructed
+/// requests (the `--summary` inspect view): p50/p95/p99 of each
+/// component's per-request seconds, plus its share of total latency.
+/// Deterministic for same-seed traces like every other export.
+pub fn summary_table_string(rep: &InspectReport) -> String {
+    use crate::metrics::stats::Summary;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<9} {:>10} {:>10} {:>10} {:>10} {:>8}\n",
+        "component", "p50", "p95", "p99", "mean", "share",
+    ));
+    let total_latency: f64 = rep.requests.iter().map(|b| b.latency_s).sum();
+    let rows: [(&str, fn(&RequestBreakdown) -> f64); 7] = [
+        ("latency", |b| b.latency_s),
+        ("device", |b| b.device_s),
+        ("queue", |b| b.queue_s),
+        ("paging", |b| b.paging_s),
+        ("engine", |b| b.engine_s),
+        ("network", |b| b.network_s),
+        ("stall", |b| b.stall_s),
+    ];
+    for (name, get) in rows {
+        let vals: Vec<f64> = rep.requests.iter().map(get).collect();
+        let s = Summary::of(&vals);
+        let share =
+            if total_latency > 0.0 { 100.0 * vals.iter().sum::<f64>() / total_latency } else { 0.0 };
+        out.push_str(&format!(
+            "{:<9} {:>9.4}s {:>9.4}s {:>9.4}s {:>9.4}s {:>7.1}%\n",
+            name, s.p50, s.p95, s.p99, s.mean, share,
+        ));
+    }
+    out.push_str(&format!("({} requests", rep.requests.len()));
+    if rep.partial > 0 {
+        out.push_str(&format!(", {} partial excluded", rep.partial));
+    }
+    out.push_str(")\n");
+    out
+}
+
 /// One JSON object per complete request (keys in lexicographic order,
 /// so same-seed traces inspect to byte-identical JSONL).
 pub fn requests_jsonl_string(rep: &InspectReport) -> String {
     let mut out = String::new();
     for b in &rep.requests {
-        let line = Json::obj(vec![
+        let mut line = vec![
             ("request_id", Json::num(b.request_id as f64)),
             ("tenant", Json::num(b.tenant as f64)),
             ("device", Json::num(b.device)),
@@ -377,8 +480,14 @@ pub fn requests_jsonl_string(rep: &InspectReport) -> String {
             ("engine_s", Json::num(b.engine_s)),
             ("network_s", Json::num(b.network_s)),
             ("stall_s", Json::num(b.stall_s)),
-        ]);
-        out.push_str(&line.to_string());
+        ];
+        if let Some(ttft) = b.ttft_s {
+            line.push(("ttft_s", Json::num(ttft)));
+        }
+        if let Some(tbt) = b.tbt_s {
+            line.push(("tbt_s", Json::num(tbt)));
+        }
+        out.push_str(&Json::obj(line).to_string());
         out.push('\n');
     }
     out
@@ -503,5 +612,40 @@ mod tests {
     fn rejects_non_trace_input() {
         assert!(analyze_chrome_trace("not json").is_err());
         assert!(analyze_chrome_trace("{\"foo\": 1}").is_err());
+    }
+
+    #[test]
+    fn trace_derived_ttft_feeds_the_slo_filter() {
+        let rep = analyze_chrome_trace(&chrome_trace_string(&craft())).unwrap();
+        let b = &rep.requests[0];
+        // the only commit is the 3-token device_commit at t = 1.5
+        assert_eq!(b.ttft_s, Some(1.5));
+        assert_eq!(b.tbt_s, Some(0.0), "all 3 tokens in one instant");
+        let strict =
+            crate::config::SloPolicy { ttft_s: 1.0, tbt_s: 0.1, violation_budget: 0.1 };
+        assert!(b.slo_miss(&strict));
+        let miss = slo_miss_only(&rep, &strict);
+        assert_eq!(miss.requests.len(), 1);
+        assert_eq!(miss.tenants.len(), 1);
+        let lax = crate::config::SloPolicy { ttft_s: 2.0, tbt_s: 0.1, violation_budget: 0.1 };
+        let none = slo_miss_only(&rep, &lax);
+        assert_eq!(none.requests.len(), 0, "TTFT 1.5 ≤ 2.0 and TBT 0.0 ≤ 0.1");
+        assert!(none.tenants.is_empty());
+        // the optional fields ride into the JSONL
+        let jsonl = requests_jsonl_string(&rep);
+        assert!(jsonl.contains("\"ttft_s\"") && jsonl.contains("\"tbt_s\""), "got: {jsonl}");
+    }
+
+    #[test]
+    fn summary_table_covers_every_component() {
+        let rep = analyze_chrome_trace(&chrome_trace_string(&craft())).unwrap();
+        let t = summary_table_string(&rep);
+        assert_eq!(t, summary_table_string(&rep), "deterministic");
+        for name in ["latency", "device", "queue", "paging", "engine", "network", "stall"] {
+            assert!(t.lines().any(|l| l.starts_with(name)), "row {name} in:\n{t}");
+        }
+        // header + 7 component rows + request-count footer
+        assert_eq!(t.lines().count(), 9, "table:\n{t}");
+        assert!(t.contains("(1 requests)"));
     }
 }

@@ -95,13 +95,23 @@ fn event_json(e: &TraceEvent) -> Json {
 }
 
 /// The whole sink as one Chrome trace-event JSON document (see the
-/// module docs for the schema).
+/// module docs for the schema). With a sampler attached the stream is
+/// the merged retained + in-flight view ([`TraceSink::snapshot_events`]),
+/// in record order, so all-retain mode is byte-identical to an
+/// unsampled sink.
 pub fn chrome_trace_string(sink: &TraceSink) -> String {
+    chrome_trace_string_from(&sink.snapshot_events(), sink.dropped())
+}
+
+/// Serialize an explicit event slice (record order) as a Chrome trace
+/// document — the flight recorder uses this to dump a sampler snapshot
+/// without a sink.
+pub fn chrome_trace_string_from(events_in: &[TraceEvent], dropped: u64) -> String {
     let mut tracks: BTreeSet<(u32, u32)> = BTreeSet::new();
-    for e in sink.events() {
+    for e in events_in {
         tracks.insert((e.pid, e.tid));
     }
-    let mut events: Vec<Json> = Vec::with_capacity(sink.len() + 2 * tracks.len());
+    let mut events: Vec<Json> = Vec::with_capacity(events_in.len() + 2 * tracks.len());
     let mut pids: BTreeSet<u32> = BTreeSet::new();
     for &(pid, tid) in &tracks {
         if pids.insert(pid) {
@@ -109,10 +119,10 @@ pub fn chrome_trace_string(sink: &TraceSink) -> String {
         }
         events.push(metadata_event("thread_name", pid, tid, thread_name(pid, tid)));
     }
-    for e in sink.events() {
+    for e in events_in {
         events.push(event_json(e));
     }
-    for e in drop_marker_events(sink) {
+    for e in drop_marker_events(events_in, dropped) {
         events.push(e);
     }
     Json::obj(vec![
@@ -127,12 +137,11 @@ pub fn chrome_trace_string(sink: &TraceSink) -> String {
 /// sample plus an instant so both Perfetto and offline consumers see
 /// the loss. Empty when nothing was dropped, keeping intact exports
 /// byte-identical to earlier schema versions.
-fn drop_marker_events(sink: &TraceSink) -> Vec<Json> {
-    let dropped = sink.dropped();
+fn drop_marker_events(events: &[TraceEvent], dropped: u64) -> Vec<Json> {
     if dropped == 0 {
         return Vec::new();
     }
-    let ts = sink.events().last().map(|e| e.ts_s).unwrap_or(0.0) * 1e6;
+    let ts = events.last().map(|e| e.ts_s).unwrap_or(0.0) * 1e6;
     let base = |ph: &'static str| {
         vec![
             ("ph", Json::str(ph)),
@@ -153,8 +162,14 @@ fn drop_marker_events(sink: &TraceSink) -> Vec<Json> {
 
 /// One JSON object per line per event, timestamps in seconds.
 pub fn events_jsonl_string(sink: &TraceSink) -> String {
+    events_jsonl_string_from(&sink.snapshot_events(), sink.dropped())
+}
+
+/// JSONL over an explicit event slice (record order); see
+/// [`events_jsonl_string`].
+pub fn events_jsonl_string_from(events: &[TraceEvent], dropped: u64) -> String {
     let mut out = String::new();
-    for e in sink.events() {
+    for e in events {
         let mut fields = vec![
             ("ts_s", Json::num(e.ts_s)),
             ("ph", Json::str(e.ph.code())),
@@ -174,10 +189,10 @@ pub fn events_jsonl_string(sink: &TraceSink) -> String {
         out.push_str(&Json::obj(fields).to_string());
         out.push('\n');
     }
-    if sink.dropped() > 0 {
+    if dropped > 0 {
         let line = Json::obj(vec![
             ("name", Json::str("trace.dropped")),
-            ("value", Json::num(sink.dropped() as f64)),
+            ("value", Json::num(dropped as f64)),
         ]);
         out.push_str(&line.to_string());
         out.push('\n');

@@ -12,6 +12,12 @@
 //!   (seconds since run start). Instrumented structs hold an
 //!   `Option<`[`trace::TraceShared`]`>` — disabled tracing is one
 //!   branch per site.
+//! * [`sampler`] — tail-based trace retention for fleet scale: each
+//!   request's events stage in a per-request buffer; at completion the
+//!   full set is retained only for a deterministic seeded 1-in-N head
+//!   sample, every tail-interesting request (SLO miss, partial/error
+//!   outcome, forced mark), or the top-k slowest; the boring bulk is
+//!   discarded so memory is O(retained + in-flight), not O(total).
 //! * [`registry`] — named counters/gauges/histograms sampled on a
 //!   caller-driven cadence ([`registry::Registry::due`] /
 //!   [`registry::Registry::snapshot`]); the standard cloud gauges are
@@ -74,6 +80,7 @@
 pub mod analyze;
 pub mod export;
 pub mod registry;
+pub mod sampler;
 pub mod trace;
 
 use std::sync::atomic::{AtomicU8, Ordering};

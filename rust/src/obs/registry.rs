@@ -144,6 +144,13 @@ impl Registry {
         self.gauges.insert(name.to_string(), value);
     }
 
+    /// Retire a gauge so subsequent snapshots stop sampling it (used
+    /// by [`SloMonitor::sample`] to keep idle-tenant windows out of
+    /// the series instead of republishing stale or 0/0 values).
+    pub fn gauge_remove(&mut self, name: &str) {
+        self.gauges.remove(name);
+    }
+
     pub fn hist_record(&mut self, name: &str, value: f64) {
         self.hists.entry(name.to_string()).or_default().record(value);
     }
@@ -313,29 +320,52 @@ impl SloMonitor {
     /// `slo.tbt_burn.<t>`) and reset the burn window. Call on the
     /// same cadence as [`Registry::snapshot`] so the burn window is
     /// the sampling window.
-    pub fn sample(&mut self, reg: &mut Registry) {
+    ///
+    /// A metric with **zero completions in the window** publishes no
+    /// burn gauge for that window (the gauge is retired so the
+    /// snapshot skips it — a 0/0 window must not put NaN or a stale
+    /// rate into the series); attainment likewise stays unpublished
+    /// until the tenant's first completion. Returns the per-tenant
+    /// burn for the window — `max(ttft_burn, tbt_burn)`, `None` for a
+    /// fully idle tenant — which the fleet driver feeds to the
+    /// flight-recorder trigger.
+    pub fn sample(&mut self, reg: &mut Registry) -> Vec<Option<f64>> {
+        let mut burns = Vec::with_capacity(self.tenants.len());
         for (t, a) in self.tenants.iter_mut().enumerate() {
-            reg.gauge_set(
-                &format!("slo.ttft_attainment.{t}"),
-                a.ttft_ok as f64 / a.ttft_n.max(1) as f64,
-            );
-            reg.gauge_set(
-                &format!("slo.tbt_attainment.{t}"),
-                a.tbt_ok as f64 / a.tbt_n.max(1) as f64,
-            );
-            reg.gauge_set(
-                &format!("slo.ttft_burn.{t}"),
-                Self::burn(&self.policy, a.win_ttft_viol, a.win_ttft_n),
-            );
-            reg.gauge_set(
-                &format!("slo.tbt_burn.{t}"),
-                Self::burn(&self.policy, a.win_tbt_viol, a.win_tbt_n),
-            );
+            if a.ttft_n > 0 {
+                reg.gauge_set(
+                    &format!("slo.ttft_attainment.{t}"),
+                    a.ttft_ok as f64 / a.ttft_n as f64,
+                );
+            }
+            if a.tbt_n > 0 {
+                reg.gauge_set(
+                    &format!("slo.tbt_attainment.{t}"),
+                    a.tbt_ok as f64 / a.tbt_n as f64,
+                );
+            }
+            let mut burn_now: Option<f64> = None;
+            if a.win_ttft_n > 0 {
+                let b = Self::burn(&self.policy, a.win_ttft_viol, a.win_ttft_n);
+                reg.gauge_set(&format!("slo.ttft_burn.{t}"), b);
+                burn_now = Some(b);
+            } else {
+                reg.gauge_remove(&format!("slo.ttft_burn.{t}"));
+            }
+            if a.win_tbt_n > 0 {
+                let b = Self::burn(&self.policy, a.win_tbt_viol, a.win_tbt_n);
+                reg.gauge_set(&format!("slo.tbt_burn.{t}"), b);
+                burn_now = Some(burn_now.map_or(b, |x| x.max(b)));
+            } else {
+                reg.gauge_remove(&format!("slo.tbt_burn.{t}"));
+            }
+            burns.push(burn_now);
             a.win_ttft_n = 0;
             a.win_ttft_viol = 0;
             a.win_tbt_n = 0;
             a.win_tbt_viol = 0;
         }
+        burns
     }
 }
 
@@ -468,10 +498,12 @@ mod tests {
             m.record_ttft(0, 0.5);
         }
         m.record_ttft(0, 2.0);
-        m.sample(&mut reg);
+        let burns = m.sample(&mut reg);
         assert_eq!(reg.gauge("slo.ttft_attainment.0"), Some(0.75));
         assert_eq!(reg.gauge("slo.ttft_burn.0"), Some(1.0));
-        assert_eq!(reg.gauge("slo.ttft_burn.1"), Some(0.0), "idle tenant burns nothing");
+        assert_eq!(reg.gauge("slo.ttft_burn.1"), None, "idle tenant emits no burn sample");
+        assert_eq!(reg.gauge("slo.ttft_attainment.1"), None, "…nor attainment");
+        assert_eq!(burns, vec![Some(1.0), None]);
         // window 2: all violations → burn 1/0.25 = 4; cumulative
         // attainment decays but is not reset
         m.record_ttft(0, 3.0);
@@ -482,11 +514,15 @@ mod tests {
         // TBT path is independent
         m.record_tbt(1, 0.05);
         m.record_tbt(1, 0.5);
-        m.sample(&mut reg);
+        let burns = m.sample(&mut reg);
         assert_eq!(reg.gauge("slo.tbt_attainment.1"), Some(0.5));
         assert_eq!(reg.gauge("slo.tbt_burn.1"), Some(2.0));
-        // empty window after sampling → burn falls back to 0
-        m.sample(&mut reg);
-        assert_eq!(reg.gauge("slo.tbt_burn.1"), Some(0.0));
+        assert_eq!(burns[1], Some(2.0));
+        // empty window after sampling → the burn gauge is retired (no
+        // 0/0 sample), while cumulative attainment keeps publishing
+        let burns = m.sample(&mut reg);
+        assert_eq!(reg.gauge("slo.tbt_burn.1"), None);
+        assert_eq!(reg.gauge("slo.tbt_attainment.1"), Some(0.5));
+        assert_eq!(burns, vec![None, None]);
     }
 }

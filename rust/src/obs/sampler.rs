@@ -1,0 +1,413 @@
+//! Tail-based trace sampling: keep every *interesting* request's full
+//! event set, a deterministic head sample of the rest, and nothing
+//! else.
+//!
+//! At fleet scale the [`super::trace::TraceSink`] ring is the wrong
+//! retention policy: a 65536-device run emits orders of magnitude more
+//! events than any bounded buffer holds, and oldest-drop discards
+//! exactly the early/overload events the critical-path analyzer and
+//! SLO gauges need. The [`Sampler`] replaces *time-based* retention
+//! with *outcome-based* retention:
+//!
+//! 1. every request-classified event is **staged** in a per-request
+//!    buffer while the request is in flight;
+//! 2. at [`Sampler::complete`] the staged set is either retained or
+//!    discarded wholesale:
+//!    * **head sample** — a deterministic seeded 1-in-N draw
+//!      (`splitmix64(seed ^ request_id)`), giving an unbiased
+//!      population baseline independent of arrival order;
+//!    * **tail sample** — every request flagged interesting by the
+//!      caller (SLO miss, error/partial outcome) or marked mid-flight
+//!      via [`Sampler::mark_interesting`] (e.g. the scheduler's
+//!      overflow-rejected verifies) is always retained;
+//!    * **top-k slowest** — a bounded min-heap keyed
+//!      `(latency, request_id)` keeps the k slowest requests seen so
+//!      far; requests evicted from the heap lose their events unless
+//!      head- or tail-retained.
+//! 3. everything else is dropped on the spot, so retained memory is
+//!    `O(retained + in-flight staging)` instead of `O(total events)`.
+//!
+//! Events that never name a request (phase slices, counters, `arrive`
+//! instants) stay in the sink's ring buffer; the export path merges
+//! ring + retained + still-staged events back into one stream ordered
+//! by record sequence. **All-retain mode** (`head_every = 1`) therefore
+//! reproduces the unsampled export byte for byte, and the sampler
+//! never perturbs the simulation (pure observer, same determinism
+//! contract as the sink).
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
+
+use crate::net::wire::TraceContext;
+use crate::obs::trace::TraceEvent;
+use crate::util::rng::splitmix64;
+
+/// Retention policy of a [`Sampler`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SamplerConfig {
+    /// Head sample: retain 1 in `head_every` completed requests
+    /// (deterministic per-request draw). `0` disables head retention,
+    /// `1` retains everything (all-retain mode).
+    pub head_every: u64,
+    /// Keep the `tail_k` slowest requests seen so far (0 disables).
+    pub tail_k: usize,
+    /// Seed of the head draw — same seed ⇒ same retained population.
+    pub seed: u64,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig { head_every: 64, tail_k: 32, seed: 0 }
+    }
+}
+
+/// Point-in-time sampler accounting, exported as `obs.sampler_*`
+/// gauges and asserted by the CI retained-budget smoke.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SamplerStats {
+    /// Requests completed through the sampler.
+    pub completed: u64,
+    /// Completions retained by the head draw.
+    pub head_retained: u64,
+    /// Completions retained as tail-interesting (SLO miss / error /
+    /// marked). Always equals the number of interesting completions —
+    /// tail retention is unconditional.
+    pub tail_retained: u64,
+    /// Requests currently retained (all reasons, after top-k churn).
+    pub retained_requests: u64,
+    /// Events currently held for retained requests.
+    pub retained_events: u64,
+    /// In-flight requests currently staged.
+    pub staged_requests: u64,
+    /// Events currently staged for in-flight requests.
+    pub staged_events: u64,
+    /// High-water mark of `staged_events` over the run.
+    pub peak_staged_events: u64,
+    /// Completions discarded outright (plus top-k evictions).
+    pub discarded_requests: u64,
+    /// Events dropped with them.
+    pub discarded_events: u64,
+}
+
+/// One retained request's events plus why they were kept.
+#[derive(Debug)]
+struct Retained {
+    events: Vec<TraceEvent>,
+    head: bool,
+    tail: bool,
+    topk: bool,
+}
+
+/// Outcome-based trace retention (see the module docs). Owned by a
+/// [`super::trace::TraceSink`]; not used standalone.
+#[derive(Debug, Default)]
+pub struct Sampler {
+    cfg: SamplerConfig,
+    staging: BTreeMap<u64, Vec<TraceEvent>>,
+    retained: BTreeMap<u64, Retained>,
+    /// Min-heap over `(latency bits, request id)` — the k slowest
+    /// survive; `f64::to_bits` is order-preserving for non-negatives.
+    topk: BinaryHeap<Reverse<(u64, u64)>>,
+    /// Requests flagged interesting before completion.
+    marked: BTreeSet<u64>,
+    /// Every id that ever completed, so late events (e.g. a session's
+    /// final `swap_out` on the tick after release) follow their
+    /// request's fate instead of re-opening a staging entry.
+    completed_ids: BTreeSet<u64>,
+    stats: SamplerStats,
+}
+
+impl Sampler {
+    pub fn new(cfg: SamplerConfig) -> Sampler {
+        Sampler { cfg, ..Sampler::default() }
+    }
+
+    pub fn config(&self) -> SamplerConfig {
+        self.cfg
+    }
+
+    pub fn stats(&self) -> SamplerStats {
+        self.stats
+    }
+
+    /// The request id an event belongs to, or `None` for background
+    /// events (phase slices, counters, id-0 instants) that stay in the
+    /// sink's ring. Flow arrows carry synthetic ids in their own
+    /// namespace and are decoded back to the originating request.
+    pub fn request_of(e: &TraceEvent) -> Option<u64> {
+        if e.ph.is_flow() {
+            TraceContext::request_of_flow(e.id)
+        } else if e.id != 0 {
+            Some(e.id)
+        } else {
+            None
+        }
+    }
+
+    /// Would the deterministic head draw retain `request_id`? Pure —
+    /// callers can predict the retained population without running.
+    pub fn head_retains(cfg: &SamplerConfig, request_id: u64) -> bool {
+        cfg.head_every == 1
+            || (cfg.head_every > 1 && splitmix64(cfg.seed ^ request_id).1 % cfg.head_every == 0)
+    }
+
+    /// Stage a request-classified event (the sink routes here from its
+    /// record path). Late events of an already-completed request follow
+    /// that request's retain/discard decision.
+    pub fn stage(&mut self, request_id: u64, e: TraceEvent) {
+        if let Some(r) = self.retained.get_mut(&request_id) {
+            r.events.push(e);
+            self.stats.retained_events += 1;
+            return;
+        }
+        if self.completed_ids.contains(&request_id) {
+            self.stats.discarded_events += 1;
+            return;
+        }
+        self.staging.entry(request_id).or_default().push(e);
+        self.stats.staged_events += 1;
+        self.stats.staged_requests = self.staging.len() as u64;
+        self.stats.peak_staged_events = self.stats.peak_staged_events.max(self.stats.staged_events);
+    }
+
+    /// Flag an in-flight request as tail-interesting regardless of how
+    /// it later completes (e.g. a verify rejected for exceeding the
+    /// engine context window).
+    pub fn mark_interesting(&mut self, request_id: u64) {
+        if !self.completed_ids.contains(&request_id) {
+            self.marked.insert(request_id);
+        }
+    }
+
+    /// Settle a request: retain its staged events (head draw, tail
+    /// interest, or top-k latency) or discard them. `latency_s` keys
+    /// the top-k heap; `interesting` is the caller's tail verdict (SLO
+    /// miss or error/partial outcome).
+    pub fn complete(&mut self, request_id: u64, latency_s: f64, interesting: bool) {
+        let events = self.staging.remove(&request_id).unwrap_or_default();
+        self.stats.staged_events -= events.len() as u64;
+        self.stats.staged_requests = self.staging.len() as u64;
+        self.stats.completed += 1;
+        self.completed_ids.insert(request_id);
+
+        let head = Self::head_retains(&self.cfg, request_id);
+        let tail = interesting || self.marked.remove(&request_id);
+        let mut topk = false;
+        if self.cfg.tail_k > 0 {
+            let key = (latency_s.max(0.0).to_bits(), request_id);
+            if self.topk.len() < self.cfg.tail_k {
+                self.topk.push(Reverse(key));
+                topk = true;
+            } else if self.topk.peek().is_some_and(|&Reverse(min)| key > min) {
+                let Reverse((_, evicted)) = self.topk.pop().expect("non-empty heap");
+                self.drop_topk_claim(evicted);
+                self.topk.push(Reverse(key));
+                topk = true;
+            }
+        }
+        if head {
+            self.stats.head_retained += 1;
+        }
+        if tail {
+            self.stats.tail_retained += 1;
+        }
+        if head || tail || topk {
+            self.stats.retained_events += events.len() as u64;
+            self.stats.retained_requests += 1;
+            self.retained.insert(request_id, Retained { events, head, tail, topk });
+        } else {
+            self.stats.discarded_requests += 1;
+            self.stats.discarded_events += events.len() as u64;
+        }
+    }
+
+    /// A request fell out of the top-k heap: drop its events unless it
+    /// is also head- or tail-retained.
+    fn drop_topk_claim(&mut self, request_id: u64) {
+        if let Some(r) = self.retained.get_mut(&request_id) {
+            r.topk = false;
+            if !r.head && !r.tail {
+                let r = self.retained.remove(&request_id).expect("just fetched");
+                self.stats.retained_events -= r.events.len() as u64;
+                self.stats.retained_requests -= 1;
+                self.stats.discarded_requests += 1;
+                self.stats.discarded_events += r.events.len() as u64;
+            }
+        }
+    }
+
+    /// Is `request_id` currently retained (any reason)?
+    pub fn is_retained(&self, request_id: u64) -> bool {
+        self.retained.contains_key(&request_id)
+    }
+
+    /// Currently retained request ids with their reasons as
+    /// `(id, head, tail, topk)`, in id order.
+    pub fn retained_requests(&self) -> impl Iterator<Item = (u64, bool, bool, bool)> + '_ {
+        self.retained.iter().map(|(&id, r)| (id, r.head, r.tail, r.topk))
+    }
+
+    /// Events currently held: retained requests' sets plus still-staged
+    /// (in-flight — retained as partial at export time) ones. Unsorted
+    /// across requests; the sink merges and seq-orders them with the
+    /// ring.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.retained
+            .values()
+            .flat_map(|r| r.events.iter())
+            .chain(self.staging.values().flatten())
+    }
+
+    /// Total events currently held (retained + staged).
+    pub fn len(&self) -> usize {
+        (self.stats.retained_events + self.stats.staged_events) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::Ph;
+
+    fn ev(id: u64, seq: u64) -> TraceEvent {
+        TraceEvent {
+            ts_s: seq as f64,
+            dur_s: 0.0,
+            ph: Ph::Instant,
+            name: "e",
+            cat: "event",
+            pid: 2,
+            tid: 0,
+            id,
+            args: Vec::new(),
+            seq,
+        }
+    }
+
+    fn stage_n(s: &mut Sampler, id: u64, n: u64) {
+        for i in 0..n {
+            s.stage(id, ev(id, id * 100 + i));
+        }
+    }
+
+    #[test]
+    fn classification_routes_flows_to_their_request() {
+        let mut e = ev(42, 0);
+        assert_eq!(Sampler::request_of(&e), Some(42));
+        e.ph = Ph::FlowStart;
+        e.id = TraceContext::flow_id(42, 3);
+        assert_eq!(Sampler::request_of(&e), Some(42));
+        e.ph = Ph::Instant;
+        e.id = 0;
+        assert_eq!(Sampler::request_of(&e), None, "id-0 instants are background");
+    }
+
+    #[test]
+    fn interesting_requests_are_always_retained() {
+        let mut s = Sampler::new(SamplerConfig { head_every: 0, tail_k: 0, seed: 1 });
+        for id in 1..=50u64 {
+            stage_n(&mut s, id, 3);
+            s.complete(id, 0.1, id % 10 == 0);
+        }
+        let st = s.stats();
+        assert_eq!(st.completed, 50);
+        assert_eq!(st.tail_retained, 5);
+        assert_eq!(st.retained_requests, 5);
+        assert_eq!(st.retained_events, 15);
+        assert_eq!(st.discarded_requests, 45);
+        assert_eq!(st.discarded_events, 135);
+        for id in [10u64, 20, 30, 40, 50] {
+            assert!(s.is_retained(id));
+        }
+        assert_eq!(st.staged_events, 0);
+        assert_eq!(st.peak_staged_events, 3, "one request in flight at a time");
+    }
+
+    #[test]
+    fn head_draw_is_deterministic_and_seeded() {
+        let cfg_a = SamplerConfig { head_every: 8, tail_k: 0, seed: 7 };
+        let cfg_b = SamplerConfig { head_every: 8, tail_k: 0, seed: 8 };
+        let pick = |cfg: &SamplerConfig| -> Vec<u64> {
+            (0..1000).filter(|&id| Sampler::head_retains(cfg, id)).collect()
+        };
+        assert_eq!(pick(&cfg_a), pick(&cfg_a), "same seed, same population");
+        assert_ne!(pick(&cfg_a), pick(&cfg_b), "different seed, different population");
+        let n = pick(&cfg_a).len();
+        assert!((60..=190).contains(&n), "~1-in-8 of 1000: {n}");
+        assert!((0..1000).all(|id| Sampler::head_retains(
+            &SamplerConfig { head_every: 1, tail_k: 0, seed: 0 },
+            id
+        )));
+    }
+
+    #[test]
+    fn topk_keeps_slowest_and_evicts_deterministically() {
+        let mut s = Sampler::new(SamplerConfig { head_every: 0, tail_k: 3, seed: 0 });
+        for id in 1..=10u64 {
+            stage_n(&mut s, id, 2);
+            s.complete(id, id as f64 * 0.01, false);
+        }
+        let kept: Vec<u64> = s.retained_requests().map(|(id, ..)| id).collect();
+        assert_eq!(kept, vec![8, 9, 10], "three slowest survive");
+        let st = s.stats();
+        assert_eq!(st.retained_events, 6);
+        assert_eq!(st.discarded_requests, 7);
+        // equal latencies tie-break on request id (larger id wins)
+        let mut t = Sampler::new(SamplerConfig { head_every: 0, tail_k: 1, seed: 0 });
+        for id in [5u64, 9, 7] {
+            t.complete(id, 0.25, false);
+        }
+        let kept: Vec<u64> = t.retained_requests().map(|(id, ..)| id).collect();
+        assert_eq!(kept, vec![9]);
+    }
+
+    #[test]
+    fn topk_eviction_spares_head_and_tail_claims() {
+        let mut s = Sampler::new(SamplerConfig { head_every: 0, tail_k: 1, seed: 0 });
+        stage_n(&mut s, 1, 2);
+        s.complete(1, 0.5, true); // tail + (briefly) top-k
+        stage_n(&mut s, 2, 2);
+        s.complete(2, 0.9, false); // evicts 1 from the heap
+        assert!(s.is_retained(1), "tail claim outlives top-k eviction");
+        assert!(s.is_retained(2));
+        let reasons: Vec<_> = s.retained_requests().collect();
+        assert_eq!(reasons, vec![(1, false, true, false), (2, false, false, true)]);
+    }
+
+    #[test]
+    fn mark_interesting_forces_retention() {
+        let mut s = Sampler::new(SamplerConfig { head_every: 0, tail_k: 0, seed: 0 });
+        stage_n(&mut s, 3, 4);
+        s.mark_interesting(3);
+        s.complete(3, 0.01, false);
+        assert!(s.is_retained(3));
+        assert_eq!(s.stats().tail_retained, 1);
+    }
+
+    #[test]
+    fn late_events_follow_their_requests_fate() {
+        let mut s = Sampler::new(SamplerConfig { head_every: 0, tail_k: 0, seed: 0 });
+        stage_n(&mut s, 1, 1);
+        s.complete(1, 0.1, true); // retained
+        stage_n(&mut s, 2, 1);
+        s.complete(2, 0.1, false); // discarded
+        s.stage(1, ev(1, 900)); // post-completion swap_out et al.
+        s.stage(2, ev(2, 901));
+        let st = s.stats();
+        assert_eq!(st.retained_events, 2, "late event joins the retained set");
+        assert_eq!(st.discarded_events, 2, "late event of a discarded request is dropped");
+        assert_eq!(st.staged_requests, 0, "no staging entry is re-opened");
+    }
+
+    #[test]
+    fn still_staged_requests_surface_in_events() {
+        let mut s = Sampler::new(SamplerConfig::default());
+        stage_n(&mut s, 9, 3);
+        assert_eq!(s.events().count(), 3, "in-flight events visible to export");
+        assert_eq!(s.len(), 3);
+    }
+}

@@ -39,6 +39,8 @@ use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::obs::sampler::{Sampler, SamplerConfig, SamplerStats};
+
 /// Timestamp source for a [`TraceSink`] (see the module docs for the
 /// virtual-vs-wall contract).
 pub trait Clock: Send {
@@ -170,18 +172,34 @@ pub struct TraceEvent {
     /// Request/session id (0 = none).
     pub id: u64,
     pub args: Vec<(&'static str, f64)>,
+    /// Global record sequence number, stamped by the sink. Orders the
+    /// merged export stream when a sampler splits events between the
+    /// ring and per-request buffers (ties in `ts_s` are common — many
+    /// events fire at one discrete-event time).
+    pub seq: u64,
 }
 
 /// Bounded ring buffer of trace events stamped by a [`Clock`]. On
 /// overflow the *oldest* event is dropped (and counted), so the tail
 /// of a run is always retained and drops are as deterministic as the
 /// event stream itself.
+///
+/// With a [`Sampler`] attached ([`TraceSink::with_sampler`]), events
+/// that name a request are staged per request instead of entering the
+/// ring; at [`TraceSink::complete_request`] the sampler retains or
+/// discards the request's whole set (head draw / tail interest /
+/// top-k latency — see [`crate::obs::sampler`]). Background events
+/// (phase slices, counters, id-0 instants) still ride the ring.
+/// [`TraceSink::snapshot_events`] merges both sides back into one
+/// seq-ordered stream for export.
 pub struct TraceSink {
     clock: Box<dyn Clock>,
     deterministic: bool,
     cap: usize,
     events: VecDeque<TraceEvent>,
     dropped: u64,
+    next_seq: u64,
+    sampler: Option<Sampler>,
 }
 
 impl std::fmt::Debug for TraceSink {
@@ -191,6 +209,7 @@ impl std::fmt::Debug for TraceSink {
             .field("cap", &self.cap)
             .field("events", &self.events.len())
             .field("dropped", &self.dropped)
+            .field("sampled", &self.sampler.is_some())
             .finish()
     }
 }
@@ -203,7 +222,27 @@ impl TraceSink {
             cap: cap.max(1),
             events: VecDeque::new(),
             dropped: 0,
+            next_seq: 0,
+            sampler: None,
         }
+    }
+
+    /// Attach outcome-based retention: request-classified events stage
+    /// per request and survive only per the sampler's policy
+    /// (builder-style, for sink construction).
+    pub fn with_sampler(mut self, cfg: SamplerConfig) -> TraceSink {
+        self.sampler = Some(Sampler::new(cfg));
+        self
+    }
+
+    /// The attached sampler, if any.
+    pub fn sampler(&self) -> Option<&Sampler> {
+        self.sampler.as_ref()
+    }
+
+    /// Sampler accounting, `None` when no sampler is attached.
+    pub fn sampler_stats(&self) -> Option<SamplerStats> {
+        self.sampler.as_ref().map(|s| s.stats())
     }
 
     /// Sink over a [`VirtualClock`] starting at 0 (simulators).
@@ -231,12 +270,38 @@ impl TraceSink {
         self.deterministic
     }
 
-    fn push(&mut self, e: TraceEvent) {
+    fn push(&mut self, mut e: TraceEvent) {
+        e.seq = self.next_seq;
+        self.next_seq += 1;
+        if let Some(sampler) = &mut self.sampler {
+            if let Some(req) = Sampler::request_of(&e) {
+                sampler.stage(req, e);
+                return;
+            }
+        }
         if self.events.len() == self.cap {
             self.events.pop_front();
             self.dropped += 1;
         }
         self.events.push_back(e);
+    }
+
+    /// Settle a finished request with the attached sampler (no-op
+    /// without one): `latency_s` keys the top-k-slowest heap,
+    /// `interesting` forces tail retention (SLO miss, error/partial
+    /// outcome).
+    pub fn complete_request(&mut self, request_id: u64, latency_s: f64, interesting: bool) {
+        if let Some(sampler) = &mut self.sampler {
+            sampler.complete(request_id, latency_s, interesting);
+        }
+    }
+
+    /// Flag an in-flight request as tail-interesting regardless of its
+    /// eventual completion verdict (no-op without a sampler).
+    pub fn mark_interesting(&mut self, request_id: u64) {
+        if let Some(sampler) = &mut self.sampler {
+            sampler.mark_interesting(request_id);
+        }
     }
 
     /// Open a span on track `(pid, tid)` for request/session `id`.
@@ -252,6 +317,7 @@ impl TraceSink {
             tid,
             id,
             args: Vec::new(),
+            seq: 0,
         });
     }
 
@@ -268,6 +334,7 @@ impl TraceSink {
             tid,
             id,
             args: Vec::new(),
+            seq: 0,
         });
     }
 
@@ -291,6 +358,7 @@ impl TraceSink {
             tid,
             id,
             args,
+            seq: 0,
         });
     }
 
@@ -317,6 +385,7 @@ impl TraceSink {
             tid,
             id: 0,
             args,
+            seq: 0,
         });
     }
 
@@ -339,6 +408,7 @@ impl TraceSink {
             tid,
             id,
             args: Vec::new(),
+            seq: 0,
         });
     }
 
@@ -355,33 +425,55 @@ impl TraceSink {
             tid,
             id: 0,
             args: vec![("value", value)],
+            seq: 0,
         });
     }
 
-    /// Recorded events, oldest first.
+    /// Ring-buffer events, oldest first. Without a sampler this is
+    /// every recorded event; with one it is only the background stream
+    /// — use [`TraceSink::snapshot_events`] for the merged view.
     pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
         self.events.iter()
     }
 
+    /// All currently held events — ring plus (with a sampler) retained
+    /// and still-staged request buffers — in record order. This is the
+    /// stream the exporters serialize; for an unsampled sink it equals
+    /// [`TraceSink::events`] exactly.
+    pub fn snapshot_events(&self) -> Vec<TraceEvent> {
+        let mut out: Vec<TraceEvent> = self.events.iter().cloned().collect();
+        if let Some(sampler) = &self.sampler {
+            out.extend(sampler.events().cloned());
+            out.sort_unstable_by_key(|e| e.seq);
+        }
+        out
+    }
+
+    /// Events currently held (ring + sampler buffers).
     pub fn len(&self) -> usize {
-        self.events.len()
+        self.events.len() + self.sampler.as_ref().map_or(0, |s| s.len())
     }
 
     pub fn is_empty(&self) -> bool {
-        self.events.is_empty()
+        self.len() == 0
     }
 
-    /// Events the ring buffer discarded (oldest-first overflow).
+    /// Events the ring buffer discarded (oldest-first overflow). Does
+    /// not count events a sampler discarded *by policy* — those are in
+    /// [`TraceSink::sampler_stats`].
     pub fn dropped(&self) -> u64 {
         self.dropped
     }
 
     /// Number of `(pid, tid, id, name)` span keys whose begin/end
     /// counts differ — 0 for a fully drained run with no ring drops
-    /// (the per-request balance gate in `tests/obs_trace.rs`).
+    /// (the per-request balance gate in `tests/obs_trace.rs`). With a
+    /// sampler attached, computed over the merged retained view, so
+    /// retained requests must carry complete span sets.
     pub fn span_imbalance(&self) -> usize {
         let mut bal: BTreeMap<(u32, u32, u64, &'static str), i64> = BTreeMap::new();
-        for e in &self.events {
+        let sampled = self.sampler.iter().flat_map(|s| s.events());
+        for e in self.events.iter().chain(sampled) {
             match e.ph {
                 Ph::Begin => *bal.entry((e.pid, e.tid, e.id, e.name)).or_insert(0) += 1,
                 Ph::End => *bal.entry((e.pid, e.tid, e.id, e.name)).or_insert(0) -= 1,

@@ -19,6 +19,7 @@
 //! tokens).
 
 use std::collections::VecDeque;
+use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -33,10 +34,11 @@ use crate::device::offload::{OffloadDecision, Selector};
 use crate::device::parallel::{alternative_token, predict_rejection};
 use crate::metrics::cost::{CostModel, PackingFactors};
 use crate::metrics::energy::EnergyModel;
-use crate::metrics::stats::{LatencyRecorder, Summary};
+use crate::metrics::stats::{QuantileSketch, Summary};
 use crate::model::cloud_engine::BatchEngine;
 use crate::net::link::{LinkProfile, SimLink};
 use crate::net::wire::{DownlinkMsg, TraceContext, UplinkMsg};
+use crate::obs::export;
 use crate::obs::registry::{self, RegistryShared, SloMonitor};
 use crate::obs::trace::{self, tenant_pid, Ph, TraceShared, PID_CLOUD};
 use crate::profiling::OffloadProfile;
@@ -91,7 +93,10 @@ pub struct FleetConfig {
     /// budget) shared by the report columns and the registry's
     /// [`SloMonitor`] burn-rate gauges.
     pub slo: SloPolicy,
-    /// Latency-sample reservoir per tenant recorder (0 = retain all).
+    /// Retired: per-tenant latency reservoirs were replaced by
+    /// [`QuantileSketch`]es (bounded memory with a *guaranteed*
+    /// relative-error bound, exact merge). The field is kept so older
+    /// configs keep compiling; it is no longer read.
     pub reservoir: usize,
     /// Fraction of arrivals whose prompt is prefixed with a shared
     /// preamble ([`crate::workload::synthlang::shared_preamble`]);
@@ -115,6 +120,18 @@ pub struct FleetConfig {
     /// Attached metrics registry, sampled on its own cadence in
     /// virtual time at replica tick boundaries; `None` = off.
     pub registry: Option<RegistryShared>,
+    /// Flight-recorder output directory: when a tenant's windowed SLO
+    /// burn rate ([`SloMonitor::sample`]) rises through
+    /// [`FleetConfig::flight_burn`], the trace sink's retained buffer
+    /// is dumped here as a Chrome-trace file
+    /// (`flight-t<tenant>-<virtual-ms>.json`). Needs both `trace` and
+    /// `registry` attached; `None` = off.
+    pub flight_dir: Option<PathBuf>,
+    /// Burn-rate threshold arming the flight recorder (1.0 = the
+    /// violation budget is burning exactly at the allowed rate). Each
+    /// tenant re-arms once its burn falls back below the threshold, so
+    /// one sustained brownout produces one dump, not one per cadence.
+    pub flight_burn: f64,
 }
 
 impl Default for FleetConfig {
@@ -143,6 +160,8 @@ impl Default for FleetConfig {
             cloud_model: "l13b".into(),
             trace: None,
             registry: None,
+            flight_dir: None,
+            flight_burn: 2.0,
         }
     }
 }
@@ -229,10 +248,9 @@ impl FleetReport {
         self.completed as f64 / self.offered as f64
     }
 
-    /// Requests-weighted mean TBT across tenants (cost model `T`).
-    /// Weighted by *completed requests*, not retained samples — a
-    /// reservoir recorder caps `tbt.n` at its capacity, which would
-    /// equalise tenants of very different sizes.
+    /// Requests-weighted mean TBT across tenants (cost model `T`),
+    /// weighted by *completed requests* (the sketch's `tbt.n` counts
+    /// only TBT-eligible ≥2-token requests).
     pub fn mean_tbt_s(&self) -> f64 {
         let (mut num, mut den) = (0.0, 0usize);
         for t in &self.tenants {
@@ -407,8 +425,8 @@ struct Dev {
 }
 
 struct TenantAcc {
-    ttft: LatencyRecorder,
-    tbt: LatencyRecorder,
+    ttft: QuantileSketch,
+    tbt: QuantileSketch,
     /// Device-side energy for this tenant's devices (drafting + radio).
     energy: EnergyModel,
     requests: usize,
@@ -430,6 +448,10 @@ struct FleetRun<'a, E: BatchEngine> {
     /// migration extends the windows of both replicas involved.
     cloud_busy_until: Vec<f64>,
     measured_compute: bool,
+    /// Per-tenant flight-recorder latch (see
+    /// [`FleetConfig::flight_burn`]).
+    flight_armed: Vec<bool>,
+    flight_dumps: u64,
     offered: usize,
     completed: usize,
     generated_tokens: u64,
@@ -712,16 +734,67 @@ impl<E: BatchEngine> FleetRun<'_, E> {
         }
         // cadence-gated metrics sample at the tick boundary, stamped
         // with virtual time
+        let mut burns: Option<Vec<Option<f64>>> = None;
         if let Some(reg) = &self.cfg.registry {
             if let Ok(mut r) = reg.lock() {
                 if r.due(t) {
                     registry::sample_router(&mut r, &self.router);
-                    self.slo.sample(&mut r);
+                    burns = Some(self.slo.sample(&mut r));
                     r.snapshot(t);
                 }
             }
         }
+        // the flight trigger reads the freshly-closed burn window
+        // (registry lock released first — the dump locks the trace)
+        if let Some(burns) = burns {
+            self.maybe_flight_dump(t, &burns);
+        }
         Ok(())
+    }
+
+    /// Rising-edge flight recorder: a tenant whose windowed burn rate
+    /// crosses `flight_burn` while armed dumps the trace sink's
+    /// retained buffer (full ring + sampler-retained + in-flight
+    /// staging) as a Chrome-trace file and disarms until its burn
+    /// falls back below the threshold. IO failure logs a warning and
+    /// never fails the simulation.
+    fn maybe_flight_dump(&mut self, t: f64, burns: &[Option<f64>]) {
+        let Some(dir) = &self.cfg.flight_dir else { return };
+        for (tenant, burn) in burns.iter().enumerate() {
+            match burn {
+                Some(b) if *b >= self.cfg.flight_burn => {
+                    if !self.flight_armed[tenant] {
+                        continue;
+                    }
+                    self.flight_armed[tenant] = false;
+                    let mut snap = None;
+                    trace::with(&self.cfg.trace, |s| {
+                        snap = Some((s.snapshot_events(), s.dropped()));
+                    });
+                    let Some((events, dropped)) = snap else { continue };
+                    let ms = (t * 1e3).round() as u64;
+                    let path = dir.join(format!("flight-t{tenant}-{ms}.json"));
+                    let doc = export::chrome_trace_string_from(&events, dropped);
+                    match std::fs::write(&path, doc) {
+                        Ok(()) => {
+                            self.flight_dumps += 1;
+                            crate::log!(
+                                Warn,
+                                "flight recorder: tenant {tenant} burn {b:.2} ≥ {:.2} at \
+                                 t={t:.3}s → {}",
+                                self.cfg.flight_burn,
+                                path.display()
+                            );
+                        }
+                        Err(e) => {
+                            crate::log!(Warn, "flight dump {} failed: {e}", path.display())
+                        }
+                    }
+                }
+                // below threshold (or idle window): re-arm
+                _ => self.flight_armed[tenant] = true,
+            }
+        }
     }
 
     fn on_reply(&mut self, t: f64, device: usize, accepted: usize, next_token: u32) {
@@ -818,6 +891,7 @@ impl<E: BatchEngine> FleetRun<'_, E> {
         let ttft = a.t_first.unwrap_or(t) - a.t_arrival;
         acc.ttft.record(ttft);
         self.slo.record_ttft(tenant, ttft);
+        let mut slo_miss = ttft > self.cfg.slo.ttft_s;
         // requests with <2 tokens have no inter-token gap: they carry
         // no TBT sample and sit outside the TBT-SLO denominator
         // (recording 0.0 would drag percentiles down and inflate SLO
@@ -827,8 +901,16 @@ impl<E: BatchEngine> FleetRun<'_, E> {
                 let tbt = (a.t_last - t0) / (n - 1) as f64;
                 self.acc[tenant].tbt.record(tbt);
                 self.slo.record_tbt(tenant, tbt);
+                slo_miss |= tbt > self.cfg.slo.tbt_s;
             }
         }
+        // settle the request with the sampler: an SLO-missing request
+        // is tail-interesting and keeps its full event set (the
+        // Release's swap_out can still land on a later tick — late
+        // events follow this verdict)
+        trace::with(&self.cfg.trace, |s| {
+            s.complete_request(a.req_id, t - a.t_arrival, slo_miss)
+        });
         self.start_next(t, device);
     }
 }
@@ -915,17 +997,9 @@ pub fn run_fleet_on<E: BatchEngine>(
             })
             .collect(),
         acc: (0..cfg.tenants)
-            .map(|t| TenantAcc {
-                ttft: if cfg.reservoir == 0 {
-                    LatencyRecorder::new()
-                } else {
-                    LatencyRecorder::with_reservoir(cfg.reservoir, cfg.seed ^ t as u64)
-                },
-                tbt: if cfg.reservoir == 0 {
-                    LatencyRecorder::new()
-                } else {
-                    LatencyRecorder::with_reservoir(cfg.reservoir, cfg.seed ^ 0x7B7 ^ t as u64)
-                },
+            .map(|_| TenantAcc {
+                ttft: QuantileSketch::default(),
+                tbt: QuantileSketch::default(),
                 energy: EnergyModel::new(
                     cfg.device_profile.joules_per_token,
                     cfg.device_profile.joules_per_byte,
@@ -938,6 +1012,8 @@ pub fn run_fleet_on<E: BatchEngine>(
         cloud_active: vec![false; replicas],
         cloud_busy_until: vec![0.0; replicas],
         measured_compute,
+        flight_armed: vec![true; cfg.tenants],
+        flight_dumps: 0,
         offered: 0,
         completed: 0,
         generated_tokens: 0,
@@ -1018,9 +1094,28 @@ pub fn run_fleet_on<E: BatchEngine>(
             run.slo.sample(&mut r);
             if let Some(tr) = &cfg.trace {
                 if let Ok(s) = tr.lock() {
-                    r.gauge_set("trace.dropped", s.dropped() as f64);
+                    r.gauge_set("obs.trace_dropped", s.dropped() as f64);
+                    if let Some(st) = s.sampler_stats() {
+                        r.gauge_set("obs.sampler_completed", st.completed as f64);
+                        r.gauge_set("obs.sampler_head_retained", st.head_retained as f64);
+                        r.gauge_set("obs.sampler_tail_retained", st.tail_retained as f64);
+                        r.gauge_set(
+                            "obs.sampler_retained_requests",
+                            st.retained_requests as f64,
+                        );
+                        r.gauge_set("obs.sampler_retained_events", st.retained_events as f64);
+                        r.gauge_set(
+                            "obs.sampler_peak_staged_events",
+                            st.peak_staged_events as f64,
+                        );
+                        r.gauge_set(
+                            "obs.sampler_discarded_events",
+                            st.discarded_events as f64,
+                        );
+                    }
                 }
             }
+            r.gauge_set("obs.flight_dumps", run.flight_dumps as f64);
             r.snapshot(virtual_s);
         }
     }

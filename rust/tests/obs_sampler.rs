@@ -1,0 +1,267 @@
+//! Fleet-scale observability gates: the quantile sketch answers
+//! percentiles within its documented α bound and merges exactly; the
+//! tail-based trace sampler retains every SLO-missing request, keeps
+//! retained memory far below the full event stream, and in all-retain
+//! mode reproduces the unsampled exports byte for byte.
+
+use synera::config::{BatchPolicy, SloPolicy, SyneraParams};
+use synera::metrics::stats::{QuantileSketch, Summary};
+use synera::obs::export::{chrome_trace_string, events_jsonl_string};
+use synera::obs::sampler::SamplerConfig;
+use synera::obs::trace::{self, TraceShared, TraceSink};
+use synera::sim::{run_fleet, FleetConfig, FleetReport};
+use synera::util::rng::Rng;
+
+const TRACE_CAP: usize = 1 << 20;
+
+// ---------------------------------------------------------------------------
+// quantile sketch: error bound + exact merge
+// ---------------------------------------------------------------------------
+
+/// Lognormal-shaped latencies (the TTFT regime): exp of an
+/// Irwin–Hall-approximated normal.
+fn lognormal_stream(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let u: f64 = (0..12).map(|_| rng.f64()).sum::<f64>() - 6.0; // ~N(0,1)
+            (0.6 * u - 1.6).exp() // median ~0.2 s, heavy right tail
+        })
+        .collect()
+}
+
+/// MMPP-shaped latencies: a fast mode with occasional slow-mode
+/// excursions (the burst regime the tail sampler exists for).
+fn mmpp_stream(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| if rng.chance(1, 8) { rng.exp(0.5) } else { rng.exp(20.0) })
+        .collect()
+}
+
+fn assert_within_alpha(sketch: &QuantileSketch, values: &[f64], what: &str) {
+    let exact = Summary::of(values);
+    let got = sketch.summary().unwrap();
+    let alpha = sketch.relative_error();
+    for (e, g, q) in [
+        (exact.p50, got.p50, "p50"),
+        (exact.p95, got.p95, "p95"),
+        (exact.p99, got.p99, "p99"),
+    ] {
+        let rel = (g - e).abs() / e;
+        assert!(rel <= alpha + 1e-12, "{what} {q}: exact {e} sketch {g} rel {rel} > α {alpha}");
+    }
+    // the moments are exact, not sketched
+    assert_eq!(got.n, exact.n, "{what}: n");
+    assert_eq!(got.min.to_bits(), exact.min.to_bits(), "{what}: min");
+    assert_eq!(got.max.to_bits(), exact.max.to_bits(), "{what}: max");
+    assert!((got.mean - exact.mean).abs() <= 1e-12 * exact.mean.abs(), "{what}: mean");
+}
+
+/// Every reported percentile is within the documented relative error
+/// of the exact order statistic, on both workload shapes.
+#[test]
+fn sketch_percentiles_stay_within_the_error_bound() {
+    for (name, values) in
+        [("lognormal", lognormal_stream(7, 4000)), ("mmpp", mmpp_stream(11, 4000))]
+    {
+        let mut sk = QuantileSketch::default();
+        for &v in &values {
+            sk.record(v);
+        }
+        assert_within_alpha(&sk, &values, name);
+        // the footprint is buckets, not samples
+        assert!(
+            sk.bucket_count() < 1500,
+            "{name}: {} buckets for {} samples",
+            sk.bucket_count(),
+            values.len()
+        );
+    }
+}
+
+/// Merging partial sketches is exact (bucket counts add) and
+/// associative, with deterministic serialization — the property the
+/// per-tenant fleet/serve aggregation relies on.
+#[test]
+fn sketch_merge_is_exact_associative_and_deterministic() {
+    let streams =
+        [lognormal_stream(1, 1500), mmpp_stream(2, 1100), lognormal_stream(3, 700)];
+    let parts: Vec<QuantileSketch> = streams
+        .iter()
+        .map(|s| {
+            let mut sk = QuantileSketch::default();
+            s.iter().for_each(|&v| sk.record(v));
+            sk
+        })
+        .collect();
+    let mut whole = QuantileSketch::default();
+    streams.iter().flatten().for_each(|&v| whole.record(v));
+
+    let mut left = parts[0].clone(); // (a ⊕ b) ⊕ c
+    left.merge(&parts[1]);
+    left.merge(&parts[2]);
+    let mut bc = parts[1].clone(); // a ⊕ (b ⊕ c)
+    bc.merge(&parts[2]);
+    let mut right = parts[0].clone();
+    right.merge(&bc);
+
+    let bytes = |s: &QuantileSketch| s.to_json().to_string();
+    assert_eq!(bytes(&left), bytes(&right), "merge is associative");
+    assert_eq!(bytes(&left), bytes(&whole), "merged == single-stream sketch");
+    let all: Vec<f64> = streams.iter().flatten().copied().collect();
+    assert_within_alpha(&left, &all, "merged");
+}
+
+// ---------------------------------------------------------------------------
+// trace sampler: fleet integration
+// ---------------------------------------------------------------------------
+
+/// The same small full-drain fleet `inspect_analyze` traces (24
+/// devices, 3 virtual s), so the bit-identity gate covers the exact
+/// export shape earlier PRs snapshotted.
+fn traced_cfg(trace: Option<TraceShared>, slo: SloPolicy) -> FleetConfig {
+    FleetConfig {
+        n_devices: 24,
+        duration_s: 3.0,
+        rate_rps: 12.0,
+        tenants: 3,
+        params: SyneraParams {
+            batch: BatchPolicy { max_sessions: 8, ..BatchPolicy::default() },
+            ..SyneraParams::default()
+        },
+        seed: 0x0B57,
+        slo,
+        trace,
+        ..FleetConfig::default()
+    }
+}
+
+fn run_sampled(cfg_sampler: Option<SamplerConfig>, slo: SloPolicy) -> (FleetReport, TraceShared) {
+    let sink = TraceSink::virtual_time(TRACE_CAP);
+    let sink = match cfg_sampler {
+        Some(c) => sink.with_sampler(c),
+        None => sink,
+    };
+    let tr = trace::shared(sink);
+    let rep = run_fleet(&traced_cfg(Some(tr.clone()), slo)).unwrap();
+    (rep, tr)
+}
+
+/// All-retain mode (`head_every = 1`) must reproduce the unsampled
+/// sink's exports byte for byte — the sampler only re-routes events
+/// through per-request staging, it never reorders or rewrites them.
+#[test]
+fn all_retain_mode_reproduces_the_unsampled_export() {
+    let slo = SloPolicy::default();
+    let (rep_plain, tr_plain) = run_sampled(None, slo);
+    let (rep_all, tr_all) =
+        run_sampled(Some(SamplerConfig { head_every: 1, tail_k: 0, seed: 0 }), slo);
+    assert!(rep_plain.completed > 0 && rep_plain.completed == rep_plain.offered);
+    assert_eq!(rep_plain.completed, rep_all.completed, "sampler is a pure observer");
+    assert_eq!(rep_plain.virtual_s.to_bits(), rep_all.virtual_s.to_bits());
+    let (a, b) = (tr_plain.lock().unwrap(), tr_all.lock().unwrap());
+    assert_eq!(a.len(), b.len(), "all-retain keeps every event");
+    assert_eq!(chrome_trace_string(&a), chrome_trace_string(&b), "chrome export bit-identical");
+    assert_eq!(events_jsonl_string(&a), events_jsonl_string(&b), "jsonl export bit-identical");
+}
+
+/// Same seed ⇒ byte-identical exports with sampling on: the head draw
+/// is seeded per request and the top-k heap is deterministic.
+#[test]
+fn sampled_export_is_seed_deterministic() {
+    let slo = SloPolicy::default();
+    let cfg = SamplerConfig { head_every: 16, tail_k: 4, seed: 9 };
+    let (_, tr_a) = run_sampled(Some(cfg), slo);
+    let (_, tr_b) = run_sampled(Some(cfg), slo);
+    let (a, b) = (tr_a.lock().unwrap(), tr_b.lock().unwrap());
+    assert!(!a.is_empty());
+    assert_eq!(chrome_trace_string(&a), chrome_trace_string(&b));
+    // a different sampler seed retains a different population
+    let (_, tr_c) =
+        run_sampled(Some(SamplerConfig { head_every: 16, tail_k: 4, seed: 10 }), slo);
+    let c = tr_c.lock().unwrap();
+    assert_ne!(chrome_trace_string(&a), chrome_trace_string(&c), "seed moves the head draw");
+}
+
+/// At fleet scale, with an SLO every request misses, tail-only
+/// retention keeps *every* completion — no miss is ever sampled away.
+#[test]
+fn every_slo_miss_is_retained_at_fleet_scale() {
+    let strict = SloPolicy { ttft_s: 1e-6, tbt_s: 1e-6, violation_budget: 0.1 };
+    let sink = TraceSink::virtual_time(TRACE_CAP)
+        .with_sampler(SamplerConfig { head_every: 0, tail_k: 0, seed: 0 });
+    let tr = trace::shared(sink);
+    let cfg = FleetConfig {
+        n_devices: 16384,
+        duration_s: 1.5,
+        rate_rps: 96.0,
+        tenants: 4,
+        params: SyneraParams {
+            batch: BatchPolicy { max_sessions: 8, ..BatchPolicy::default() },
+            ..SyneraParams::default()
+        },
+        seed: 0x5A11,
+        slo: strict,
+        trace: Some(tr.clone()),
+        ..FleetConfig::default()
+    };
+    let rep = run_fleet(&cfg).unwrap();
+    assert!(rep.completed > 50, "fleet produced work: {rep:?}");
+    assert_eq!(rep.completed, rep.offered, "full drain");
+    let sink = tr.lock().unwrap();
+    let st = sink.sampler_stats().unwrap();
+    assert_eq!(st.completed, rep.completed as u64);
+    assert_eq!(st.tail_retained, st.completed, "every SLO miss is tail-interesting");
+    assert_eq!(st.retained_requests, st.completed, "…and every one is retained");
+    assert_eq!(st.discarded_requests, 0);
+    assert_eq!(st.staged_events, 0, "drained run leaves nothing staged");
+    assert!(st.peak_staged_events > 0, "staging actually saw traffic");
+}
+
+/// Under head+top-k sampling with a lax SLO most requests are
+/// discarded wholesale: retained memory is a small fraction of the
+/// full stream and the top-k claim stays bounded.
+#[test]
+fn retained_memory_stays_bounded_under_saturation() {
+    let lax = SloPolicy { ttft_s: 1e9, tbt_s: 1e9, violation_budget: 0.1 };
+    let sink = TraceSink::virtual_time(TRACE_CAP)
+        .with_sampler(SamplerConfig { head_every: 64, tail_k: 8, seed: 3 });
+    let tr = trace::shared(sink);
+    let cfg = FleetConfig {
+        n_devices: 64,
+        duration_s: 2.0,
+        rate_rps: 120.0, // well beyond service capacity, then drains
+        tenants: 2,
+        params: SyneraParams {
+            batch: BatchPolicy { max_sessions: 8, ..BatchPolicy::default() },
+            ..SyneraParams::default()
+        },
+        seed: 0xB0B,
+        slo: lax,
+        trace: Some(tr.clone()),
+        ..FleetConfig::default()
+    };
+    let rep = run_fleet(&cfg).unwrap();
+    assert_eq!(rep.completed, rep.offered, "saturated run still drains");
+    let sink = tr.lock().unwrap();
+    let st = sink.sampler_stats().unwrap();
+    let total_request_events = st.retained_events + st.discarded_events;
+    assert!(st.completed > 100, "enough completions to sample: {st:?}");
+    assert!(
+        st.retained_events * 4 < total_request_events,
+        "retention is the minority: kept {} of {} request events",
+        st.retained_events,
+        total_request_events
+    );
+    assert!(
+        st.retained_requests <= st.head_retained + st.tail_retained + 8,
+        "top-k claim bounded by k: {st:?}"
+    );
+    assert!(st.head_retained > 0, "head draw fired");
+    assert_eq!(st.staged_requests, 0, "no in-flight staging after drain");
+    // exports still well-formed over the sampled stream
+    assert_eq!(sink.span_imbalance(), 0, "retained spans close");
+    let doc = synera::util::json::Json::parse(&chrome_trace_string(&sink)).unwrap();
+    assert!(!doc.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+}
